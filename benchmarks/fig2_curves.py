@@ -1,0 +1,19 @@
+"""Paper Figure 2: training-loss curves with/without TinyKG (INT2)."""
+
+from __future__ import annotations
+
+from .common import train_kgnn
+
+
+def run(*, steps=200, dim=32, models=("kgat", "kgcn", "kgin")) -> list[dict]:
+    rows = []
+    for model in models:
+        for bits in (None, 2):
+            r = train_kgnn(model, bits=bits, steps=steps, dim=dim)
+            for i, loss in enumerate(r["losses"]):
+                if i % 10 == 0:
+                    rows.append({"model": model, "bits": bits or "fp32",
+                                 "step": i, "loss": round(loss, 5)})
+            print(f"[fig2] {model} bits={bits or 'fp32'}: "
+                  f"final loss {r['final_loss']:.4f}", flush=True)
+    return rows

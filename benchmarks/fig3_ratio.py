@@ -1,0 +1,31 @@
+"""Paper Figure 3: sensitivity of INT2 TinyKG to the variance ratio d/B².
+
+Proposition 1 bounds the quantizer variance by d·R²/(4B²): at fixed B,
+accuracy degradation should scale gently with embedding dim d.
+"""
+
+from __future__ import annotations
+
+from .common import train_kgnn
+
+DIMS = (16, 32, 64, 96)
+
+
+def run(*, steps=150, models=("kgat",)) -> list[dict]:
+    rows = []
+    for model in models:
+        for d in DIMS:
+            fp32 = train_kgnn(model, bits=None, steps=steps, dim=d)
+            int2 = train_kgnn(model, bits=2, steps=steps, dim=d)
+            drop = 100 * (fp32["recall@20"] - int2["recall@20"]) / \
+                max(fp32["recall@20"], 1e-9)
+            rows.append({
+                "model": model, "dim": d, "ratio_d_B2": round(d / 9.0, 2),
+                "recall_fp32": round(fp32["recall@20"], 4),
+                "recall_int2": round(int2["recall@20"], 4),
+                "rel_drop_%": round(drop, 2),
+            })
+            print(f"[fig3] {model} d={d}: fp32={fp32['recall@20']:.4f} "
+                  f"int2={int2['recall@20']:.4f} drop={drop:.2f}%",
+                  flush=True)
+    return rows

@@ -1,0 +1,59 @@
+"""Kernel microbenchmarks: fused Pallas quant/dequant vs unfused jnp path.
+
+On this CPU container Pallas runs in interpret mode, so wall-times are NOT
+TPU-representative; the derived column reports the analytic HBM-traffic
+ratio of fused vs unfused (the quantity the fusion actually buys on TPU).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import dequantize as core_deq
+from repro.core.quant import quantize as core_q
+from repro.kernels import ops as kops
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(*, rows=4096, dim=256) -> list[dict]:
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (rows, dim))
+    out = []
+    for bits in (8, 4, 2, 1):
+        jnp_q = _time(lambda x_: core_q(x_, key, bits=bits), x)
+        pal_q = _time(lambda x_: kops.quantize(x_, key, bits=bits), x)
+        q = core_q(x, key, bits=bits)
+        jnp_d = _time(core_deq, q)
+        pal_d = _time(kops.dequantize, q)
+        g = jax.random.normal(key, (rows, 64))
+        pal_mm = _time(kops.dequant_matmul, q, g)
+        jnp_mm = _time(lambda q_, g_: core_deq(q_).T @ g_, q, g)
+        # analytic HBM traffic: unfused writes+reads the fp32 codes tensor
+        fp32_bytes = rows * dim * 4
+        packed = rows * dim * bits // 8 + rows * 8
+        fused_traffic = fp32_bytes + packed            # read x, write packed
+        unfused_traffic = fp32_bytes * 3 + packed      # + codes roundtrip
+        out.append({
+            "bits": bits,
+            "quant_jnp_us": round(jnp_q, 1),
+            "quant_pallas_interp_us": round(pal_q, 1),
+            "dequant_jnp_us": round(jnp_d, 1),
+            "dequant_pallas_interp_us": round(pal_d, 1),
+            "dqmm_jnp_us": round(jnp_mm, 1),
+            "dqmm_pallas_interp_us": round(pal_mm, 1),
+            "fused_traffic_ratio": round(unfused_traffic / fused_traffic, 2),
+        })
+        print(f"[kernel] bits={bits}: quant jnp {jnp_q:.0f}us | "
+              f"fused-traffic win {out[-1]['fused_traffic_ratio']}x",
+              flush=True)
+    return out

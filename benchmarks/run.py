@@ -1,0 +1,66 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+``python -m benchmarks.run [--quick] [--only tableX]``
+
+Prints one ``name,us_per_call,derived`` CSV block per artifact and writes
+full JSON to artifacts/bench/. ``us_per_call`` is the measured train-step
+time where applicable (CPU host), ``derived`` the table's headline number.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer steps (CI-speed)")
+    ap.add_argument("--only", default=None,
+                    help="table234|table5|table6|fig2|fig3|kernels")
+    ap.add_argument("--out", default="artifacts/bench")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    steps = 60 if args.quick else 200
+
+    from . import (fig2_curves, fig3_ratio, kernel_bench,
+                   table5_memory_speed, table6_rounding, table234_accuracy)
+
+    jobs = {
+        "table234": lambda: table234_accuracy.run(steps=steps),
+        "table5": lambda: table5_memory_speed.run(steps=max(steps // 3, 30)),
+        "table6": lambda: table6_rounding.run(steps=steps),
+        "fig2": lambda: fig2_curves.run(steps=steps),
+        "fig3": lambda: fig3_ratio.run(steps=max(steps * 3 // 4, 40)),
+        "kernels": lambda: kernel_bench.run(),
+    }
+    if args.only:
+        jobs = {args.only: jobs[args.only]}
+
+    summary = {}
+    for name, fn in jobs.items():
+        print(f"=== {name} ===", flush=True)
+        rows = fn()
+        summary[name] = rows
+        with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+            json.dump(rows, f, indent=1)
+        print("name,us_per_call,derived")
+        for row in rows:
+            us = row.get("step_ms", 0) * 1e3 if "step_ms" in row else \
+                row.get("quant_jnp_us", 0)
+            derived = row.get("recall@20", row.get("mem_ratio",
+                              row.get("loss", row.get("rel_drop_%",
+                              row.get("fused_traffic_ratio", "")))))
+            tag = "/".join(str(row.get(k)) for k in
+                           ("model", "bits", "rounding", "dim", "step")
+                           if k in row)
+            print(f"{name}:{tag},{us:.0f},{derived}")
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(summary, f, indent=1)
+    print("[bench] wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: TinyKG in ~40 lines.
+
+Trains KGAT on a synthetic knowledge graph with INT2-compressed
+activations and compares against the FP32 baseline.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import sys
+
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+# the benchmark harness is the supported high-level API for KGNN training
+from benchmarks.common import dataset, train_kgnn  # noqa: E402
+
+
+def main() -> None:
+    print(f"devices: {jax.devices()}")
+    ds = dataset(seed=0)
+    print(f"KG: {ds.n_users} users, {ds.n_items} items, "
+          f"{ds.graph.n_nodes} nodes, {len(ds.graph.src)} edges")
+
+    fp32 = train_kgnn("kgat", bits=None, steps=120, dim=32, ds=ds)
+    int2 = train_kgnn("kgat", bits=2, steps=120, dim=32, ds=ds)
+
+    print(f"\n{'':12s}{'Recall@20':>11s}{'NDCG@20':>9s}"
+          f"{'ActMem':>10s}{'ms/step':>9s}")
+    for name, r in [("FP32", fp32), ("TinyKG INT2", int2)]:
+        print(f"{name:12s}{r['recall@20']:11.4f}{r['ndcg@20']:9.4f}"
+              f"{r['act_mem_bytes']/2**20:9.2f}M{r['step_ms']:9.1f}")
+    print(f"\nactivation compression: {int2['act_mem_ratio']:.1f}x "
+          f"(paper reports ~7x at INT2)")
+    drop = 100 * (fp32["recall@20"] - int2["recall@20"]) / fp32["recall@20"]
+    print(f"accuracy delta: {drop:+.2f}% (paper: < 2%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""End-to-end driver: train a ~100M-parameter KGIN for a few hundred steps
+with the full production stack — fault-tolerant Trainer, async
+checkpointing, SR-keyed replay, Recall/NDCG eval.
+
+The ~100M parameters come from the entity/relation embedding tables
+(the realistic KGNN regime: params ∝ N·d): 600k entities × d=160 ≈ 96M,
+plus propagation weights.
+
+    PYTHONPATH=src python examples/train_kgnn.py [--steps 300] [--bits 2]
+"""
+
+import argparse
+import os
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import step_key  # noqa: E402
+from repro.core.policy import policy_for_bits  # noqa: E402
+from repro.data.synthetic import bpr_batches, gen_kg_dataset  # noqa: E402
+from repro.models import kgnn  # noqa: E402
+from repro.training.optimizer import adam, cosine_warmup  # noqa: E402
+from repro.training.trainer import Trainer, TrainerConfig  # noqa: E402
+
+from benchmarks.common import evaluate  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--bits", type=int, default=2)
+    ap.add_argument("--dim", type=int, default=160)
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="graph size multiplier")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    # ~600k entities at scale=1.0 -> ~100M embedding params at dim=160
+    ds = gen_kg_dataset(
+        n_users=int(120_000 * args.scale), n_items=int(200_000 * args.scale),
+        n_attrs=int(280_000 * args.scale), n_relations=12,
+        n_triples=int(1_200_000 * args.scale), inter_per_user=12, seed=0)
+    cfg = kgnn.KGNNConfig(
+        model="kgin", n_users=ds.n_users, n_entities=ds.n_entities,
+        n_relations=ds.n_relations, dim=args.dim, n_layers=3, readout="sum")
+    policy = policy_for_bits(args.bits if args.bits else None)
+    g = jax.tree_util.tree_map(jnp.asarray, ds.graph)
+
+    params = kgnn.init_params(jax.random.PRNGKey(0), cfg)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"model: kgin dim={args.dim} | {n_params/1e6:.1f}M params | "
+          f"{len(ds.graph.src)/1e6:.2f}M edges | policy bits={args.bits}")
+
+    opt = adam(cosine_warmup(3e-3, warmup=50, total=args.steps),
+               clip_norm=1.0)
+    root = jax.random.PRNGKey(7)
+
+    @jax.jit
+    def train_step(state, batch, step):
+        params, opt_state = state
+        loss, grads = jax.value_and_grad(kgnn.bpr_loss)(
+            params, g, batch, cfg, policy=policy,
+            key=step_key(root, step))
+        params, opt_state = opt.update(grads, opt_state, params)
+        return (params, opt_state), {"loss": loss}
+
+    def batches():
+        for b in bpr_batches(ds, 4096, seed=1):
+            yield jax.tree_util.tree_map(jnp.asarray, b)
+
+    tcfg = TrainerConfig(
+        total_steps=args.steps,
+        ckpt_dir=args.ckpt or tempfile.mkdtemp(prefix="kgin_ckpt_"),
+        ckpt_every=100, log_every=25)
+    trainer = Trainer(train_step, (params, opt.init(params)), batches(),
+                      tcfg).restore_if_available()
+    state = trainer.run()
+
+    recall, ndcg = evaluate(state[0], g, cfg, ds)
+    print(f"final: recall@20={recall:.4f} ndcg@20={ndcg:.4f} "
+          f"(ckpts in {tcfg.ckpt_dir})")
+
+
+if __name__ == "__main__":
+    main()

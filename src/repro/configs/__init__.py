@@ -1,0 +1,29 @@
+"""--arch registry: the 10 assigned architectures + the paper's own KGNNs."""
+
+from .base import ArchSpec, ShapeSpec
+from .gcn_cora import GCN_CORA
+from .kgnn_paper import KGAT, KGCN, KGIN
+from .lm_archs import (
+    CODEQWEN15_7B,
+    GROK_1_314B,
+    MISTRAL_LARGE_123B,
+    MOONSHOT_V1_16B_A3B,
+    STABLELM_12B,
+)
+from .recsys_archs import DLRM_MLPERF, FM, WIDE_DEEP, XDEEPFM
+
+ARCHS = {a.name: a for a in [
+    MISTRAL_LARGE_123B, CODEQWEN15_7B, STABLELM_12B, MOONSHOT_V1_16B_A3B,
+    GROK_1_314B,
+    GCN_CORA,
+    WIDE_DEEP, DLRM_MLPERF, XDEEPFM, FM,
+    KGAT, KGCN, KGIN,
+]}
+
+ASSIGNED = [n for n in ARCHS if n not in ("kgat", "kgcn", "kgin")]
+
+
+def get(name: str) -> ArchSpec:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name}; have {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,32 @@
+"""TinyKG core: activation-compressed training (ACT) for JAX.
+
+Public API:
+  quant:   quantize / dequantize / QTensor / pack_bits / unpack_bits
+  act:     act_matmul / act_dense / act_relu / act_nonlin / act_rmsnorm /
+           act_spmm / act_remat
+  policy:  ACTPolicy + FP32/INT8/INT4/INT2/INT1 presets
+  rng:     KeyChain / step_key
+"""
+
+from .act import (
+    act_dense,
+    act_matmul,
+    act_nonlin,
+    act_relu,
+    act_remat,
+    act_rmsnorm,
+    act_spmm,
+)
+from .memory import activation_bytes_report
+from .policy import FP32, INT1, INT2, INT4, INT8, ACTPolicy, policy_for_bits
+from .quant import QTensor, act_bytes, dequantize, pack_bits, quantize, unpack_bits
+from .rng import KeyChain, step_key
+
+__all__ = [
+    "ACTPolicy", "FP32", "INT8", "INT4", "INT2", "INT1", "policy_for_bits",
+    "QTensor", "quantize", "dequantize", "pack_bits", "unpack_bits", "act_bytes",
+    "act_matmul", "act_dense", "act_relu", "act_nonlin", "act_rmsnorm",
+    "act_spmm", "act_remat",
+    "KeyChain", "step_key",
+    "activation_bytes_report",
+]

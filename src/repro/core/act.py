@@ -1,0 +1,323 @@
+"""Activation-compressed ops (the paper's core mechanism, §3.3).
+
+Each op computes an EXACT full-precision forward; what differs from vanilla
+autodiff is the *residual* it saves for the backward pass:
+
+  vanilla:  save x (fp32)                  -> O(N*d*4) bytes
+  TinyKG:   save Quant(x) (b-bit packed)   -> O(N*d*b/8) bytes  (+2 fp32/row)
+
+The backward pass dequantizes and computes full-precision gradients, which
+stay unbiased because the quantizer is unbiased (Proposition 1).
+
+Ops mirror the paper's operator list (Linear/MM, ReLU, SPMM, nonlinearities,
+norms) plus a generic ``act_remat`` wrapper (beyond-paper: checkpointing that
+recomputes the forward from the *compressed* input, GACT-style), which is how
+we ACT-ify whole transformer blocks with one call.
+
+Linear ops only need their input saved to form the *weight* gradient
+(∇Θ = x̂ᵀ ∇y); the data gradient uses only the weights. Purely index-based
+linear ops (embedding lookup, fixed-adjacency SPMM) need no activation at
+all — their residuals are indices, which autodiff already keeps compactly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .policy import ACTPolicy
+from .quant import QTensor, dequantize, quantize
+
+__all__ = [
+    "act_matmul",
+    "act_dense",
+    "act_relu",
+    "act_nonlin",
+    "act_rmsnorm",
+    "act_spmm",
+    "act_remat",
+]
+
+
+def _maybe_quantize(x: jax.Array, key: jax.Array, policy: ACTPolicy):
+    """QTensor under an active policy, raw tensor otherwise (FP32 baseline)."""
+    if policy.active:
+        if policy.kernel == "pallas":
+            from repro.kernels import ops as kops
+
+            return kops.quantize(x, key, bits=policy.bits,
+                                 stochastic=policy.stochastic)
+        return quantize(x, key, bits=policy.bits, stochastic=policy.stochastic)
+    return x
+
+
+def _maybe_dequantize(q) -> jax.Array:
+    if isinstance(q, QTensor):
+        return dequantize(q)
+    return q
+
+
+# ---------------------------------------------------------------------------
+# matmul / dense
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _act_matmul(policy: ACTPolicy, x, w, key):
+    return jnp.einsum("...k,kn->...n", x, w)
+
+
+def _act_matmul_fwd(policy, x, w, key):
+    out = jnp.einsum("...k,kn->...n", x, w)
+    return out, (_maybe_quantize(x, key, policy), w)
+
+
+def _act_matmul_bwd(policy, res, g):
+    qx, w = res
+    xhat = _maybe_dequantize(qx)
+    dx = jnp.einsum("...n,kn->...k", g, w)
+    if policy.active and policy.kernel == "pallas":
+        from repro.kernels import ops as kops
+
+        dw = kops.dequant_matmul(qx, g)  # fused dequant + Ĥᵀ∇J GEMM
+    else:
+        dw = jnp.einsum("...k,...n->kn", xhat, g)
+    return dx, dw, None
+
+
+_act_matmul.defvjp(_act_matmul_fwd, _act_matmul_bwd)
+
+
+def act_matmul(x, w, *, key, policy: ACTPolicy):
+    """``x @ w`` with b-bit residual storage of ``x``."""
+    if not policy.enabled:
+        return jnp.einsum("...k,kn->...n", x, w)
+    return _act_matmul(policy, x, w, key)
+
+
+def act_dense(x, w, b, *, key, policy: ACTPolicy):
+    """Affine layer; bias grad needs no activation so it rides for free."""
+    out = act_matmul(x, w, key=key, policy=policy)
+    if b is not None:
+        out = out + b
+    return out
+
+
+# ---------------------------------------------------------------------------
+# elementwise nonlinearities
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def act_relu(x):
+    """ReLU with a 1-bit exact mask residual (paper §4.1.4) — lossless."""
+    return jnp.maximum(x, 0)
+
+
+def _act_relu_fwd(x):
+    mask = x > 0
+    return jnp.where(mask, x, 0), mask  # bool mask: 1 bit/elt in principle
+
+
+def _act_relu_bwd(mask, g):
+    return (jnp.where(mask, g, 0),)
+
+
+act_relu.defvjp(_act_relu_fwd, _act_relu_bwd)
+
+
+def _d_silu(x):
+    s = jax.nn.sigmoid(x)
+    return s * (1 + x * (1 - s))
+
+
+def _d_gelu(x):
+    # tanh-approx gelu derivative
+    c = jnp.sqrt(2 / jnp.pi)
+    t = jnp.tanh(c * (x + 0.044715 * x**3))
+    dt = (1 - t**2) * c * (1 + 3 * 0.044715 * x**2)
+    return 0.5 * (1 + t) + 0.5 * x * dt
+
+
+def _gelu(x):
+    c = jnp.sqrt(2 / jnp.pi)
+    return 0.5 * x * (1 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+_NONLIN: dict[str, tuple[Callable, Callable]] = {
+    "silu": (jax.nn.silu, _d_silu),
+    "gelu": (_gelu, _d_gelu),
+    "tanh": (jnp.tanh, lambda x: 1 - jnp.tanh(x) ** 2),
+    "sigmoid": (jax.nn.sigmoid,
+                lambda x: jax.nn.sigmoid(x) * (1 - jax.nn.sigmoid(x))),
+    "leaky_relu": (lambda x: jnp.where(x > 0, x, 0.01 * x),
+                   lambda x: jnp.where(x > 0, 1.0, 0.01)),
+}
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _act_nonlin(name: str, policy: ACTPolicy, x, key):
+    return _NONLIN[name][0](x)
+
+
+def _act_nonlin_fwd(name, policy, x, key):
+    return _NONLIN[name][0](x), _maybe_quantize(x, key, policy)
+
+
+def _act_nonlin_bwd(name, policy, qx, g):
+    xhat = _maybe_dequantize(qx)
+    return g * _NONLIN[name][1](xhat), None
+
+
+_act_nonlin.defvjp(_act_nonlin_fwd, _act_nonlin_bwd)
+
+
+def act_nonlin(x, *, key, policy: ACTPolicy, fn: str):
+    """Elementwise nonlinearity saving a quantized copy of its input."""
+    if not policy.enabled:
+        return _NONLIN[fn][0](x)
+    return _act_nonlin(fn, policy, x, key)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _act_rmsnorm(policy: ACTPolicy, x, gamma, key, eps):
+    r = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x * r * gamma
+
+
+def _act_rmsnorm_fwd(policy, x, gamma, key, eps):
+    r = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x * r * gamma, (_maybe_quantize(x, key, policy), gamma, eps)
+
+
+def _act_rmsnorm_bwd(policy, res, g):
+    qx, gamma, eps = res
+    xhat = _maybe_dequantize(qx).astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    d = xhat.shape[-1]
+    r = jax.lax.rsqrt(jnp.mean(xhat * xhat, axis=-1, keepdims=True) + eps)
+    gg = gf * gamma.astype(jnp.float32)
+    dot = jnp.sum(gg * xhat, axis=-1, keepdims=True)
+    dx = r * gg - (r**3 / d) * dot * xhat
+    dgamma = jnp.sum(gf * xhat * r, axis=tuple(range(g.ndim - 1)))
+    return dx.astype(g.dtype), dgamma.astype(gamma.dtype), None, None
+
+
+_act_rmsnorm.defvjp(_act_rmsnorm_fwd, _act_rmsnorm_bwd)
+
+
+def act_rmsnorm(x, gamma, *, key, policy: ACTPolicy, eps: float = 1e-6):
+    """RMSNorm storing its input quantized; rstd recomputed from x̂ in bwd."""
+    if not policy.enabled:
+        r = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+        return x * r * gamma
+    return _act_rmsnorm(policy, x, gamma, key, eps)
+
+
+# ---------------------------------------------------------------------------
+# SPMM (KG message passing) — the paper's headline op (Eq. 2)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _act_spmm(policy: ACTPolicy, num_nodes: int, x, src, dst, ew, key):
+    msgs = x[src] * ew[:, None]
+    return jax.ops.segment_sum(msgs, dst, num_segments=num_nodes)
+
+
+def _act_spmm_fwd(policy, num_nodes, x, src, dst, ew, key):
+    msgs = x[src] * ew[:, None]
+    out = jax.ops.segment_sum(msgs, dst, num_segments=num_nodes)
+    # x is needed only for ∇ew (edge weights, e.g. KGAT attention); indices
+    # alone suffice for ∇x. Save x quantized.
+    return out, (_maybe_quantize(x, key, policy), src, dst, ew)
+
+
+def _act_spmm_bwd(policy, num_nodes, res, g):
+    qx, src, dst, ew = res
+    xhat = _maybe_dequantize(qx)
+    g_at_dst = g[dst]  # (E, d)
+    # scatter to x's OWN row count — x may be a gathered (global) table
+    # while num_nodes is the (local) output segment count (shard_map path)
+    dx = jax.ops.segment_sum(g_at_dst * ew[:, None], src,
+                             num_segments=xhat.shape[-2])
+    dew = jnp.sum(xhat[src] * g_at_dst, axis=-1)
+    return dx, None, None, dew, None
+
+
+_act_spmm.defvjp(_act_spmm_fwd, _act_spmm_bwd)
+
+
+def act_spmm(x, src, dst, ew, *, num_nodes: int, key, policy: ACTPolicy):
+    """Weighted sparse aggregation ``H[v] = Σ_{(u,r,v)} w_e · x[u]``.
+
+    ``src``/``dst`` are int edge endpoints, ``ew`` per-edge weights. When
+    ``ew`` is None (plain normalized adjacency, e.g. GCN/KGCN) the op is
+    linear with index-only residuals — nothing to compress, handled exactly.
+    """
+    if ew is None:
+        msgs = x[src]
+        return jax.ops.segment_sum(msgs, dst, num_segments=num_nodes)
+    if not policy.enabled:
+        msgs = x[src] * ew[:, None]
+        return jax.ops.segment_sum(msgs, dst, num_segments=num_nodes)
+    return _act_spmm(policy, num_nodes, x, src, dst, ew, key)
+
+
+# ---------------------------------------------------------------------------
+# Generic compressed-checkpoint wrapper (beyond-paper, GACT-style)
+# ---------------------------------------------------------------------------
+
+
+def act_remat(fn: Callable, policy: ACTPolicy):
+    """Wrap ``fn(params, x, consts) -> y`` to save only Quant(x) backward.
+
+    The backward pass dequantizes x̂ and *recomputes* ``fn`` under ``jax.vjp``
+    — i.e. gradient checkpointing whose checkpoint is b-bit compressed. One
+    wrapper ACT-ifies an entire block (attention + MLP) with O(N·d·b/8)
+    residual memory instead of O(layers · activations).
+
+    ``consts`` is a non-differentiated pytree (positions, masks, …) passed
+    as an explicit argument — custom_vjp forbids closed-over tracers.
+    Returns ``wrapped(params, x, key, consts=None)``; under an inactive
+    policy it degrades to plain ``jax.checkpoint`` (the FP32 baseline).
+    """
+
+    if not policy.active:
+        ck = jax.checkpoint(lambda params, x, consts: fn(params, x, consts))
+
+        def baseline(params, x, key=None, consts=None):
+            del key
+            return ck(params, x, consts)
+
+        return baseline
+
+    @jax.custom_vjp
+    def wrapped(params, x, key, consts):
+        return fn(params, x, consts)
+
+    def fwd(params, x, key, consts):
+        return fn(params, x, consts), (
+            params, _maybe_quantize(x, key, policy), consts)
+
+    def bwd(res, g):
+        params, qx, consts = res
+        xhat = _maybe_dequantize(qx)
+        _, vjp = jax.vjp(lambda p, xx: fn(p, xx, consts), params, xhat)
+        dparams, dx = vjp(g)
+        return dparams, dx, None, None
+
+    wrapped.defvjp(fwd, bwd)
+
+    def apply(params, x, key, consts=None):
+        return wrapped(params, x, key, consts)
+
+    return apply

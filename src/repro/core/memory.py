@@ -1,0 +1,57 @@
+"""Activation-memory accounting (paper Table 5 "Act Mem" column).
+
+Models register the shapes of the activation maps they would save per train
+step; this module prices them under a given ACT policy. This is analytic
+accounting over the *same* shapes XLA would buffer — on CPU we cannot read
+real GPU buffers, and on TPU the dry-run's memory_analysis() provides the
+device-level ground truth.
+"""
+
+from __future__ import annotations
+
+from .policy import ACTPolicy
+from .quant import act_bytes
+
+__all__ = ["activation_bytes_report"]
+
+
+def activation_bytes_report(
+    shapes: dict[str, tuple[int, ...]],
+    policy: ACTPolicy,
+    *,
+    exact_bool_masks: tuple[str, ...] = (),
+) -> dict[str, float]:
+    """Price a model's saved-activation shapes under ``policy``.
+
+    shapes           : name -> activation shape (as saved for backward)
+    exact_bool_masks : names stored as 1-bit exact masks regardless of policy
+                       (e.g. ReLU masks)
+
+    Returns dict with per-tensor bytes, totals, and the compression ratio
+    vs the FP32 baseline (the paper's headline 7.1x at INT2).
+    """
+    bits = policy.bits if policy.active else None
+    report: dict[str, float] = {}
+    total = 0
+    total_fp32 = 0
+    for name, shape in shapes.items():
+        fp32 = act_bytes(shape, None)
+        if name in exact_bool_masks:
+            b = act_bytes(shape, 1) - _row_overhead(shape)  # pure 1-bit mask
+        else:
+            b = act_bytes(shape, bits)
+        report[name] = b
+        total += b
+        total_fp32 += fp32
+    report["total_bytes"] = total
+    report["total_fp32_bytes"] = total_fp32
+    report["compression_ratio"] = total_fp32 / max(total, 1)
+    return report
+
+
+def _row_overhead(shape: tuple[int, ...]) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    rows = n // shape[-1]
+    return rows * 8  # scale+zero fp32 per row

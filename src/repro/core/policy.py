@@ -1,0 +1,54 @@
+"""ACT (activation-compressed training) policy.
+
+The policy is a frozen (hashable) dataclass so it can ride through
+``jax.custom_vjp(nondiff_argnums=...)`` and ``jax.jit(static_argnames=...)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["ACTPolicy", "FP32", "INT8", "INT4", "INT2", "INT1", "policy_for_bits"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ACTPolicy:
+    """How compressed-activation ops store their backward residuals.
+
+    bits       : 1/2/4/8 quantized storage, or ``None`` for the exact FP32
+                 baseline (paper Tables 2-5 column "FP32").
+    stochastic : stochastic rounding (paper default) vs nearest rounding
+                 (paper Table 6 ablation — diverges below INT8).
+    enabled    : master switch; ``False`` behaves exactly like vanilla ops.
+    kernel     : "jnp" reference path or "pallas" fused TPU kernels.
+    """
+
+    bits: int | None = 2
+    stochastic: bool = True
+    enabled: bool = True
+    kernel: str = "jnp"
+
+    def __post_init__(self):
+        if self.bits is not None and self.bits not in (1, 2, 4, 8):
+            raise ValueError(f"bits must be in {{1,2,4,8}} or None, got {self.bits}")
+        if self.kernel not in ("jnp", "pallas"):
+            raise ValueError(f"kernel must be 'jnp' or 'pallas', got {self.kernel}")
+
+    @property
+    def active(self) -> bool:
+        return self.enabled and self.bits is not None
+
+    def with_bits(self, bits: int | None) -> "ACTPolicy":
+        return dataclasses.replace(self, bits=bits)
+
+
+FP32 = ACTPolicy(bits=None)
+INT8 = ACTPolicy(bits=8)
+INT4 = ACTPolicy(bits=4)
+INT2 = ACTPolicy(bits=2)
+INT1 = ACTPolicy(bits=1)
+
+
+def policy_for_bits(bits: int | None, *, stochastic: bool = True,
+                    kernel: str = "jnp") -> ACTPolicy:
+    return ACTPolicy(bits=bits, stochastic=stochastic, kernel=kernel)

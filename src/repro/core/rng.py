@@ -1,0 +1,38 @@
+"""Deterministic key derivation for stochastic rounding.
+
+Every compressed op consumes one PRNG key. ``KeyChain`` derives a fresh key
+per call via ``fold_in`` on a monotonically increasing counter — fully
+deterministic given the root key, which makes fault-tolerant replay exact
+(the restarted step reproduces the same rounding decisions).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["KeyChain", "step_key"]
+
+
+class KeyChain:
+    """Stateful (trace-time) key dispenser. Use inside a single traced fn."""
+
+    def __init__(self, root: jax.Array):
+        self._root = root
+        self._n = 0
+
+    def next(self) -> jax.Array:
+        k = jax.random.fold_in(self._root, self._n)
+        self._n += 1
+        return k
+
+    def split(self, n: int) -> jax.Array:
+        ks = jax.vmap(lambda i: jax.random.fold_in(self._root, self._n + i))(
+            jax.numpy.arange(n)
+        )
+        self._n += n
+        return ks
+
+
+def step_key(root: jax.Array, step: jax.Array | int) -> jax.Array:
+    """Key for a given global step: replayable across restarts."""
+    return jax.random.fold_in(root, step)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the ACT hot paths.
+
+  quant_pack.py     fused per-row minmax + SR-quantize + bit-pack
+  dequant_matmul.py fused dequantize + H^T.grad GEMM (ACT backward)
+  ops.py            jit'd wrappers (QTensor I/O, backend switch)
+  ref.py            pure-jnp oracles (bit-exact vs the kernels)
+  hashrng.py        counter-hash SR noise (TPU analogue of cuRAND-in-kernel)
+"""

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: fused dequantize + GEMM for the ACT backward pass.
+
+Computes  dW = x̂ᵀ @ g  where x̂ = dequant(packed, scale, zero) — the weight
+gradient ∇Θ = Ĥᵀ∇J of paper Eq. (2) — WITHOUT materializing x̂ in HBM:
+
+    HBM read : packed uint8 (R·d·b/8) + scale/zero (8R) + g (R·N·4)
+    HBM write: dW (d·N·4)
+
+The unfused path reads/writes an extra R·d·4 bytes for x̂. Since the
+backward of every compressed matmul runs this op, fusing it removes the
+dominant extra memory traffic of ACT training (beyond-paper optimization —
+the CUDA original dequantizes to a full-precision buffer first).
+
+Tiling: grid (d_tiles, n_tiles, r_tiles), r innermost, fp32 accumulation
+into the output tile (standard revisiting pattern). A d-tile must lie
+inside a single pack-chunk (block_d divides dp), so its codes live in one
+contiguous byte range under one shift — the chunk-interleaved layout from
+``quant_pack.py`` makes the unpack a single shift+mask per tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dequant_matmul"]
+
+
+def _dqmm_kernel(packed_ref, scale_ref, zero_ref, g_ref, out_ref, *,
+                 bits: int, dp: int, block_d: int):
+    di = pl.program_id(0)
+    r = pl.program_id(2)
+    mask = jnp.uint8(2**bits - 1)
+    # which bit-field this d-tile lives in (chunk-interleaved layout)
+    chunk = (di * block_d) // dp
+    shift = (chunk * bits).astype(jnp.uint8)
+    codes = ((packed_ref[...] >> shift) & mask).astype(jnp.float32)
+    xhat = codes * scale_ref[...] + zero_ref[...]  # (block_r, block_d)
+    acc = jax.lax.dot_general(
+        xhat, g_ref[...].astype(jnp.float32),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (block_d, block_n)
+
+    @pl.when(r == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(r > 0)
+    def _accum():
+        out_ref[...] += acc
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target."""
+    b = min(dim, target)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "dim", "block_r", "block_n",
+                                    "block_d", "interpret"))
+def dequant_matmul(packed: jax.Array, scale: jax.Array, zero: jax.Array,
+                   g: jax.Array, *, bits: int, dim: int,
+                   block_r: int = 256, block_n: int = 256,
+                   block_d: int | None = None, interpret: bool = True):
+    """``dequant(packed, scale, zero)ᵀ @ g``.
+
+    packed : (R, dp) uint8 chunk-interleaved codes (dp = dim * bits / 8)
+    scale  : (R, 1) fp32, zero: (R, 1) fp32
+    g      : (R, N) float
+    returns: (dim, N) fp32
+    """
+    rows, dp = packed.shape
+    _, n = g.shape
+    cpb = 8 // bits
+    assert dp * cpb == dim, f"packed dim mismatch: {dp}*{cpb} != {dim}"
+
+    if block_d is None:
+        block_d = _pick_block(dp, 512)
+    assert dp % block_d == 0, (dp, block_d)
+    block_r = min(block_r, rows)
+    block_n = min(block_n, n)
+
+    grid_r = -(-rows // block_r)
+    grid_n = -(-n // block_n)
+    grid_d = dim // block_d
+    pad_r = grid_r * block_r - rows
+    pad_n = grid_n * block_n - n
+    if pad_r:
+        packed = jnp.pad(packed, ((0, pad_r), (0, 0)))
+        scale = jnp.pad(scale, ((0, pad_r), (0, 0)))  # pad rows dequant to 0
+        zero = jnp.pad(zero, ((0, pad_r), (0, 0)))
+        g = jnp.pad(g, ((0, pad_r), (0, 0)))
+    if pad_n:
+        g = jnp.pad(g, ((0, 0), (0, pad_n)))
+
+    kernel = functools.partial(_dqmm_kernel, bits=bits, dp=dp,
+                               block_d=block_d)
+    out = pl.pallas_call(
+        kernel,
+        grid=(grid_d, grid_n, grid_r),
+        in_specs=[
+            pl.BlockSpec((block_r, block_d),
+                         lambda di, ni, ri: (ri, di % (dp // block_d))),
+            pl.BlockSpec((block_r, 1), lambda di, ni, ri: (ri, 0)),
+            pl.BlockSpec((block_r, 1), lambda di, ni, ri: (ri, 0)),
+            pl.BlockSpec((block_r, block_n), lambda di, ni, ri: (ri, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_d, block_n),
+                               lambda di, ni, ri: (di, ni)),
+        out_shape=jax.ShapeDtypeStruct((dim, grid_n * block_n), jnp.float32),
+        interpret=interpret,
+    )(packed, scale, zero, g)
+    return out[:, :n] if pad_n else out

@@ -1,0 +1,43 @@
+"""Counter-based uniform hash used for in-kernel stochastic rounding.
+
+The GPU paper draws SR noise from cuRAND global state inside the CUDA
+kernel. TPU Pallas has ``pltpu.prng_random_bits``, but a stateless
+counter hash (murmur3 finalizer over element index ⊕ seed) is:
+  * identical in interpret mode (CPU) and on real TPU,
+  * reproducible across restarts (fault-tolerant replay),
+  * free of HBM traffic (no pre-generated noise tensor),
+  * expressible in plain jnp — so the ref.py oracle matches bit-exactly.
+
+Statistical quality is far beyond what SR needs (murmur3 passes avalanche;
+SR only needs E[u]=1/2 uniformity per element).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["hash_uniform", "key_to_seed"]
+
+
+def _murmur3_fmix(x: jax.Array) -> jax.Array:
+    """murmur3 32-bit finalizer; input/output uint32."""
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def hash_uniform(idx: jax.Array, seed: jax.Array) -> jax.Array:
+    """U[0,1) floats from uint32 element indices + uint32 scalar seed."""
+    h = _murmur3_fmix(idx.astype(jnp.uint32) ^ seed.astype(jnp.uint32))
+    # 24 mantissa bits -> exact float32 in [0, 1)
+    return (h >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def key_to_seed(key: jax.Array) -> jax.Array:
+    """Fold a jax PRNG key down to a uint32 scalar seed."""
+    data = jax.random.key_data(key).astype(jnp.uint32)
+    return _murmur3_fmix(data[..., 0] ^ _murmur3_fmix(data[..., -1]))

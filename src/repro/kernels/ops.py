@@ -1,0 +1,64 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These adapt kernel I/O to the core ``QTensor`` container so the ACT ops in
+``repro.core.act`` can switch backends with ``ACTPolicy(kernel="pallas")``.
+
+On this CPU container the kernels run in ``interpret=True`` mode (Pallas
+executes the kernel body in Python); on a real TPU set
+``repro.kernels.ops.INTERPRET = False`` (the launcher does this when
+``jax.default_backend() == "tpu"``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor
+
+from . import dequant_matmul as _dqmm
+from . import quant_pack as _qp
+from .hashrng import key_to_seed
+
+__all__ = ["quantize", "dequantize", "dequant_matmul", "INTERPRET"]
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def quantize(x: jax.Array, key: jax.Array, *, bits: int = 2,
+             stochastic: bool = True) -> QTensor:
+    """Fused Pallas quantize+pack -> QTensor (same container as core)."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    flat = x.reshape(-1, d)
+    packed, scale, zero = _qp.quant_pack(
+        flat, key_to_seed(key), bits=bits, stochastic=stochastic,
+        interpret=INTERPRET)
+    lead = orig_shape[:-1]
+    return QTensor(
+        packed=packed.reshape(*lead, packed.shape[-1]),
+        scale=scale.reshape(*lead, 1),
+        zero=zero.reshape(*lead, 1),
+        bits=bits,
+        dim=d,
+        dtype=x.dtype,
+    )
+
+
+def dequantize(q: QTensor) -> jax.Array:
+    lead = q.packed.shape[:-1]
+    out = _qp.dequant_unpack(
+        q.packed.reshape(-1, q.packed.shape[-1]),
+        q.scale.reshape(-1, 1), q.zero.reshape(-1, 1),
+        bits=q.bits, dim=q.dim, out_dtype=q.dtype, interpret=INTERPRET)
+    return out.reshape(*lead, q.dim)
+
+
+def dequant_matmul(q: QTensor, g: jax.Array) -> jax.Array:
+    """Fused ``dequant(q)ᵀ @ g`` — the ACT weight-gradient hot path."""
+    n = g.shape[-1]
+    return _dqmm.dequant_matmul(
+        q.packed.reshape(-1, q.packed.shape[-1]),
+        q.scale.reshape(-1, 1), q.zero.reshape(-1, 1),
+        g.reshape(-1, n),
+        bits=q.bits, dim=q.dim, interpret=INTERPRET)

@@ -1,0 +1,174 @@
+"""Pallas TPU kernel: fused per-row minmax + SR-quantize + bit-pack.
+
+One VMEM pass over the activation block:
+    HBM read  : x fp32                      (R*d*4 bytes)
+    HBM write : packed uint8 + scale + zero (R*d*b/8 + 8R bytes)
+
+vs the unfused jnp path which materializes codes (R*d) before packing.
+SR noise comes from an in-kernel counter hash (see hashrng.py) so no noise
+tensor is ever read from HBM — this is the TPU adaptation of the paper's
+cuRAND-in-CUDA-kernel design.
+
+Block shape: (block_r, d) — a row's minmax needs the full feature dim, which
+for KGNN/recsys/LM activations (d = 16 … 12288) fits VMEM comfortably at
+block_r = 256 (256×12288×4B ≈ 12.6 MB is the worst case; callers shrink
+block_r for very wide rows). Lane dim d should be a multiple of 128 for
+peak VPU efficiency; any d works correctly.
+
+The packed layout matches ``repro.core.quant.pack_bits`` (chunk-interleaved)
+so either backend can dequantize the other's QTensor.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .hashrng import hash_uniform
+
+__all__ = ["quant_pack_kernel", "quant_pack", "dequant_unpack"]
+
+_EPS = 1e-12
+
+
+def _quant_kernel(seed_ref, x_ref, packed_ref, scale_ref, zero_ref, *,
+                  bits: int, stochastic: bool, block_r: int, d: int,
+                  dp: int, cpb: int):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)  # (block_r, d)
+    bins = jnp.float32(2**bits - 1)
+    lo = jnp.min(x, axis=-1, keepdims=True)
+    hi = jnp.max(x, axis=-1, keepdims=True)
+    rng = hi - lo
+    inv = bins / jnp.maximum(rng, _EPS)
+    normed = (x - lo) * inv  # in [0, bins]
+    if stochastic:
+        # global element index -> counter hash
+        row = jax.lax.broadcasted_iota(jnp.uint32, (block_r, d), 0)
+        col = jax.lax.broadcasted_iota(jnp.uint32, (block_r, d), 1)
+        gidx = (row + jnp.uint32(i * block_r)) * jnp.uint32(d) + col
+        u = hash_uniform(gidx, seed_ref[0])
+        floor = jnp.floor(normed)
+        codes_f = floor + (u < (normed - floor)).astype(jnp.float32)
+    else:
+        codes_f = jnp.round(normed)
+    codes = jnp.clip(codes_f, 0.0, bins).astype(jnp.uint8)
+    # chunk-interleaved pack: byte j holds codes [k*dp + j], k = 0..cpb-1
+    if cpb == 1:
+        packed = codes
+    else:
+        packed = codes[:, 0:dp]
+        for k in range(1, cpb):
+            packed = packed | (codes[:, k * dp:(k + 1) * dp]
+                               << jnp.uint8(k * bits))
+    packed_ref[...] = packed
+    scale_ref[...] = rng / bins
+    zero_ref[...] = lo
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "stochastic", "block_r",
+                                    "interpret"))
+def quant_pack(x: jax.Array, seed: jax.Array, *, bits: int = 2,
+               stochastic: bool = True, block_r: int = 256,
+               interpret: bool = True):
+    """Fused quantize+pack. Returns (packed, scale, zero).
+
+    x    : (rows, d) fp32/bf16 — callers flatten leading dims.
+    seed : uint32 scalar (see hashrng.key_to_seed).
+    """
+    rows, d = x.shape
+    cpb = 8 // bits
+    dp = -(-d // cpb)
+    if d % cpb:
+        # pad feature dim so chunks are exact; minmax must ignore the pad,
+        # so pad AFTER stats would be wrong — instead fall back to row pad
+        # via the caller. For simplicity we pad columns with the row min
+        # replicated (stats-neutral: min/max unchanged). Cheapest: require
+        # d % cpb == 0 for the fused kernel; callers meeting real model
+        # dims (multiples of 8) always satisfy this.
+        raise ValueError(f"quant_pack requires d % {cpb} == 0, got d={d}")
+    block_r = min(block_r, rows)
+    grid_r = -(-rows // block_r)
+    pad_r = grid_r * block_r - rows
+    if pad_r:
+        x = jnp.pad(x, ((0, pad_r), (0, 0)))
+    kernel = functools.partial(
+        _quant_kernel, bits=bits, stochastic=stochastic, block_r=block_r,
+        d=d, dp=dp, cpb=cpb)
+    # seed rides in SMEM via scalar prefetch (TPU-idiomatic for scalars)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(grid_r,),
+        in_specs=[pl.BlockSpec((block_r, d), lambda i, s: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_r, dp), lambda i, s: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i, s: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i, s: (i, 0)),
+        ],
+    )
+    packed, scale, zero = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((grid_r * block_r, dp), jnp.uint8),
+            jax.ShapeDtypeStruct((grid_r * block_r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((grid_r * block_r, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seed.reshape(1).astype(jnp.uint32), x)
+    if pad_r:
+        packed, scale, zero = (packed[:rows], scale[:rows], zero[:rows])
+    return packed, scale, zero
+
+
+def _dequant_kernel(packed_ref, scale_ref, zero_ref, out_ref, *,
+                    bits: int, d: int, dp: int, cpb: int, out_dtype):
+    packed = packed_ref[...]
+    if cpb == 1:
+        codes = packed[:, :d].astype(jnp.float32)
+    else:
+        mask = jnp.uint8(2**bits - 1)
+        chunks = [(packed >> jnp.uint8(k * bits)) & mask for k in range(cpb)]
+        codes = jnp.concatenate(chunks, axis=-1)[:, :d].astype(jnp.float32)
+    out_ref[...] = (codes * scale_ref[...] + zero_ref[...]).astype(out_dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "dim", "block_r", "interpret",
+                                    "out_dtype"))
+def dequant_unpack(packed: jax.Array, scale: jax.Array, zero: jax.Array, *,
+                   bits: int, dim: int, block_r: int = 256,
+                   out_dtype=jnp.float32, interpret: bool = True):
+    """Fused unpack+dequantize: (rows, dp) uint8 -> (rows, dim) float."""
+    rows, dp = packed.shape
+    cpb = 8 // bits
+    block_r = min(block_r, rows)
+    grid_r = -(-rows // block_r)
+    pad_r = grid_r * block_r - rows
+    if pad_r:
+        packed = jnp.pad(packed, ((0, pad_r), (0, 0)))
+        scale = jnp.pad(scale, ((0, pad_r), (0, 0)))
+        zero = jnp.pad(zero, ((0, pad_r), (0, 0)))
+    kernel = functools.partial(_dequant_kernel, bits=bits, d=dim, dp=dp,
+                               cpb=cpb, out_dtype=out_dtype)
+    out = pl.pallas_call(
+        kernel,
+        grid=(grid_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, dp), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid_r * block_r, dim), out_dtype),
+        interpret=interpret,
+    )(packed, scale, zero)
+    return out[:rows] if pad_r else out
+
+
+quant_pack_kernel = _quant_kernel  # exported for tests/inspection

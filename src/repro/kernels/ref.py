@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-exact references).
+
+``ref_quant_pack`` mirrors the kernel's counter-hash SR draws element-for-
+element, so kernel-vs-ref comparisons are exact equality on the packed
+codes, not just statistical agreement.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import pack_bits, unpack_bits
+
+from .hashrng import hash_uniform
+
+__all__ = ["ref_quant_pack", "ref_dequant_unpack", "ref_dequant_matmul"]
+
+_EPS = 1e-12
+
+
+def ref_quant_pack(x: jax.Array, seed: jax.Array, *, bits: int,
+                   stochastic: bool = True):
+    """Oracle for quant_pack: returns (packed, scale, zero)."""
+    rows, d = x.shape
+    xf = x.astype(jnp.float32)
+    bins = float(2**bits - 1)
+    lo = jnp.min(xf, axis=-1, keepdims=True)
+    hi = jnp.max(xf, axis=-1, keepdims=True)
+    rng = hi - lo
+    normed = (xf - lo) * (bins / jnp.maximum(rng, _EPS))
+    if stochastic:
+        gidx = (jnp.arange(rows, dtype=jnp.uint32)[:, None] * jnp.uint32(d)
+                + jnp.arange(d, dtype=jnp.uint32)[None, :])
+        u = hash_uniform(gidx, jnp.asarray(seed, jnp.uint32))
+        floor = jnp.floor(normed)
+        codes_f = floor + (u < (normed - floor)).astype(jnp.float32)
+    else:
+        codes_f = jnp.round(normed)
+    codes = jnp.clip(codes_f, 0.0, bins).astype(jnp.uint8)
+    return pack_bits(codes, bits), rng / bins, lo
+
+
+def ref_dequant_unpack(packed, scale, zero, *, bits: int, dim: int,
+                       out_dtype=jnp.float32):
+    codes = unpack_bits(packed, bits, dim).astype(jnp.float32)
+    return (codes * scale + zero).astype(out_dtype)
+
+
+def ref_dequant_matmul(packed, scale, zero, g, *, bits: int, dim: int):
+    """Oracle for dequant_matmul: dequantize then plain fp32 GEMM."""
+    xhat = ref_dequant_unpack(packed, scale, zero, bits=bits, dim=dim)
+    return xhat.T.astype(jnp.float32) @ g.astype(jnp.float32)

@@ -1,0 +1,143 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init). 512 host devices cover both the 16×16 single-pod
+mesh (first 256) and the 2×16×16 multi-pod mesh.
+
+Per cell this records: memory_analysis (proves it fits), cost_analysis,
+and the trip-count-corrected roofline terms parsed from the partitioned
+HLO (launch/roofline.py). Artifacts land in ``artifacts/dryrun/`` as JSON
+— EXPERIMENTS.md §Dry-run/§Roofline/§Perf are generated from them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch fm --shape train_batch
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod --bits 2
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, ASSIGNED, get
+from repro.core.policy import policy_for_bits
+from repro.launch.mesh import make_production_mesh
+from repro.launch.partition import build_cell
+from repro.launch.roofline import HW, parse_hlo, roofline_terms
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+             bits: int | None, out_dir: str, verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    arch = get(arch_name)
+    policy = policy_for_bits(bits)
+    rec = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "bits": bits, "n_devices": n_dev,
+    }
+    t0 = time.time()
+    try:
+        cell = build_cell(arch, shape_name, mesh, policy=policy)
+        lowered = cell.lower(mesh)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_gb": ma.argument_size_in_bytes / 2**30,
+            "output_gb": ma.output_size_in_bytes / 2**30,
+            "temp_gb": ma.temp_size_in_bytes / 2**30,
+            "alias_gb": ma.alias_size_in_bytes / 2**30,
+            "peak_gb": (ma.argument_size_in_bytes
+                        + ma.output_size_in_bytes
+                        + ma.temp_size_in_bytes
+                        - ma.alias_size_in_bytes) / 2**30,
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost_analysis"] = {
+            "flops": ca.get("flops"),
+            "bytes_accessed": ca.get("bytes accessed"),
+            "note": "XLA counts while bodies once; see roofline.*",
+        }
+        stats = parse_hlo(compiled.as_text(), n_devices=n_dev)
+        rec["roofline"] = roofline_terms(stats)
+        if verbose:
+            m = rec["memory"]
+            r = rec["roofline"]
+            print(f"[dryrun] {arch_name}/{shape_name} mesh={rec['mesh']} "
+                  f"bits={bits}: compile {rec['compile_s']}s | "
+                  f"peak {m['peak_gb']:.2f} GB/dev | "
+                  f"compute {r['compute_s']*1e3:.2f}ms "
+                  f"memory {r['memory_s']*1e3:.2f}ms "
+                  f"collective {r['collective_s']*1e3:.2f}ms "
+                  f"-> {r['dominant']}", flush=True)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[dryrun] {arch_name}/{shape_name} FAILED: {rec['error']}",
+                  flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch_name}__{shape_name}__{rec['mesh']}__b{bits}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="single arch id (default: all assigned)")
+    ap.add_argument("--shape", default=None,
+                    help="single shape name (default: all for the arch)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--bits", type=int, default=2,
+                    help="ACT bit-width (0 = FP32 baseline)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--include-kgnn", action="store_true",
+                    help="also dry-run the paper's KGAT/KGCN/KGIN at "
+                         "Amazon-Book scale")
+    args = ap.parse_args()
+    bits = args.bits if args.bits else None
+
+    arch_names = [args.arch] if args.arch else list(ASSIGNED)
+    if args.include_kgnn and not args.arch:
+        arch_names += ["kgat", "kgcn", "kgin"]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results = []
+    for mp in meshes:
+        for an in arch_names:
+            arch = ARCHS[an]
+            shape_names = [args.shape] if args.shape else \
+                [s.name for s in arch.shapes]
+            for sn in shape_names:
+                results.append(run_cell(an, sn, multi_pod=mp, bits=bits,
+                                        out_dir=args.out))
+    ok = sum(r["ok"] for r in results)
+    print(f"[dryrun] {ok}/{len(results)} cells compiled "
+          f"(hw: {HW['peak_flops']/1e12:.0f} TF/s, "
+          f"{HW['hbm_bw']/1e9:.0f} GB/s HBM, {HW['ici_bw']/1e9:.0f} GB/s ICI)")
+    if ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

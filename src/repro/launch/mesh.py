@@ -1,0 +1,28 @@
+"""Production meshes (TPU v5e pods: 16×16 = 256 chips/pod, 2 pods = 512).
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state). Single-pod uses the first 256 devices so both meshes can
+be built in one 512-device dry-run process.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "batch_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(
+        devices, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def batch_axes(mesh) -> tuple:
+    """The data-parallel axes: pods compose with data for pure DP."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))

@@ -1,0 +1,591 @@
+"""Per-family partitioning: param specs, input specs, step builders.
+
+This is the distribution layer the dry-run (and a real launch) consumes:
+for every (arch × shape) it yields a jittable step function plus
+ShapeDtypeStruct arguments carrying NamedShardings — lower/compile without
+allocating anything.
+
+Sharding schemes (see DESIGN.md §5):
+  LM train     : FSDP(+TP) — weights sharded (batch-axes × model), activations
+                 batch-sharded, scan-over-layers
+  LM serve     : TP (model axis); 123B/314B use 2D weight sharding
+                 (`serve_weight_2d`) so bf16 weights fit the chip set
+  decode cache : batch over data; sequence over model (context parallelism;
+                 long_500k uses every axis for the 500k-token cache)
+  GNN          : edge/node row sharding over batch axes, replicated weights
+  RecSys       : embedding rows over ALL axes (DLRM hybrid parallelism),
+                 MLPs data-parallel
+  KGNN (paper) : entity table rows + edges over batch axes
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec, ShapeSpec
+from repro.core.policy import ACTPolicy, INT2
+from repro.sharding.logical import axis_rules
+from repro.training.optimizer import adam
+
+from .mesh import batch_axes
+
+__all__ = ["build_cell", "Cell", "lm_rules_for"]
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything needed to lower one (arch × shape × mesh) combination."""
+    arch: ArchSpec
+    shape: ShapeSpec
+    step_fn: Callable
+    args: tuple          # ShapeDtypeStructs (with shardings)
+    donate: tuple = ()
+    rules: dict | None = None
+    meta: dict | None = None
+
+    def lower(self, mesh):
+        ctx = axis_rules(mesh, self.rules or {})
+        with mesh, ctx:
+            return jax.jit(self.step_fn,
+                           donate_argnums=self.donate).lower(*self.args)
+
+
+def _ru(n: int, m: int = 512) -> int:
+    """Round up to a mesh-divisible size (input/edge padding — the same
+    padding a production pipeline applies to keep shapes static)."""
+    return -(-n // m) * m
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _shape_tree(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _apply_specs(shapes, specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+
+def lm_rules_for(mesh, cfg, *, shape_kind: str, b1: bool = False) -> dict:
+    """Logical-axis rules specialized per arch/shape (kv-head divisibility,
+    long-context cache sharding, single-sample batches)."""
+    msize = mesh.shape["model"]
+    batch = batch_axes(mesh)
+    ep = cfg.moe is not None and cfg.moe.n_experts % msize == 0
+    rules = {
+        "batch": batch,
+        # Megatron sequence parallelism: the residual stream between blocks
+        # shards seq over `model` — row-parallel all-reduces decompose into
+        # reduce-scatter(+all-gather at the next consumer), and block-level
+        # ACT residuals shrink by the model-axis size
+        "seq": "model" if shape_kind in ("train", "prefill") else None,
+        "embed": None,
+        "heads": "model" if cfg.n_heads % msize == 0 else None,
+        "kv_heads": "model" if cfg.n_kv_heads % msize == 0 else None,
+        # EP: the expert dim owns the model axis, expert-internal ff stays
+        # local; TP (few wide experts / dense): shard ff over model
+        "ff": None if ep else "model",
+        "vocab": "model",
+        "expert": "model" if ep else None,
+        "cache_seq": "model",
+    }
+    if shape_kind == "decode" and b1:
+        # batch=1 long-context: throw every axis at the KV cache sequence
+        rules["batch"] = None
+        rules["cache_seq"] = batch + ("model",)
+    return rules
+
+
+def _lm_param_specs(cfg, mesh, *, two_d: bool):
+    """two_d: additionally shard over the batch axes (FSDP / 2D-serve)."""
+    msize = mesh.shape["model"]
+    fsdp = batch_axes(mesh) if two_d else None
+    kvshard = "model" if cfg.n_kv_heads % msize == 0 else None
+    ep = cfg.moe is not None and cfg.moe.n_experts % msize == 0
+
+    def spec(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        nd = len(leaf.shape)
+        if name == "emb":
+            return P("model", fsdp)
+        if name == "head":
+            return P(fsdp, "model")
+        if "ln" in name:
+            return P(*([None] * nd))
+        if "router" in name:
+            return P(None, fsdp, None)
+        if "moe" in name and nd == 4:      # (L, E, a, b)
+            if ep:
+                return P(None, "model", fsdp, None)
+            if "w_down" in name:
+                return P(None, None, "model", fsdp)
+            return P(None, None, fsdp, "model")
+        if nd == 3:                        # (L, a, b) dense block weights
+            if "wo" in name or "w_down" in name:
+                return P(None, "model", fsdp)
+            if "wk" in name or "wv" in name:
+                return P(None, fsdp, kvshard)
+            return P(None, fsdp, "model")
+        return P(*([None] * nd))
+
+    from repro.models import transformer as tf
+    shapes = jax.eval_shape(lambda k: tf.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    specs = jax.tree_util.tree_map_with_path(spec, shapes)
+    return shapes, specs
+
+
+def _lm_cell(arch: ArchSpec, shape: ShapeSpec, mesh,
+             policy: ACTPolicy) -> Cell:
+    from repro.models import transformer as tf
+    cfg = arch.model_cfg
+    p = shape.p()
+    kind = shape.kind
+    batch = batch_axes(mesh)
+    rules = lm_rules_for(mesh, cfg, shape_kind=kind,
+                         b1=p.get("global_batch") == 1)
+    if cfg.moe is not None:
+        # bind MoE dispatch groups to the data-shard count so every
+        # sort/scatter stays device-local (see models/moe.py)
+        nb = 1
+        for a in batch:
+            nb *= mesh.shape[a]
+        tokens = p["global_batch"] * (p["seq_len"] if kind in
+                                      ("train", "prefill") else 1)
+        groups = nb if tokens % nb == 0 and tokens >= nb else 1
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, n_groups=groups))
+
+    if kind == "train":
+        two_d = True  # FSDP always for train
+        shapes, specs = _lm_param_specs(cfg, mesh, two_d=two_d)
+        params = _apply_specs(shapes, specs, mesh)
+        opt = adam(3e-4)
+        opt_shapes = jax.eval_shape(opt.init, shapes)
+        opt_sh = {
+            "step": _sds((), jnp.int32, mesh, P()),
+            "mu": _apply_specs(opt_shapes["mu"], specs, mesh),
+            "nu": _apply_specs(opt_shapes["nu"], specs, mesh),
+        }
+        gb, seq = p["global_batch"], p["seq_len"]
+        tokens = _sds((gb, seq + 1), jnp.int32, mesh, P(batch, None))
+        key = _sds((2,), jnp.uint32, mesh, P(None))
+
+        def train_step(state, batch_, key_):
+            params_, opt_state = state
+            loss, grads = jax.value_and_grad(tf.lm_loss)(
+                params_, batch_, cfg=cfg, policy=policy, key=key_)
+            new_params, new_opt = opt.update(grads, opt_state, params_)
+            return (new_params, new_opt), {"loss": loss}
+
+        return Cell(arch, shape, train_step,
+                    ((params, opt_sh), {"tokens": tokens}, key),
+                    donate=(0,), rules=rules)
+
+    two_d = arch.serve_weight_2d
+    # int8 KV cache on serve shapes (beyond-paper: the paper's quantizer
+    # applied to the serving path — halves cache HBM vs bf16)
+    cfg = dataclasses.replace(cfg, kv_cache_bits=8)
+    shapes, specs = _lm_param_specs(cfg, mesh, two_d=two_d)
+    params = _apply_specs(shapes, specs, mesh)
+    gb, seq = p["global_batch"], p["seq_len"]
+    cache_shapes = _shape_tree(
+        jax.eval_shape(lambda: tf.init_cache(cfg, gb, seq)))
+    cache = jax.tree_util.tree_map(
+        lambda s: _sds(
+            s.shape, s.dtype, mesh,
+            P(None, rules["batch"], rules["cache_seq"], None, None)
+            if len(s.shape) == 5 else P()),
+        cache_shapes)
+
+    if kind == "prefill":
+        tokens = _sds((gb, seq), jnp.int32, mesh, P(rules["batch"], None))
+
+        def prefill_step(params_, tokens_, cache_):
+            return tf.prefill(params_, tokens_, cfg, cache_)
+
+        return Cell(arch, shape, prefill_step, (params, tokens, cache),
+                    donate=(2,), rules=rules)
+
+    # decode: one new token against a seq_len cache
+    tokens = _sds((gb, 1), jnp.int32, mesh, P(rules["batch"], None))
+
+    def decode(params_, cache_, tokens_):
+        return tf.decode_step(params_, cache_, tokens_, cfg)
+
+    return Cell(arch, shape, decode, (params, cache, tokens),
+                donate=(1,), rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# GNN family (gcn-cora)
+# ---------------------------------------------------------------------------
+
+
+def _gnn_cell(arch: ArchSpec, shape: ShapeSpec, mesh,
+              policy: ACTPolicy) -> Cell:
+    from repro.models import gnn
+    cfg = arch.model_cfg
+    p = shape.p()
+    batch = batch_axes(mesh)
+    rules = {"batch": batch}
+    opt = adam(1e-2)
+
+    shapes = jax.eval_shape(lambda k: gnn.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    rep = jax.tree_util.tree_map(
+        lambda s: _sds(s.shape, s.dtype, mesh, P(*([None] * len(s.shape)))),
+        shapes)
+    opt_shapes = jax.eval_shape(opt.init, shapes)
+    opt_sh = jax.tree_util.tree_map(
+        lambda s: _sds(s.shape, s.dtype, mesh, P(*([None] * len(s.shape)))),
+        opt_shapes)
+    key = _sds((2,), jnp.uint32, mesh, P(None))
+
+    if shape.kind == "full_graph":
+        # self-loops are appended to the edge list by the data pipeline;
+        # node/edge counts pad up to mesh-divisible sizes (isolated pad
+        # nodes / self-loop pad edges are semantically inert)
+        n, e, d = _ru(p["n_nodes"]), _ru(p["n_edges"] + p["n_nodes"]), \
+            p["d_feat"]
+        cfg = dataclasses.replace(cfg, d_in=d,
+                                  n_classes=p.get("n_classes",
+                                                  cfg.n_classes))
+        shapes = jax.eval_shape(lambda k: gnn.init_params(k, cfg),
+                                jax.random.PRNGKey(0))
+        rep = jax.tree_util.tree_map(
+            lambda s: _sds(s.shape, s.dtype, mesh,
+                           P(*([None] * len(s.shape)))), shapes)
+        opt_sh = jax.tree_util.tree_map(
+            lambda s: _sds(s.shape, s.dtype, mesh,
+                           P(*([None] * len(s.shape)))),
+            jax.eval_shape(opt.init, shapes))
+        x = _sds((n, d), jnp.float32, mesh, P(batch, None))
+        src = _sds((e,), jnp.int32, mesh, P(batch))
+        dst = _sds((e,), jnp.int32, mesh, P(batch))
+        deg = _sds((n,), jnp.float32, mesh, P(batch))
+        labels = _sds((n,), jnp.int32, mesh, P(batch))
+
+        def train_step(state, x_, src_, dst_, deg_, labels_, key_):
+            params_, opt_state = state
+
+            def loss_fn(pp):
+                # shard_map path: dst-partitioned edges, local scatter
+                # (hillclimb #3 iter 3; GSPMD gcn_forward is the baseline)
+                logits = gnn.gcn_forward_spmd(
+                    pp, x_, src_, dst_, deg_, mesh=mesh, axes=batch,
+                    cfg=cfg, policy=policy, key=key_)
+                onehot = jax.nn.one_hot(labels_, cfg.n_classes)
+                return -jnp.mean(jnp.sum(
+                    onehot * jax.nn.log_softmax(logits), -1))
+
+            loss, grads = jax.value_and_grad(loss_fn)(params_)
+            new_p, new_o = opt.update(grads, opt_state, params_)
+            return (new_p, new_o), {"loss": loss}
+
+        return Cell(arch, shape, train_step,
+                    ((rep, opt_sh), x, src, dst, deg, labels, key),
+                    donate=(0,), rules=rules)
+
+    if shape.kind == "minibatch":
+        seeds = p["batch_nodes"]
+        fanouts = list(p["fanouts"])
+        d_feat = 602  # reddit-scale features (232,965 nodes / 114M edges)
+        blocks = []
+        # build outermost-first static block shapes
+        sizes = [seeds]
+        for f in fanouts:
+            sizes.append(sizes[-1] * (f + 1))
+        # sizes = [1024, 1024*16, 1024*16*11] for fanouts (15, 10)
+        sizes = sizes[::-1]
+        for i in range(len(fanouts)):
+            n_src_b, n_dst_b = sizes[i], sizes[i + 1]
+            f = list(reversed(fanouts))[i]
+            e_b = n_dst_b * (f + 1)
+            blocks.append({
+                "src": _sds((e_b,), jnp.int32, mesh, P(batch)),
+                "dst": _sds((e_b,), jnp.int32, mesh, P(batch)),
+                "n_src": n_src_b, "n_dst": n_dst_b,
+            })
+        x = _sds((sizes[0], d_feat), jnp.float32, mesh, P(batch, None))
+        labels = _sds((seeds,), jnp.int32, mesh, P(batch))
+        cfg_mb = dataclasses.replace(cfg, d_in=d_feat, n_classes=41)
+
+        def train_step(state, x_, b0_src, b0_dst, b1_src, b1_dst, labels_,
+                       key_):
+            params_, opt_state = state
+            jb = [
+                {"src": b0_src, "dst": b0_dst,
+                 "n_src": blocks[0]["n_src"], "n_dst": blocks[0]["n_dst"]},
+                {"src": b1_src, "dst": b1_dst,
+                 "n_src": blocks[1]["n_src"], "n_dst": blocks[1]["n_dst"]},
+            ]
+
+            def loss_fn(pp):
+                logits = gnn.gcn_forward_blocks(pp, x_, jb, cfg=cfg_mb,
+                                                policy=policy, key=key_)
+                onehot = jax.nn.one_hot(labels_, cfg_mb.n_classes)
+                return -jnp.mean(jnp.sum(
+                    onehot * jax.nn.log_softmax(logits), -1))
+
+            loss, grads = jax.value_and_grad(loss_fn)(params_)
+            new_p, new_o = opt.update(grads, opt_state, params_)
+            return (new_p, new_o), {"loss": loss}
+
+        mb_shapes = jax.eval_shape(lambda k: gnn.init_params(k, cfg_mb),
+                                   jax.random.PRNGKey(0))
+        mb_rep = jax.tree_util.tree_map(
+            lambda s: _sds(s.shape, s.dtype, mesh,
+                           P(*([None] * len(s.shape)))), mb_shapes)
+        mb_opt = jax.tree_util.tree_map(
+            lambda s: _sds(s.shape, s.dtype, mesh,
+                           P(*([None] * len(s.shape)))),
+            jax.eval_shape(opt.init, mb_shapes))
+        return Cell(arch, shape, train_step,
+                    ((mb_rep, mb_opt), x,
+                     blocks[0]["src"], blocks[0]["dst"],
+                     blocks[1]["src"], blocks[1]["dst"], labels, key),
+                    donate=(0,), rules=rules)
+
+    # molecule: batched small graphs
+    B, n, e = p["batch"], p["n_nodes"], p["n_edges"]
+    d_feat = 32
+    cfg_m = dataclasses.replace(cfg, d_in=d_feat, n_classes=2)
+    x = _sds((B * n, d_feat), jnp.float32, mesh, P(batch, None))
+    src = _sds((B * (e + n),), jnp.int32, mesh, P(batch))
+    dst = _sds((B * (e + n),), jnp.int32, mesh, P(batch))
+    gid = _sds((B * n,), jnp.int32, mesh, P(batch))
+    labels = _sds((B,), jnp.int32, mesh, P(batch))
+    m_shapes = jax.eval_shape(lambda k: gnn.init_params(k, cfg_m),
+                              jax.random.PRNGKey(0))
+    m_rep = jax.tree_util.tree_map(
+        lambda s: _sds(s.shape, s.dtype, mesh, P(*([None] * len(s.shape)))),
+        m_shapes)
+    m_opt = jax.tree_util.tree_map(
+        lambda s: _sds(s.shape, s.dtype, mesh, P(*([None] * len(s.shape)))),
+        jax.eval_shape(opt.init, m_shapes))
+
+    def train_step(state, x_, src_, dst_, gid_, labels_, key_):
+        params_, opt_state = state
+
+        def loss_fn(pp):
+            logits = gnn.gcn_forward_batched(
+                pp, x_, src_, dst_, gid_, n_graphs=B, n_nodes=B * n,
+                cfg=cfg_m, policy=policy, key=key_)
+            onehot = jax.nn.one_hot(labels_, cfg_m.n_classes)
+            return -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), -1))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params_)
+        new_p, new_o = opt.update(grads, opt_state, params_)
+        return (new_p, new_o), {"loss": loss}
+
+    return Cell(arch, shape, train_step,
+                ((m_rep, m_opt), x, src, dst, gid, labels, key),
+                donate=(0,), rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+
+def _recsys_cell(arch: ArchSpec, shape: ShapeSpec, mesh,
+                 policy: ACTPolicy) -> Cell:
+    from repro.models import recsys
+    cfg = arch.model_cfg
+    p = shape.p()
+    batch = batch_axes(mesh)
+    allaxes = batch + ("model",)
+    rules = {"batch": batch}
+    opt = adam(1e-3)
+
+    def spec(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        if name.startswith("table") or name.startswith("linear"):
+            return P(allaxes, *([None] * (len(leaf.shape) - 1)))
+        return P(*([None] * len(leaf.shape)))
+
+    shapes = jax.eval_shape(lambda k: recsys.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    specs = jax.tree_util.tree_map_with_path(spec, shapes)
+    params = _apply_specs(shapes, specs, mesh)
+    key = _sds((2,), jnp.uint32, mesh, P(None))
+
+    if shape.kind == "train":
+        B = p["batch"]
+        opt_shapes = jax.eval_shape(opt.init, shapes)
+        opt_sh = {
+            "step": _sds((), jnp.int32, mesh, P()),
+            "mu": _apply_specs(opt_shapes["mu"], specs, mesh),
+            "nu": _apply_specs(opt_shapes["nu"], specs, mesh),
+        }
+        batch_in = {
+            "sparse": _sds((B, cfg.n_sparse), jnp.int32, mesh,
+                           P(batch, None)),
+            "dense": _sds((B, max(cfg.n_dense, 1)), jnp.float32, mesh,
+                          P(batch, None)),
+            "label": _sds((B,), jnp.float32, mesh, P(batch)),
+        }
+
+        def train_step(state, batch_, key_):
+            params_, opt_state = state
+
+            def loss_fn(pp):
+                logits = recsys.forward(pp, batch_, cfg, policy=policy,
+                                        key=key_)
+                lab = batch_["label"]
+                return -jnp.mean(lab * jax.nn.log_sigmoid(logits)
+                                 + (1 - lab) * jax.nn.log_sigmoid(-logits))
+
+            loss, grads = jax.value_and_grad(loss_fn)(params_)
+            new_p, new_o = opt.update(grads, opt_state, params_)
+            return (new_p, new_o), {"loss": loss}
+
+        return Cell(arch, shape, train_step,
+                    ((params, opt_sh), batch_in, key),
+                    donate=(0,), rules=rules)
+
+    if shape.kind == "serve":
+        B = p["batch"]
+        batch_in = {
+            "sparse": _sds((B, cfg.n_sparse), jnp.int32, mesh,
+                           P(batch, None)),
+            "dense": _sds((B, max(cfg.n_dense, 1)), jnp.float32, mesh,
+                          P(batch, None)),
+        }
+
+        def serve_step(params_, batch_):
+            return recsys.forward(params_, batch_, cfg, key=None)
+
+        return Cell(arch, shape, serve_step, (params, batch_in),
+                    rules=rules)
+
+    # retrieval: one query vs n_candidates (padded to shard over all axes)
+    n_cand = _ru(p["n_candidates"])
+    query = {"sparse": _sds((cfg.n_sparse,), jnp.int32, mesh, P(None))}
+    cand = _sds((n_cand,), jnp.int32, mesh, P(allaxes))
+
+    def retrieval_step(params_, query_, cand_):
+        return recsys.retrieval_scores(params_, query_, cand_, cfg)
+
+    return Cell(arch, shape, retrieval_step, (params, query, cand),
+                rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# KGNN (the paper's own architectures, at Amazon-Book scale)
+# ---------------------------------------------------------------------------
+
+
+def _kgnn_cell(arch: ArchSpec, shape: ShapeSpec, mesh,
+               policy: ACTPolicy) -> Cell:
+    from repro.models import kgnn
+    cfg = arch.model_cfg
+    p = shape.p()
+    batch = batch_axes(mesh)
+    rules = {"batch": batch}
+    opt = adam(1e-3)
+    n_tri = _ru(p["n_triples"])
+    B = p["batch"]
+    # pad the node space so the entity table row-shards over the batch axes
+    pad_nodes = _ru(cfg.n_nodes) - cfg.n_nodes
+    cfg = dataclasses.replace(cfg, n_entities=cfg.n_entities + pad_nodes)
+
+    shapes = jax.eval_shape(lambda k: kgnn.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+
+    def spec(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        if name == "entity":
+            return P(batch, None)
+        return P(*([None] * len(leaf.shape)))
+
+    specs = jax.tree_util.tree_map_with_path(spec, shapes)
+    params = _apply_specs(shapes, specs, mesh)
+    opt_shapes = jax.eval_shape(opt.init, shapes)
+    opt_sh = {
+        "step": _sds((), jnp.int32, mesh, P()),
+        "mu": _apply_specs(opt_shapes["mu"], specs, mesh),
+        "nu": _apply_specs(opt_shapes["nu"], specs, mesh),
+    }
+    g = kgnn.CKG(
+        src=_sds((n_tri,), jnp.int32, mesh, P(batch)),
+        dst=_sds((n_tri,), jnp.int32, mesh, P(batch)),
+        rel=_sds((n_tri,), jnp.int32, mesh, P(batch)),
+        n_nodes=cfg.n_nodes, n_relations=cfg.n_relations)
+    batch_in = {
+        "user": _sds((B,), jnp.int32, mesh, P(batch)),
+        "pos": _sds((B,), jnp.int32, mesh, P(batch)),
+        "neg": _sds((B,), jnp.int32, mesh, P(batch)),
+    }
+    key = _sds((2,), jnp.uint32, mesh, P(None))
+
+    if cfg.model == "kgat":
+        # dst-partitioned shard_map propagation (§Perf hillclimb #3
+        # applied to the paper's own arch)
+        def train_step(state, g_, batch_, key_):
+            params_, opt_state = state
+
+            def loss_fn(pp):
+                reps = kgnn.propagate_spmd(pp, g_, cfg, mesh=mesh,
+                                           axes=batch, policy=policy,
+                                           key=key_)
+                pos = kgnn.score_pairs(reps, batch_["user"], batch_["pos"],
+                                       cfg.n_users)
+                neg = kgnn.score_pairs(reps, batch_["user"], batch_["neg"],
+                                       cfg.n_users)
+                loss = -jnp.mean(jax.nn.log_sigmoid(pos - neg))
+                reg = sum(jnp.sum(x ** 2)
+                          for x in jax.tree_util.tree_leaves(pp))
+                return loss + cfg.l2 * reg
+
+            loss, grads = jax.value_and_grad(loss_fn)(params_)
+            new_p, new_o = opt.update(grads, opt_state, params_)
+            return (new_p, new_o), {"loss": loss}
+    else:
+        def train_step(state, g_, batch_, key_):
+            params_, opt_state = state
+            loss, grads = jax.value_and_grad(kgnn.bpr_loss)(
+                params_, g_, batch_, cfg, policy=policy, key=key_)
+            new_p, new_o = opt.update(grads, opt_state, params_)
+            return (new_p, new_o), {"loss": loss}
+
+    return Cell(arch, shape, train_step, ((params, opt_sh), g, batch_in, key),
+                donate=(0,), rules=rules)
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch: ArchSpec, shape_name: str, mesh, *,
+               policy: ACTPolicy = INT2) -> Cell:
+    shape = arch.shape(shape_name)
+    fam = arch.family
+    if fam in ("lm", "moe_lm"):
+        return _lm_cell(arch, shape, mesh, policy)
+    if fam == "gnn":
+        return _gnn_cell(arch, shape, mesh, policy)
+    if fam == "recsys":
+        return _recsys_cell(arch, shape, mesh, policy)
+    if fam == "kgnn":
+        return _kgnn_cell(arch, shape, mesh, policy)
+    raise ValueError(fam)

@@ -1,0 +1,92 @@
+"""Generate the EXPERIMENTS.md roofline tables from dry-run artifacts.
+
+  PYTHONPATH=src python -m repro.launch.report \
+      --baseline artifacts/dryrun --optimized artifacts/dryrun_opt
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_dir(d: str) -> dict:
+    out = {}
+    for p in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(p))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.2f}ms"
+
+
+def roofline_table(recs: dict, mesh: str) -> list[str]:
+    lines = [
+        "| arch | shape | compute | memory | collective | bottleneck | "
+        "peak GB/dev | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh or not r.get("ok"):
+            continue
+        rf = r["roofline"]
+        mem = r["memory"]["peak_gb"]
+        frac = rf.get("roofline_fraction")
+        lines.append(
+            f"| {arch} | {shape} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"{rf['dominant'].replace('_s','')} | {mem:.2f} | "
+            f"{'' if frac is None else f'{100*frac:.1f}%'} |")
+    return lines
+
+
+def dryrun_table(recs: dict) -> list[str]:
+    lines = [
+        "| arch | shape | mesh | compile | peak GB/dev | arg GB | status |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, m), r in sorted(recs.items()):
+        if r.get("ok"):
+            lines.append(
+                f"| {arch} | {shape} | {m} | {r['compile_s']}s | "
+                f"{r['memory']['peak_gb']:.2f} | "
+                f"{r['memory']['argument_gb']:.2f} | ok |")
+        else:
+            lines.append(f"| {arch} | {shape} | {m} | - | - | - | "
+                         f"FAIL: {r.get('error','?')[:60]} |")
+    return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="artifacts/dryrun")
+    ap.add_argument("--optimized", default="artifacts/dryrun_opt")
+    ap.add_argument("--out", default="artifacts/report.md")
+    args = ap.parse_args()
+    base = load_dir(args.baseline)
+    opt = load_dir(args.optimized)
+
+    parts = ["## Dry-run (optimized framework, both meshes)\n"]
+    parts += dryrun_table(opt)
+    parts.append("\n## Roofline — single-pod 16x16, optimized\n")
+    parts += roofline_table(opt, "16x16")
+    parts.append("\n## Roofline — multi-pod 2x16x16, optimized\n")
+    parts += roofline_table(opt, "2x16x16")
+    parts.append("\n## Baseline (paper-faithful, pre-§Perf) single-pod\n")
+    parts += roofline_table(base, "16x16")
+    with open(args.out, "w") as f:
+        f.write("\n".join(parts) + "\n")
+    print("wrote", args.out, f"({len(opt)} optimized, {len(base)} baseline "
+          f"cells)")
+
+
+if __name__ == "__main__":
+    main()

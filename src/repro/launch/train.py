@@ -1,0 +1,172 @@
+"""Training launcher: ``--arch <id>`` + shape -> fault-tolerant train loop.
+
+On real hardware the mesh comes from ``make_production_mesh``; on this CPU
+host it builds a 1x1 mesh and runs the reduced config end-to-end (the full
+configs are exercised via dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch kgat --steps 100
+  PYTHONPATH=src python -m repro.launch.train --arch fm --steps 50 --bits 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get
+from repro.configs.smoke import reduced
+from repro.core import step_key
+from repro.core.policy import policy_for_bits
+from repro.training.optimizer import adam
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def _kgnn_job(arch, policy, args):
+    from repro.data.synthetic import bpr_batches, gen_kg_dataset
+    from repro.models import kgnn
+    ds = gen_kg_dataset(n_users=120, n_items=200, n_attrs=80, seed=0)
+    cfg = kgnn.KGNNConfig(
+        model=arch.model_cfg.model, n_users=ds.n_users,
+        n_entities=ds.n_entities, n_relations=ds.n_relations,
+        dim=32, n_layers=3,
+        readout="concat" if arch.model_cfg.model == "kgat" else "sum")
+    g = jax.tree_util.tree_map(jnp.asarray, ds.graph)
+    params = kgnn.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adam(3e-3)
+    root = jax.random.PRNGKey(1)
+
+    @jax.jit
+    def train_step(state, batch, step):
+        params, opt_state = state
+        loss, grads = jax.value_and_grad(kgnn.bpr_loss)(
+            params, g, batch, cfg, policy=policy, key=step_key(root, step))
+        params, opt_state = opt.update(grads, opt_state, params)
+        return (params, opt_state), {"loss": loss}
+
+    def data():
+        for b in bpr_batches(ds, 512, seed=2):
+            yield jax.tree_util.tree_map(jnp.asarray, b)
+
+    return train_step, (params, opt.init(params)), data()
+
+
+def _lm_job(arch, policy, args):
+    from repro.data.synthetic import lm_batches
+    from repro.models import transformer as tf
+    cfg = reduced(arch).model_cfg
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adam(1e-3)
+    root = jax.random.PRNGKey(1)
+
+    @jax.jit
+    def train_step(state, batch, step):
+        params, opt_state = state
+        loss, grads = jax.value_and_grad(tf.lm_loss)(
+            params, batch, cfg=cfg, policy=policy, key=step_key(root, step))
+        params, opt_state = opt.update(grads, opt_state, params)
+        return (params, opt_state), {"loss": loss}
+
+    def data():
+        for b in lm_batches(vocab=cfg.vocab, batch=8, seq=64, seed=0):
+            yield {"tokens": jnp.asarray(b["tokens"])}
+
+    return train_step, (params, opt.init(params)), data()
+
+
+def _recsys_job(arch, policy, args):
+    from repro.data.synthetic import criteo_batches
+    from repro.models import recsys
+    cfg = reduced(arch).model_cfg
+    params = recsys.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adam(1e-3)
+    root = jax.random.PRNGKey(1)
+
+    @jax.jit
+    def train_step(state, batch, step):
+        params, opt_state = state
+
+        def loss_fn(p):
+            logits = recsys.forward(p, batch, cfg, policy=policy,
+                                    key=step_key(root, step))
+            lab = batch["label"]
+            return -jnp.mean(lab * jax.nn.log_sigmoid(logits)
+                             + (1 - lab) * jax.nn.log_sigmoid(-logits))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return (params, opt_state), {"loss": loss}
+
+    def data():
+        for b in criteo_batches(batch=256, n_dense=max(cfg.n_dense, 1),
+                                vocab_sizes=cfg.vocab_sizes, seed=3):
+            yield jax.tree_util.tree_map(jnp.asarray, b)
+
+    return train_step, (params, opt.init(params)), data()
+
+
+def _gnn_job(arch, policy, args):
+    from repro.data.synthetic import cora_like
+    from repro.models import gnn
+    cfg = reduced(arch).model_cfg
+    feats, src, dst, labels = cora_like(n_nodes=300, d_feat=cfg.d_in)
+    x, s, d, y = map(jnp.asarray, (feats, src, dst, labels))
+    params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adam(1e-2)
+    root = jax.random.PRNGKey(1)
+
+    @jax.jit
+    def train_step(state, batch, step):
+        params, opt_state = state
+
+        def loss_fn(p):
+            logits = gnn.gcn_forward(p, x, s, d, n_nodes=300, cfg=cfg,
+                                     policy=policy, key=step_key(root, step))
+            oh = jax.nn.one_hot(y, cfg.n_classes)
+            return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return (params, opt_state), {"loss": loss}
+
+    def data():
+        while True:
+            yield {}
+
+    return train_step, (params, opt.init(params)), data()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--bits", type=int, default=2, help="0 = FP32 baseline")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+    arch = get(args.arch)
+    policy = policy_for_bits(args.bits if args.bits else None)
+
+    job = {
+        "kgnn": _kgnn_job, "lm": _lm_job, "moe_lm": _lm_job,
+        "recsys": _recsys_job, "gnn": _gnn_job,
+    }[arch.family]
+    train_step, state, data = job(arch, policy, args)
+    n = sum(x.size for x in jax.tree_util.tree_leaves(state[0]))
+    print(f"[train] {args.arch} ({arch.family}) {n/1e6:.2f}M params "
+          f"bits={args.bits}")
+    cfg = TrainerConfig(
+        total_steps=args.steps,
+        ckpt_dir=args.ckpt or tempfile.mkdtemp(prefix="repro_ckpt_"),
+        ckpt_every=max(args.steps // 4, 10), log_every=max(args.steps // 8, 5))
+    trainer = Trainer(train_step, state, data, cfg).restore_if_available()
+    trainer.run()
+    losses = [h["loss"] for h in trainer.history]
+    print(f"[train] done; loss {losses[0]:.4f} -> {losses[-1]:.4f}"
+          if losses else "[train] done")
+
+
+if __name__ == "__main__":
+    main()

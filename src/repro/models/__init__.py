@@ -1,0 +1,1 @@
+"""Model substrates: KGNNs (paper targets), LM transformers, GNN, recsys."""

@@ -1,0 +1,141 @@
+"""Attention: chunked-causal (train/prefill) + cached decode, GQA + RoPE.
+
+Training attention is a pure-JAX flash-style double scan (online softmax
+over KV chunks inside a scan over Q chunks) so the S×S score matrix is
+never materialized — per-step working set is O(q_chunk × kv_chunk). This
+is the memory-safe formulation the dry-run compiles at seq 4k–32k.
+
+GQA uses the grouped einsum formulation (no materialized KV repeat).
+Decode attends one query against a (possibly sequence-sharded) KV cache;
+GSPMD turns the softmax reductions over a sharded seq axis into the
+partial-max/partial-sum collectives of flash-decode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.logical import constraint
+
+__all__ = ["rope", "chunked_causal_attention", "decode_attention"]
+
+_NEG = -1e30
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D), positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # broadcast over heads: (..., S, 1, half)
+    cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                             q_chunk: int = 512, kv_chunk: int = 512):
+    """Causal attention. q: (B,S,H,D); k,v: (B,S,Kh,D); returns (B,S,H,D)."""
+    B, S, H, D = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    scale = D ** -0.5
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, S)
+    # pad S up to a chunk multiple; padded keys sit at positions > every real
+    # query so the causal mask hides them, padded query rows are sliced off
+    import math as _math
+    lcm = q_chunk * kv_chunk // _math.gcd(q_chunk, kv_chunk)
+    S_pad = -(-S // lcm) * lcm
+    if S_pad != S:
+        pad = [(0, 0), (0, S_pad - S), (0, 0), (0, 0)]
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    S_orig, S = S, S_pad
+    nq, nk = S // q_chunk, S // kv_chunk
+
+    # Two structural choices measured in EXPERIMENTS.md §Perf hillclimb #1:
+    #
+    # 1. Flat-head formulation: KV is repeated to H inside each chunk
+    #    (local — KV heads are replicated under TP) so every big tensor
+    #    carries the H dim, which shards over `model`. The grouped (Kh, G)
+    #    form leaves GSPMD nothing divisible (e.g. 8×12 on a 16-way axis)
+    #    and replicates the score tensors — 13.7x memory-term blowup on
+    #    mistral prefill_32k.
+    #
+    # 2. Triangular block schedule: the outer q loop is UNROLLED (python)
+    #    so each q-chunk's inner scan has a STATIC triangular length —
+    #    fully-masked blocks are never traced at all (the naive nq×nk
+    #    double scan wastes ~2x FLOPs and bytes on causal masking), and
+    #    the online-softmax carry stays chunk-local (a full-width carry
+    #    variant measured +26% memory-term — see §Perf hillclimb #1).
+    p_dt = jnp.bfloat16 if q.dtype == jnp.bfloat16 else jnp.float32
+
+    def kv_block(carry, kj, qb, qpos):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, kj * kv_chunk, kv_chunk, 1)
+        vb = jax.lax.dynamic_slice_in_dim(v, kj * kv_chunk, kv_chunk, 1)
+        if G > 1:
+            kb = jnp.repeat(kb, G, axis=2)                 # (B,kc,H,D)
+            vb = jnp.repeat(vb, G, axis=2)
+        kb = constraint(kb, "batch", None, "heads", None)
+        vb = constraint(vb, "batch", None, "heads", None)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb,
+                       preferred_element_type=jnp.float32) * scale
+        s = constraint(s, "batch", "heads", None, None)
+        kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask, s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0).astype(p_dt)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, dtype=jnp.float32)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(p_dt),
+            preferred_element_type=jnp.float32)
+        acc_new = constraint(acc_new, "batch", "heads", None, None)
+        return (m_new, l_new, acc_new), None
+
+    outs = []
+    for qi in range(nq):
+        qb = jax.lax.slice_in_dim(q, qi * q_chunk, (qi + 1) * q_chunk,
+                                  axis=1)
+        qb = constraint(qb, "batch", None, "heads", None)
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+        nk_i = min(((qi + 1) * q_chunk - 1) // kv_chunk + 1, nk)
+        init = (
+            jnp.full((B, H, q_chunk), _NEG, jnp.float32),
+            jnp.zeros((B, H, q_chunk), jnp.float32),
+            jnp.zeros((B, H, q_chunk, D), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            lambda c, kj: kv_block(c, kj, qb, qpos), init,
+            jnp.arange(nk_i))
+        out_i = acc / jnp.maximum(l, 1e-30)[..., None]     # (B,H,qc,D)
+        outs.append(jnp.transpose(out_i, (0, 2, 1, 3)))    # (B,qc,H,D)
+    out = jnp.concatenate(outs, axis=1).astype(q.dtype)
+    return out[:, :S_orig]
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array):
+    """One-token decode. q: (B,1,H,D); caches: (B,Smax,Kh,D).
+
+    Positions >= cache_len are masked. Over a sequence-sharded cache this
+    lowers to flash-decode-style partial softmax collectives under GSPMD.
+    """
+    B, _, H, D = q.shape
+    Smax, Kh = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, Kh, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * (D ** -0.5)
+    mask = jnp.arange(Smax)[None, None, None, :] < cache_len
+    s = jnp.where(mask, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)

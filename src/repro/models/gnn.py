@@ -1,0 +1,176 @@
+"""GCN (Kipf & Welling, arXiv:1609.02907) — assigned arch ``gcn-cora``.
+
+Three execution regimes per the assigned shapes:
+  * full-batch     (full_graph_sm / ogb_products): propagate over all nodes
+  * sampled        (minibatch_lg): fanout-sampled block adjacencies from
+                    ``repro.data.sampler`` (15-10 two-hop)
+  * batched graphs (molecule): block-diagonal edge offsets, graph readout
+
+Symmetric normalization D^-1/2 A D^-1/2 is folded into node scalings around
+an unweighted ``act_spmm`` (exact — the aggregation is linear, so only the
+transform/nonlinearity activations are compressed, matching paper Eq. 2
+where ∇E = ctx(Â, ∇H) needs no activation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ACTPolicy, FP32, KeyChain, act_matmul, act_relu, act_spmm
+from repro.sharding.logical import constraint
+
+from .layers import glorot
+
+__all__ = ["GCNConfig", "init_params", "gcn_forward", "gcn_forward_blocks",
+           "gcn_forward_batched", "activation_shapes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    n_layers: int = 2
+    d_in: int = 1433        # cora features
+    d_hidden: int = 16
+    n_classes: int = 7
+    aggregator: str = "mean"   # paper config: mean with sym norm
+    norm: str = "sym"
+    # Â(XW) == (ÂX)W — when d_in > d_out, transforming BEFORE aggregating
+    # moves 6-90x less data through the gather/scatter collectives
+    # (EXPERIMENTS.md §Perf hillclimb #3). False reproduces the naive order.
+    transform_first: bool = True
+    # all-gather node features in bf16 (TinyKG's compression premise
+    # applied to the fabric); accumulation stays f32
+    compressed_gather: bool = True
+
+
+def init_params(key: jax.Array, cfg: GCNConfig) -> dict:
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    keys = jax.random.split(key, len(dims) - 1)
+    return {"w": [glorot(k, (a, b)) for k, a, b in zip(keys, dims[:-1], dims[1:])]}
+
+
+def _sym_norm(src, dst, n_nodes, dtype=jnp.float32):
+    deg = jax.ops.segment_sum(jnp.ones_like(src, dtype=dtype), dst,
+                              num_segments=n_nodes)
+    return jax.lax.rsqrt(jnp.maximum(deg, 1.0))
+
+
+def gcn_forward(params, x, src, dst, *, n_nodes: int, cfg: GCNConfig,
+                policy: ACTPolicy = FP32, key=None):
+    """Full-batch GCN: Z = Â ... σ(Â X W0) W1 with self-loops assumed in edges."""
+    keys = KeyChain(key if key is not None else jax.random.PRNGKey(0))
+    dinv = _sym_norm(src, dst, n_nodes, x.dtype)
+    h = x
+    for l, w in enumerate(params["w"]):
+        pre = cfg.transform_first and w.shape[0] > w.shape[1]
+        if pre:  # (ÂX)W == Â(XW): aggregate the narrow side
+            h = act_matmul(h, w, key=keys.next(), policy=policy)
+        h = h * dinv[:, None]
+        h = act_spmm(h, src, dst, None, num_nodes=n_nodes,
+                     key=keys.next(), policy=policy)
+        # pin the aggregation output row-sharded: GSPMD then emits
+        # reduce-scatter (1x payload) instead of all-reduce (2x)
+        h = constraint(h, "batch", None)
+        h = h * dinv[:, None]
+        if not pre:
+            h = act_matmul(h, w, key=keys.next(), policy=policy)
+        if l < len(params["w"]) - 1:
+            h = act_relu(h)
+    return h
+
+
+def gcn_forward_spmd(params, x, src_g, dst_l, deg, *, mesh, axes,
+                     cfg: GCNConfig, policy: ACTPolicy = FP32, key=None):
+    """Explicitly-partitioned full-graph GCN (shard_map aggregation).
+
+    Production layout (EXPERIMENTS.md §Perf hillclimb #3, iter 3):
+      * node rows sharded over ``axes``; edges partitioned BY DESTINATION
+        shard by the input pipeline (sorted + padded to equal counts)
+      * ``src_g`` holds GLOBAL source ids, ``dst_l`` LOCAL destination rows
+      * per layer: one tiled all-gather of the (narrow) feature matrix;
+        gather + segment_sum run entirely shard-local — no all-reduce.
+    Autodiff through shard_map gives the transposed schedule for free
+    (all-gatherᵀ = reduce-scatter).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    keys = KeyChain(key if key is not None else jax.random.PRNGKey(0))
+    dinv = jax.lax.rsqrt(jnp.maximum(deg, 1.0))
+
+    def agg_local(x_loc, src_, dst_):
+        # bf16 wire format: the upcast must sit AFTER the segment_sum or
+        # XLA's convert-mover hoists it back across the all-gather (the
+        # scatter-add is the commute barrier). Accumulating ~deg values in
+        # bf16 costs <0.4% error at deg≈25 — same class as ACT noise.
+        xs = x_loc.astype(jnp.bfloat16) if cfg.compressed_gather else x_loc
+        x_full = jax.lax.all_gather(xs, axes, axis=0, tiled=True)
+        agg_v = jax.ops.segment_sum(x_full[src_], dst_,
+                                    num_segments=x_loc.shape[0])
+        return agg_v.astype(x_loc.dtype)
+
+    agg = jax.shard_map(
+        agg_local, mesh=mesh,
+        in_specs=(P(axes, None), P(axes), P(axes)),
+        out_specs=P(axes, None))
+
+    h = x
+    for l, w in enumerate(params["w"]):
+        pre = cfg.transform_first and w.shape[0] > w.shape[1]
+        if pre:
+            h = act_matmul(h, w, key=keys.next(), policy=policy)
+        h = h * dinv[:, None]
+        h = agg(h, src_g, dst_l)
+        h = h * dinv[:, None]
+        if not pre:
+            h = act_matmul(h, w, key=keys.next(), policy=policy)
+        if l < len(params["w"]) - 1:
+            h = act_relu(h)
+    return h
+
+
+def gcn_forward_blocks(params, x, blocks, *, cfg: GCNConfig,
+                       policy: ACTPolicy = FP32, key=None):
+    """Sampled-minibatch GCN over fanout blocks (GraphSAGE-style training).
+
+    ``blocks``: list (outermost hop first) of dicts with
+      src, dst : int32 (E_b,) indices LOCAL to the block's src/dst node sets
+      n_src, n_dst : static sizes (padded)
+    ``x``: features of the outermost src node set.
+    """
+    keys = KeyChain(key if key is not None else jax.random.PRNGKey(0))
+    h = x
+    for l, (w, blk) in enumerate(zip(params["w"], blocks)):
+        deg = jax.ops.segment_sum(
+            jnp.ones_like(blk["src"], dtype=h.dtype), blk["dst"],
+            num_segments=blk["n_dst"])
+        agg = act_spmm(h, blk["src"], blk["dst"], None,
+                       num_nodes=blk["n_dst"], key=keys.next(), policy=policy)
+        h = agg / jnp.maximum(deg, 1.0)[:, None]
+        h = act_matmul(h, w, key=keys.next(), policy=policy)
+        if l < len(params["w"]) - 1:
+            h = act_relu(h)
+    return h
+
+
+def gcn_forward_batched(params, x, src, dst, graph_ids, *, n_graphs: int,
+                        n_nodes: int, cfg: GCNConfig,
+                        policy: ACTPolicy = FP32, key=None):
+    """Batched small graphs (molecule): block-diag edges + mean readout."""
+    node_logits = gcn_forward(params, x, src, dst, n_nodes=n_nodes, cfg=cfg,
+                              policy=policy, key=key)
+    pooled = jax.ops.segment_sum(node_logits, graph_ids, num_segments=n_graphs)
+    counts = jax.ops.segment_sum(jnp.ones((n_nodes,), x.dtype), graph_ids,
+                                 num_segments=n_graphs)
+    return pooled / jnp.maximum(counts, 1.0)[:, None]
+
+
+def activation_shapes(cfg: GCNConfig, n_nodes: int) -> dict:
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    shapes = {}
+    for l in range(cfg.n_layers):
+        shapes[f"H_{l}"] = (n_nodes, dims[l])       # matmul input
+        if l < cfg.n_layers - 1:
+            shapes[f"mask_{l}"] = (n_nodes, dims[l + 1])  # relu mask (1-bit)
+    return shapes

@@ -1,0 +1,98 @@
+"""Shared functional layers (no flax available — params are plain pytrees).
+
+Every layer is a pure function ``f(params, x, ...)``; initializers return
+nested dicts of jnp arrays. ACT integration: layers accept an ``ACTPolicy``
+and a ``KeyChain`` and route through ``repro.core.act`` ops, so any model
+built from these layers is TinyKG-compressible end to end.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ACTPolicy, KeyChain, act_dense, act_nonlin, act_relu
+
+__all__ = [
+    "glorot", "lecun", "normal_init",
+    "dense_params", "mlp_params", "mlp_apply",
+    "embedding_bag",
+]
+
+
+def glorot(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[-2], shape[-1]
+    lim = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, dtype, -lim, lim)
+
+
+def lecun(key, shape, dtype=jnp.float32):
+    fan_in = shape[-2]
+    return jax.random.normal(key, shape, dtype) / math.sqrt(fan_in)
+
+
+def normal_init(key, shape, stddev=0.02, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * stddev
+
+
+def dense_params(key, d_in: int, d_out: int, *, bias: bool = True,
+                 dtype=jnp.float32) -> dict:
+    p = {"w": glorot(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def mlp_params(key, dims: Sequence[int], *, bias: bool = True,
+               dtype=jnp.float32) -> list:
+    keys = jax.random.split(key, len(dims) - 1)
+    return [dense_params(k, a, b, bias=bias, dtype=dtype)
+            for k, a, b in zip(keys, dims[:-1], dims[1:])]
+
+
+def mlp_apply(params: list, x: jax.Array, *, policy: ACTPolicy,
+              keys: KeyChain, act: str = "relu",
+              final_act: bool = False) -> jax.Array:
+    """MLP with ACT-compressed matmuls + activations.
+
+    ReLU uses the exact 1-bit mask path; other activations store quantized
+    inputs per the policy.
+    """
+    n = len(params)
+    for i, p in enumerate(params):
+        x = act_dense(x, p["w"], p.get("b"), key=keys.next(), policy=policy)
+        if i < n - 1 or final_act:
+            if act == "relu":
+                x = act_relu(x)
+            else:
+                x = act_nonlin(x, key=keys.next(), policy=policy, fn=act)
+    return x
+
+
+def embedding_bag(table: jax.Array, idx: jax.Array, segment_ids: jax.Array,
+                  num_segments: int, *, weights: jax.Array | None = None,
+                  combiner: str = "sum") -> jax.Array:
+    """EmbeddingBag built from gather + segment_sum (JAX has no native op).
+
+    table        : (vocab, dim)
+    idx          : (nnz,) int — which rows to look up
+    segment_ids  : (nnz,) int — which output bag each lookup belongs to
+    num_segments : number of bags (static)
+
+    Lookup gradients flow through jnp.take's scatter-add — index residuals
+    only, so there is no activation map to compress here (see DESIGN.md).
+    """
+    rows = jnp.take(table, idx, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+    if combiner == "mean":
+        counts = jax.ops.segment_sum(jnp.ones_like(idx, dtype=rows.dtype),
+                                     segment_ids, num_segments=num_segments)
+        out = out / jnp.maximum(counts, 1.0)[:, None]
+    elif combiner != "sum":
+        raise ValueError(f"unknown combiner {combiner}")
+    return out

@@ -1,0 +1,204 @@
+"""RecSys architectures: FM, Wide&Deep, DLRM, xDeepFM.
+
+Embedding storage is ONE fused table ``(Σ vocab_f, dim)`` with static
+per-field offsets — the production layout that row-shards cleanly over the
+`model` mesh axis (DLRM hybrid parallelism). Lookups are ``jnp.take`` and
+multi-hot bags use ``embedding_bag`` (gather + segment_sum — JAX has no
+native EmbeddingBag; built here per the assignment).
+
+TinyKG integration: the interaction ops and MLPs run through the ACT layer
+(`act_matmul`/`act_relu`), compressing the activations that dominate train
+memory (batch 65,536 × wide MLPs). Embedding lookups themselves need no
+activation storage (index residuals only — same class as the paper's Â).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ACTPolicy, FP32, KeyChain, act_matmul, act_relu
+
+from .layers import embedding_bag, mlp_apply, mlp_params, normal_init
+
+__all__ = ["RecsysConfig", "init_params", "forward", "retrieval_scores",
+           "activation_shapes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    model: str                      # fm | wide_deep | dlrm | xdeepfm
+    n_sparse: int
+    vocab_sizes: tuple              # per-field vocab sizes
+    embed_dim: int
+    n_dense: int = 0
+    bot_mlp: tuple = ()             # dlrm bottom MLP dims (excl. input)
+    top_mlp: tuple = ()             # dlrm top MLP dims (incl. final 1)
+    mlp: tuple = ()                 # deep branch dims (wide_deep/xdeepfm)
+    cin_layers: tuple = ()          # xdeepfm CIN layer widths
+    interaction: str = "dot"
+    vocab_pad: int = 512            # fused table rows round up to this —
+    #                                 lets the table row-shard over any mesh
+
+    @property
+    def total_vocab(self) -> int:
+        n = int(sum(self.vocab_sizes))
+        return -(-n // self.vocab_pad) * self.vocab_pad
+
+    @property
+    def field_offsets(self) -> tuple:
+        off, acc = [], 0
+        for v in self.vocab_sizes:
+            off.append(acc)
+            acc += v
+        return tuple(off)
+
+
+def init_params(key: jax.Array, cfg: RecsysConfig) -> dict:
+    ks = iter(jax.random.split(key, 16))
+    F, k = cfg.n_sparse, cfg.embed_dim
+    p = {
+        "table": normal_init(next(ks), (cfg.total_vocab, k), 1.0 / k**0.5),
+        "linear": normal_init(next(ks), (cfg.total_vocab, 1), 0.01),
+        "bias": jnp.zeros(()),
+    }
+    if cfg.model == "wide_deep":
+        p["deep"] = mlp_params(next(ks), (F * k + cfg.n_dense,) + cfg.mlp + (1,))
+    elif cfg.model == "dlrm":
+        p["bot"] = mlp_params(next(ks), (cfg.n_dense,) + cfg.bot_mlp)
+        n_vec = F + 1  # embeddings + bottom-MLP output
+        d_int = n_vec * (n_vec - 1) // 2 + cfg.bot_mlp[-1]
+        p["top"] = mlp_params(next(ks), (d_int,) + cfg.top_mlp)
+    elif cfg.model == "xdeepfm":
+        h_prev = F
+        p["cin"] = []
+        for h in cfg.cin_layers:
+            p["cin"].append(normal_init(next(ks), (h_prev * F, h), 0.1))
+            h_prev = h
+        p["cin_out"] = normal_init(next(ks), (int(sum(cfg.cin_layers)), 1), 0.1)
+        p["deep"] = mlp_params(next(ks), (F * k,) + cfg.mlp + (1,))
+    elif cfg.model != "fm":
+        raise ValueError(cfg.model)
+    return p
+
+
+def _lookup(params, sparse_ids: jax.Array, cfg: RecsysConfig):
+    """(B, F) field-local ids -> (B, F, k) embeddings + (B,) linear term."""
+    offs = jnp.asarray(cfg.field_offsets, dtype=sparse_ids.dtype)
+    flat = sparse_ids + offs[None, :]
+    emb = jnp.take(params["table"], flat, axis=0)          # (B, F, k)
+    lin = jnp.take(params["linear"], flat, axis=0)[..., 0]  # (B, F)
+    return emb, jnp.sum(lin, axis=-1)
+
+
+def _fm_pairwise(emb: jax.Array) -> jax.Array:
+    """Σ_{i<j} <v_i, v_j> via the O(Fk) sum-square trick (Rendle '10)."""
+    s = jnp.sum(emb, axis=1)            # (B, k)
+    sq = jnp.sum(emb * emb, axis=1)     # (B, k)
+    return 0.5 * jnp.sum(s * s - sq, axis=-1)
+
+
+def _dot_interaction(vectors: jax.Array) -> jax.Array:
+    """DLRM: upper-triangle pairwise dots of (B, n, k) -> (B, n(n-1)/2)."""
+    gram = jnp.einsum("bnk,bmk->bnm", vectors, vectors)
+    n = vectors.shape[1]
+    iu, ju = jnp.triu_indices(n, k=1)
+    return gram[:, iu, ju]
+
+
+def _cin(params, x0: jax.Array, cfg: RecsysConfig, policy, keys):
+    """Compressed Interaction Network: x^l_h = Σ_{ij} W^l_{h,ij}(x^{l-1}_i ⊙ x^0_j)."""
+    B, F, k = x0.shape
+    xs, pooled = x0, []
+    for w in params["cin"]:
+        # outer product along fields, contracted against W via one matmul:
+        # z (B, H_prev*F, k) -> transpose to (B, k, H_prev*F) @ (H_prev*F, H)
+        z = jnp.einsum("bhk,bfk->bhfk", xs, x0).reshape(B, -1, k)
+        zt = jnp.swapaxes(z, 1, 2)                       # (B, k, H_prev*F)
+        xs = jnp.swapaxes(
+            act_matmul(zt, w, key=keys.next(), policy=policy), 1, 2)  # (B, H, k)
+        pooled.append(jnp.sum(xs, axis=-1))              # (B, H)
+    return jnp.concatenate(pooled, axis=-1)
+
+
+def forward(params: dict, batch: dict, cfg: RecsysConfig, *,
+            policy: ACTPolicy = FP32, key: jax.Array | None = None):
+    """Returns logits (B,). batch: sparse (B,F) int32 [+ dense (B,n_dense)]."""
+    keys = KeyChain(key if key is not None else jax.random.PRNGKey(0))
+    emb, lin = _lookup(params, batch["sparse"], cfg)
+    B = emb.shape[0]
+
+    if cfg.model == "fm":
+        return params["bias"] + lin + _fm_pairwise(emb)
+
+    if cfg.model == "wide_deep":
+        x = emb.reshape(B, -1)
+        if cfg.n_dense:
+            x = jnp.concatenate([x, batch["dense"]], axis=-1)
+        deep = mlp_apply(params["deep"], x, policy=policy, keys=keys)[:, 0]
+        return params["bias"] + lin + deep
+
+    if cfg.model == "dlrm":
+        bot = mlp_apply(params["bot"], batch["dense"], policy=policy,
+                        keys=keys, final_act=True)       # (B, k)
+        vecs = jnp.concatenate([bot[:, None, :], emb], axis=1)
+        inter = _dot_interaction(vecs)                   # (B, n(n-1)/2)
+        top_in = jnp.concatenate([bot, inter], axis=-1)
+        return mlp_apply(params["top"], top_in, policy=policy, keys=keys)[:, 0]
+
+    if cfg.model == "xdeepfm":
+        cin_feats = _cin(params, emb, cfg, policy, keys)
+        cin_logit = act_matmul(cin_feats, params["cin_out"], key=keys.next(),
+                               policy=policy)[:, 0]
+        deep = mlp_apply(params["deep"], emb.reshape(B, -1), policy=policy,
+                         keys=keys)[:, 0]
+        return params["bias"] + lin + cin_logit + deep
+
+    raise ValueError(cfg.model)
+
+
+def retrieval_scores(params: dict, query: dict, cand_ids: jax.Array,
+                     cfg: RecsysConfig, *, item_field: int = 0):
+    """Score ONE query against N candidates as a single batched dot.
+
+    Two-tower factorization: user vector = Σ field embeddings of the query
+    (candidate field excluded); candidate vector = its embedding row. This
+    is the standard retrieval head — full interaction models re-rank the
+    top-K afterwards (serve_p99 path).
+    """
+    emb, _ = _lookup(params, query["sparse"][None, :], cfg)   # (1, F, k)
+    mask = jnp.arange(cfg.n_sparse) != item_field
+    user_vec = jnp.sum(emb[0] * mask[:, None], axis=0)        # (k,)
+    off = cfg.field_offsets[item_field]
+    cand = jnp.take(params["table"], cand_ids + off, axis=0)  # (N, k)
+    cand_lin = jnp.take(params["linear"], cand_ids + off, axis=0)[:, 0]
+    return cand @ user_vec + cand_lin
+
+
+def activation_shapes(cfg: RecsysConfig, batch: int) -> dict:
+    """Saved-activation shapes per train step (Table 5-style accounting)."""
+    F, k = cfg.n_sparse, cfg.embed_dim
+    shapes: dict = {}
+    if cfg.model == "wide_deep":
+        dims = (F * k + cfg.n_dense,) + cfg.mlp
+        for i, d in enumerate(dims):
+            shapes[f"mlp_in_{i}"] = (batch, d)
+    elif cfg.model == "dlrm":
+        for i, d in enumerate((cfg.n_dense,) + cfg.bot_mlp[:-1]):
+            shapes[f"bot_in_{i}"] = (batch, d)
+        n_vec = F + 1
+        d_int = n_vec * (n_vec - 1) // 2 + cfg.bot_mlp[-1]
+        for i, d in enumerate((d_int,) + cfg.top_mlp[:-1]):
+            shapes[f"top_in_{i}"] = (batch, d)
+    elif cfg.model == "xdeepfm":
+        h_prev = F
+        for i, h in enumerate(cfg.cin_layers):
+            shapes[f"cin_z_{i}"] = (batch, k, h_prev * F)
+            h_prev = h
+        for i, d in enumerate((F * k,) + cfg.mlp):
+            shapes[f"deep_in_{i}"] = (batch, d)
+    else:  # fm: only the embedding sums (linear op) — nothing saved
+        shapes["emb"] = (batch, F * k)
+    return shapes

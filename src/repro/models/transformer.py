@@ -1,0 +1,374 @@
+"""Decoder-only LM (dense + MoE): GQA, RoPE, RMSNorm, SwiGLU.
+
+Scale discipline:
+  * ``jax.lax.scan`` over layers (stacked params) — HLO size and compile
+    time are O(1) in depth; mandatory for 88/64-layer dry-runs.
+  * per-block ACT: each block is wrapped in ``act_remat`` — the backward
+    recomputes the block from a b-bit quantized copy of its input, so the
+    only per-layer residual is the compressed residual stream (the TinyKG
+    mechanism applied block-wise, GACT/Mesa-style; policy "none" degrades
+    to plain ``jax.checkpoint`` — the FP32 baseline).
+  * attention is the chunked online-softmax form (attention.py) — no S×S
+    materialization.
+
+Serve path: ``init_cache`` + ``prefill`` + ``decode_step`` with a KV cache
+laid out (L, B, Smax, Kh, Dh); for ``long_500k`` the cache shards over the
+sequence axis (context parallelism — see launch/partition.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ACTPolicy, FP32, act_remat
+from repro.sharding.logical import constraint
+
+from .attention import chunked_causal_attention, decode_attention, rope
+from .moe import MoEConfig, moe_ffn, moe_params
+
+__all__ = ["TransformerConfig", "init_params", "forward", "lm_loss",
+           "init_cache", "prefill", "decode_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 128
+    rope_theta: float = 1e6
+    moe: MoEConfig | None = None
+    dtype: str = "float32"          # "float32" | "bfloat16"
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    norm_eps: float = 1e-5
+    # int8 KV cache (beyond-paper: TinyKG's quantizer on the serve path).
+    # Per-(token, head) row quantization over d_head, nearest rounding
+    # (inference — no gradient unbiasedness requirement). Halves cache
+    # HBM vs bf16; enabled per-shape by the launcher for decode cells.
+    kv_cache_bits: int | None = None
+
+    @property
+    def jdtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (for MODEL_FLOPS = 6·N·D roofline term)."""
+        d, L = self.d_model, self.n_layers
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * self.d_head \
+            + self.n_heads * self.d_head * d
+        if self.moe is not None:
+            ffn = self.moe.n_experts * 3 * d * self.moe.d_ff + d * self.moe.n_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        return L * (attn + ffn + 2 * d) + 2 * self.vocab * d + d
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top-k experts only)."""
+        if self.moe is None:
+            return self.n_params
+        d, L = self.d_model, self.n_layers
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * self.d_head \
+            + self.n_heads * self.d_head * d
+        ffn = self.moe.top_k * 3 * d * self.moe.d_ff + d * self.moe.n_experts
+        return L * (attn + ffn + 2 * d) + 2 * self.vocab * d + d
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def _block_params(key: jax.Array, cfg: TransformerConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    d, h, kh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = cfg.jdtype
+    s = d ** -0.5
+    p = {
+        "ln1": jnp.ones((d,), dt),
+        "ln2": jnp.ones((d,), dt),
+        "wq": jax.random.normal(ks[0], (d, h * dh), dt) * s,
+        "wk": jax.random.normal(ks[1], (d, kh * dh), dt) * s,
+        "wv": jax.random.normal(ks[2], (d, kh * dh), dt) * s,
+        "wo": jax.random.normal(ks[3], (h * dh, d), dt) * (h * dh) ** -0.5,
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_params(ks[4], d, cfg.moe, dt)
+    else:
+        p["w_gate"] = jax.random.normal(ks[5], (d, cfg.d_ff), dt) * s
+        p["w_up"] = jax.random.normal(ks[6], (d, cfg.d_ff), dt) * s
+        p["w_down"] = jax.random.normal(ks[7], (cfg.d_ff, d), dt) * cfg.d_ff ** -0.5
+    return p
+
+
+def init_params(key: jax.Array, cfg: TransformerConfig) -> dict:
+    k_emb, k_head, k_blocks = jax.random.split(key, 3)
+    dt = cfg.jdtype
+    blocks = jax.vmap(lambda k: _block_params(k, cfg))(
+        jax.random.split(k_blocks, cfg.n_layers))
+    return {
+        "emb": jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), dt) * 0.02,
+        "blocks": blocks,   # every leaf stacked: (L, ...)
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+        "head": jax.random.normal(k_head, (cfg.d_model, cfg.vocab), dt)
+        * cfg.d_model ** -0.5,
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _rmsnorm(x, gamma, eps):
+    xf = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * r).astype(x.dtype) * gamma
+
+
+def _block_fwd(cfg: TransformerConfig):
+    """Returns fn(params_l, x, positions) -> y; closed over static cfg only."""
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+
+    def fn(p, x, positions):
+        B, S, d = x.shape
+        x = constraint(x, "batch", "seq", "embed")
+        y = _rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q = (y @ p["wq"]).reshape(B, S, h, dh)
+        k = (y @ p["wk"]).reshape(B, S, kh, dh)
+        v = (y @ p["wv"]).reshape(B, S, kh, dh)
+        # attention internals run over the FULL sequence: Megatron-SP
+        # all-gathers q/k/v ONCE here (otherwise every kv-chunk slice of a
+        # seq-sharded tensor re-gathers — measured collective blow-up)
+        q = constraint(rope(q, positions, cfg.rope_theta),
+                       "batch", None, "heads", None)
+        k = constraint(rope(k, positions, cfg.rope_theta),
+                       "batch", None, "kv_heads", None)
+        v = constraint(v, "batch", None, "kv_heads", None)
+        attn = chunked_causal_attention(q, k, v, q_chunk=cfg.q_chunk,
+                                        kv_chunk=cfg.kv_chunk)
+        attn = constraint(attn, "batch", None, "heads", None)
+        x = x + attn.reshape(B, S, h * dh) @ p["wo"]
+        x = constraint(x, "batch", "seq", "embed")
+
+        y = _rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            out, _aux = moe_ffn(p["moe"], y.reshape(B * S, d), cfg.moe)
+            x = x + out.reshape(B, S, d)
+        else:
+            g = constraint(jax.nn.silu(y @ p["w_gate"]) * (y @ p["w_up"]),
+                           "batch", None, "ff")
+            x = x + g @ p["w_down"]
+        return constraint(x, "batch", "seq", "embed")
+
+    return fn
+
+
+def forward(params: dict, tokens: jax.Array, cfg: TransformerConfig, *,
+            policy: ACTPolicy = FP32, key: jax.Array | None = None):
+    """tokens (B, S) -> logits (B, S, vocab)."""
+    B, S = tokens.shape
+    key = key if key is not None else jax.random.PRNGKey(0)
+    x = constraint(jnp.take(params["emb"], tokens, axis=0),
+                   "batch", "seq", "embed")
+    positions = jnp.arange(S)
+    block = act_remat(_block_fwd(cfg), policy)
+    layer_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(cfg.n_layers))
+
+    def scan_fn(x, layer):
+        p_l, k_l = layer
+        return block(p_l, x, k_l, positions), None
+
+    x, _ = jax.lax.scan(scan_fn, x, (params["blocks"], layer_keys))
+    x = _rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return constraint(x @ params["head"], "batch", None, "vocab")
+
+
+def lm_loss(params: dict, batch: dict, cfg: TransformerConfig, *,
+            policy: ACTPolicy = FP32, key: jax.Array | None = None):
+    """Next-token cross entropy. batch: tokens (B, S), loss on shifted."""
+    tokens = batch["tokens"]
+    logits = forward(params, tokens[:, :-1], cfg, policy=policy, key=key)
+    targets = tokens[:, 1:]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def _q8(x: jax.Array):
+    """Per-row (last axis) int8 quantization, nearest rounding.
+
+    Returns (codes int8-as-uint8, scale, zero) with fp32 row stats."""
+    xf = x.astype(jnp.float32)
+    lo = jnp.min(xf, axis=-1, keepdims=True)
+    hi = jnp.max(xf, axis=-1, keepdims=True)
+    scale = (hi - lo) / 255.0
+    codes = jnp.round((xf - lo) / jnp.maximum(hi - lo, 1e-12) * 255.0)
+    return codes.astype(jnp.uint8), scale, lo
+
+
+def _dq8(codes: jax.Array, scale: jax.Array, zero: jax.Array, dtype):
+    return (codes.astype(jnp.float32) * scale + zero).astype(dtype)
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int) -> dict:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    if cfg.kv_cache_bits == 8:
+        stat = shape[:-1] + (1,)
+        return {
+            "k": jnp.zeros(shape, jnp.uint8),
+            "v": jnp.zeros(shape, jnp.uint8),
+            "k_s": jnp.zeros(stat, jnp.float32),
+            "k_z": jnp.zeros(stat, jnp.float32),
+            "v_s": jnp.zeros(stat, jnp.float32),
+            "v_z": jnp.zeros(stat, jnp.float32),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros(shape, cfg.jdtype),
+        "v": jnp.zeros(shape, cfg.jdtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array,
+                cfg: TransformerConfig):
+    """One decode step. tokens (B, 1) -> (logits (B, vocab), new cache)."""
+    B = tokens.shape[0]
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q8 = cfg.kv_cache_bits == 8
+    x = jnp.take(params["emb"], tokens, axis=0)  # (B, 1, d)
+    pos = cache["len"][None]                     # (1,)
+
+    def _dus(buf, upd):
+        buf = jax.lax.dynamic_update_slice_in_dim(buf, upd, cache["len"],
+                                                  axis=1)
+        return constraint(buf, "batch", "cache_seq", None, None)
+
+    def scan_fn(carry, layer):
+        x, li = carry
+        if q8:
+            p, kc, ks, kz, vc, vs, vz = layer
+        else:
+            p, kc, vc = layer
+        x = constraint(x, "batch", None, "embed")
+        y = _rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q = rope((y @ p["wq"]).reshape(B, 1, h, dh), pos, cfg.rope_theta)
+        k_new = rope((y @ p["wk"]).reshape(B, 1, kh, dh), pos, cfg.rope_theta)
+        v_new = (y @ p["wv"]).reshape(B, 1, kh, dh)
+        if q8:
+            kq, ksn, kzn = _q8(k_new)
+            vq, vsn, vzn = _q8(v_new)
+            kc, ks, kz = _dus(kc, kq), _dus(ks, ksn), _dus(kz, kzn)
+            vc, vs, vz = _dus(vc, vq), _dus(vs, vsn), _dus(vz, vzn)
+            k_use = _dq8(kc, ks, kz, cfg.jdtype)
+            v_use = _dq8(vc, vs, vz, cfg.jdtype)
+            out_caches = (kc, ks, kz, vc, vs, vz)
+        else:
+            kc, vc = _dus(kc, k_new), _dus(vc, v_new)
+            k_use, v_use = kc, vc
+            out_caches = (kc, vc)
+        attn = decode_attention(q, k_use, v_use, cache["len"] + 1)
+        x = x + attn.reshape(B, 1, h * dh) @ p["wo"]
+        y = _rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            out, _ = moe_ffn(p["moe"], y.reshape(B, -1), cfg.moe)
+            x = x + out.reshape(B, 1, -1)
+        else:
+            x = x + (jax.nn.silu(y @ p["w_gate"]) * (y @ p["w_up"])) @ p["w_down"]
+        return (x, li + 1), out_caches
+
+    if q8:
+        xs = (params["blocks"], cache["k"], cache["k_s"], cache["k_z"],
+              cache["v"], cache["v_s"], cache["v_z"])
+    else:
+        xs = (params["blocks"], cache["k"], cache["v"])
+    (x, _), outs = jax.lax.scan(scan_fn, (x, 0), xs)
+    x = _rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x @ params["head"])[:, 0]
+    if q8:
+        new_cache = dict(zip(("k", "k_s", "k_z", "v", "v_s", "v_z"), outs))
+    else:
+        new_cache = dict(zip(("k", "v"), outs))
+    new_cache["len"] = cache["len"] + 1
+    return logits, new_cache
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: TransformerConfig,
+            cache: dict):
+    """Prompt ingestion: runs the train-style forward while filling the cache."""
+    B, S = tokens.shape
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    x = jnp.take(params["emb"], tokens, axis=0)
+    positions = jnp.arange(S)
+
+    q8 = cfg.kv_cache_bits == 8
+
+    def _fill(buf, new):
+        buf = jax.lax.dynamic_update_slice_in_dim(buf, new, 0, axis=1)
+        return constraint(buf, "batch", "cache_seq", None, None)
+
+    def scan_fn(x, layer):
+        if q8:
+            p, kc, ks, kz, vc, vs, vz = layer
+        else:
+            p, kc, vc = layer
+        x = constraint(x, "batch", "seq", "embed")
+        y = _rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q = rope((y @ p["wq"]).reshape(B, S, h, dh), positions, cfg.rope_theta)
+        k = rope((y @ p["wk"]).reshape(B, S, kh, dh), positions, cfg.rope_theta)
+        v = (y @ p["wv"]).reshape(B, S, kh, dh)
+        q = constraint(q, "batch", None, "heads", None)
+        k = constraint(k, "batch", None, "kv_heads", None)
+        v = constraint(v, "batch", None, "kv_heads", None)
+        if q8:
+            kq, ksn, kzn = _q8(k)
+            vq, vsn, vzn = _q8(v)
+            out_caches = (_fill(kc, kq), _fill(ks, ksn), _fill(kz, kzn),
+                          _fill(vc, vq), _fill(vs, vsn), _fill(vz, vzn))
+        else:
+            out_caches = (_fill(kc, k), _fill(vc, v))
+        attn = chunked_causal_attention(q, k, v, q_chunk=cfg.q_chunk,
+                                        kv_chunk=cfg.kv_chunk)
+        attn = constraint(attn, "batch", None, "heads", None)
+        x = x + attn.reshape(B, S, h * dh) @ p["wo"]
+        x = constraint(x, "batch", "seq", "embed")
+        y = _rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            out, _ = moe_ffn(p["moe"], y.reshape(B * S, -1), cfg.moe)
+            x = x + out.reshape(B, S, -1)
+        else:
+            g = constraint(jax.nn.silu(y @ p["w_gate"]) * (y @ p["w_up"]),
+                           "batch", None, "ff")
+            x = x + g @ p["w_down"]
+        return constraint(x, "batch", "seq", "embed"), out_caches
+
+    if q8:
+        xs = (params["blocks"], cache["k"], cache["k_s"], cache["k_z"],
+              cache["v"], cache["v_s"], cache["v_z"])
+        names = ("k", "k_s", "k_z", "v", "v_s", "v_z")
+    else:
+        xs = (params["blocks"], cache["k"], cache["v"])
+        names = ("k", "v")
+    x, outs = jax.lax.scan(scan_fn, x, xs)
+    x = _rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x @ params["head"])[:, -1]
+    new_cache = dict(zip(names, outs))
+    new_cache["len"] = jnp.asarray(S, jnp.int32)
+    return logits, new_cache

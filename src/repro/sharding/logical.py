@@ -1,0 +1,76 @@
+"""Logical-axis sharding constraints (flax-style, hand-rolled).
+
+Models annotate activations with *logical* axis names
+(``constraint(x, "batch", "seq", "embed")``); the launcher binds logical
+names to mesh axes for the current mesh. Outside any binding (CPU unit
+tests) constraints are no-ops, so model code stays mesh-agnostic.
+
+GSPMD propagation from param/input shardings alone lets giant activations
+(scan-carried residual streams, logits) go replicated; these constraints
+pin them down — measured on codeqwen-7b train_4k: per-device temp drops
+from 161 GB to < 1 GB (see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["axis_rules", "constraint", "logical_spec", "current_rules"]
+
+_STATE = threading.local()
+
+
+def current_rules():
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh, rules: dict):
+    """Bind logical names -> mesh axis (str | tuple | None) under ``mesh``."""
+    prev = current_rules()
+    _STATE.rules = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def logical_spec(*names) -> P:
+    ctx = current_rules()
+    assert ctx is not None
+    _, rules = ctx
+    return P(*[rules.get(n) if n is not None else None for n in names])
+
+
+def constraint(x: jax.Array, *names):
+    """with_sharding_constraint by logical names; no-op when unbound."""
+    ctx = current_rules()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = P(*[rules.get(n) if n is not None else None for n in names])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# canonical rule sets -------------------------------------------------------
+
+
+def lm_rules(mesh) -> dict:
+    """batch->data(+pod), model dims->model. seq unsharded by default."""
+    batch = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return {
+        "batch": batch,
+        "seq": None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": None,       # kv heads < model size: replicated
+        "ff": "model",
+        "vocab": "model",
+        "expert": "model",
+        "cache_seq": "model",   # context parallelism for long decode
+        "everything": batch + ("model",),
+    }

