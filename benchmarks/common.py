@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core import activation_bytes_report, step_key
 from repro.core.policy import policy_for_bits
+from repro.data.csr import maybe_attach_layout
 from repro.data.synthetic import KGDataset, bpr_batches, gen_kg_dataset
 from repro.models import kgnn
 from repro.training.metrics import recall_ndcg_at_k
@@ -55,12 +56,13 @@ def evaluate(params, g, cfg, ds: KGDataset, k=20):
 def train_kgnn(model: str, *, bits: int | None, stochastic: bool = True,
                steps: int = 200, dim: int = 32, batch: int = 256,
                lr: float = 5e-3, seed: int = 0, ds: KGDataset | None = None,
-               eval_every: int = 0) -> dict:
+               eval_every: int = 0, kernel: str = "jnp") -> dict:
     """Train one (model × policy) cell; returns metrics + timings + curves."""
     ds = ds or dataset(seed=0)
     cfg = make_cfg(model, ds, dim=dim)
-    policy = policy_for_bits(bits, stochastic=stochastic)
+    policy = policy_for_bits(bits, stochastic=stochastic, kernel=kernel)
     g = jax.tree_util.tree_map(jnp.asarray, ds.graph)
+    g = maybe_attach_layout(g, policy, model=model)
     params = kgnn.init_params(jax.random.PRNGKey(seed), cfg)
     opt = adam(lr)
     opt_state = opt.init(params)

@@ -39,6 +39,7 @@ def main() -> None:
     if args.only:
         jobs = {args.only: jobs[args.only]}
 
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     summary = {}
     for name, fn in jobs.items():
         print(f"=== {name} ===", flush=True)
@@ -46,10 +47,15 @@ def main() -> None:
         summary[name] = rows
         with open(os.path.join(args.out, f"{name}.json"), "w") as f:
             json.dump(rows, f, indent=1)
+        if name == "kernels":
+            # perf trajectory tracked across PRs: committed at repo root
+            with open(os.path.join(repo_root, "BENCH_kernels.json"),
+                      "w") as f:
+                json.dump(rows, f, indent=1)
         print("name,us_per_call,derived")
         for row in rows:
             us = row.get("step_ms", 0) * 1e3 if "step_ms" in row else \
-                row.get("quant_jnp_us", 0)
+                row.get("quant_jnp_us", row.get("fwd_jnp_us", 0))
             derived = row.get("recall@20", row.get("mem_ratio",
                               row.get("loss", row.get("rel_drop_%",
                               row.get("fused_traffic_ratio", "")))))

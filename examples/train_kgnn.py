@@ -21,6 +21,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from repro.core import step_key  # noqa: E402
 from repro.core.policy import policy_for_bits  # noqa: E402
+from repro.data.csr import maybe_attach_layout  # noqa: E402
 from repro.data.synthetic import bpr_batches, gen_kg_dataset  # noqa: E402
 from repro.models import kgnn  # noqa: E402
 from repro.training.optimizer import adam, cosine_warmup  # noqa: E402
@@ -36,6 +37,10 @@ def main() -> None:
     ap.add_argument("--dim", type=int, default=160)
     ap.add_argument("--scale", type=float, default=1.0,
                     help="graph size multiplier")
+    ap.add_argument("--kernel", default="jnp", choices=["jnp", "pallas"],
+                    help="ACT backend (pallas = fused quant kernels; this "
+                         "example's KGIN aggregation does not use act_spmm, "
+                         "so the fused SPMM path applies to kgat/kgcn runs)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
@@ -47,8 +52,10 @@ def main() -> None:
     cfg = kgnn.KGNNConfig(
         model="kgin", n_users=ds.n_users, n_entities=ds.n_entities,
         n_relations=ds.n_relations, dim=args.dim, n_layers=3, readout="sum")
-    policy = policy_for_bits(args.bits if args.bits else None)
+    policy = policy_for_bits(args.bits if args.bits else None,
+                             kernel=args.kernel)
     g = jax.tree_util.tree_map(jnp.asarray, ds.graph)
+    g = maybe_attach_layout(g, policy, model=cfg.model)
 
     params = kgnn.init_params(jax.random.PRNGKey(0), cfg)
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))

@@ -256,19 +256,130 @@ def _act_spmm_bwd(policy, num_nodes, res, g):
 _act_spmm.defvjp(_act_spmm_fwd, _act_spmm_bwd)
 
 
-def act_spmm(x, src, dst, ew, *, num_nodes: int, key, policy: ACTPolicy):
+# -- fused Pallas path: blocked-CSR layout, no (E, d) message tensor --------
+#
+# The layout pytree is flattened into explicit array args (custom_vjp
+# forbids closed-over tracers and integer leaves take None cotangents,
+# same as src/dst above); its treedef rides as a static nondiff arg.
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _act_spmm_pallas(policy: ACTPolicy, treedef, x, ew, key, *leaves):
+    from repro.kernels import ops as kops
+
+    layout = jax.tree_util.tree_unflatten(treedef, leaves)
+    return kops.spmm(x, ew, layout)
+
+
+def _act_spmm_pallas_fwd(policy, treedef, x, ew, key, *leaves):
+    from repro.kernels import ops as kops
+
+    layout = jax.tree_util.tree_unflatten(treedef, leaves)
+    out = kops.spmm(x, ew, layout)
+    return out, (_maybe_quantize(x, key, policy), ew, leaves)
+
+
+def _act_spmm_pallas_bwd(policy, treedef, res, g):
+    from repro.kernels import ops as kops
+
+    qx, ew, leaves = res
+    layout = jax.tree_util.tree_unflatten(treedef, leaves)
+    # ∇x: scatter-transpose — the same fused kernel on the src-sorted
+    # direction of the layout (all-gatherᵀ analogue, no (E, d) tensor)
+    dx = kops.spmm(g, ew, layout, transpose=True).astype(g.dtype)
+    # ∇ew: fused dequant-SDDMM reading the packed residual directly
+    dew = kops.spmm_grad_ew(qx, g, layout).astype(ew.dtype)
+    return (dx, dew, None) + (None,) * len(leaves)
+
+
+_act_spmm_pallas.defvjp(_act_spmm_pallas_fwd, _act_spmm_pallas_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _spmm_linear_pallas(treedef, x, *leaves):
+    from repro.kernels import ops as kops
+
+    return kops.spmm(x, None, jax.tree_util.tree_unflatten(treedef, leaves))
+
+
+def _spmm_linear_pallas_fwd(treedef, x, *leaves):
+    from repro.kernels import ops as kops
+
+    out = kops.spmm(x, None, jax.tree_util.tree_unflatten(treedef, leaves))
+    return out, leaves
+
+
+def _spmm_linear_pallas_bwd(treedef, leaves, g):
+    from repro.kernels import ops as kops
+
+    layout = jax.tree_util.tree_unflatten(treedef, leaves)
+    dx = kops.spmm(g, None, layout, transpose=True)
+    return (dx,) + (None,) * len(leaves)
+
+
+_spmm_linear_pallas.defvjp(_spmm_linear_pallas_fwd, _spmm_linear_pallas_bwd)
+
+
+# The SPMM kernels keep the whole node table VMEM-resident, blocked over
+# features only (see DESIGN.md §4). On a real TPU that bounds the graphs
+# they can serve; oversized tables must take the jnp fallback rather than
+# fail Mosaic compilation mid-training. Budget: the x and g tables both
+# ride in VMEM at block_d <= 512 fp32 lanes, against ~16 MB/core.
+_VMEM_TABLE_BUDGET = 8 * 1024 * 1024
+
+
+def _pallas_layout_ok(layout, x, src, num_nodes: int) -> bool:
+    """Fused-kernel eligibility; anything else falls back to jnp."""
+    if layout is None or x.ndim != 2:
+        return False
+    if x.dtype not in (jnp.float32, jnp.bfloat16):
+        return False
+    m = layout.meta
+    if not (m.n_edges == src.shape[0] and m.n_dst == num_nodes
+            and m.n_src == x.shape[0]):
+        return False
+    from repro.kernels import ops as kops
+
+    if not kops.INTERPRET:
+        block_d = min(x.shape[1], 512)
+        if (m.n_src + m.n_dst) * block_d * 4 > _VMEM_TABLE_BUDGET:
+            return False
+    return True
+
+
+def act_spmm(x, src, dst, ew, *, num_nodes: int, key, policy: ACTPolicy,
+             layout=None):
     """Weighted sparse aggregation ``H[v] = Σ_{(u,r,v)} w_e · x[u]``.
 
     ``src``/``dst`` are int edge endpoints, ``ew`` per-edge weights. When
     ``ew`` is None (plain normalized adjacency, e.g. GCN/KGCN) the op is
     linear with index-only residuals — nothing to compress, handled exactly.
+
+    ``layout`` is an optional blocked-CSR ``repro.data.csr.SpmmLayout``
+    for the same edge list. Under ``ACTPolicy(kernel="pallas")`` it routes
+    forward, ∇x and ∇ew through the fused Pallas kernels (no ``(E, d)``
+    message tensor in HBM). The automatic jnp fallback covers *shape*
+    mismatches only — a missing layout, different edge/node counts, or
+    an unsupported dtype. A layout built for a *different edge list of
+    the same sizes* is indistinguishable at trace time and would
+    silently aggregate along the wrong edges: the caller owns keeping
+    ``layout`` in sync with ``src``/``dst`` (``CKG.layout`` rides inside
+    the graph pytree precisely so they travel together).
     """
+    fused = policy.kernel == "pallas" and \
+        _pallas_layout_ok(layout, x, src, num_nodes)
     if ew is None:
+        if fused:
+            leaves, treedef = jax.tree_util.tree_flatten(layout)
+            return _spmm_linear_pallas(treedef, x, *leaves)
         msgs = x[src]
         return jax.ops.segment_sum(msgs, dst, num_segments=num_nodes)
     if not policy.enabled:
         msgs = x[src] * ew[:, None]
         return jax.ops.segment_sum(msgs, dst, num_segments=num_nodes)
+    if fused:
+        leaves, treedef = jax.tree_util.tree_flatten(layout)
+        return _act_spmm_pallas(policy, treedef, x, ew, key, *leaves)
     return _act_spmm(policy, num_nodes, x, src, dst, ew, key)
 
 

@@ -1,0 +1,206 @@
+"""Blocked-CSR edge layout for the fused Pallas SPMM kernels.
+
+The COO path (``x[src] * ew -> segment_sum``) materializes the full
+``(E, d)`` message tensor in HBM twice per step (forward messages,
+backward ``g[dst]``). The fused kernels in ``repro.kernels.spmm`` never
+form it — but they need edges pre-arranged so that each kernel grid step
+touches one destination tile. That arrangement is this module's job, done
+once per graph on the host (numpy), like any real input pipeline.
+
+Construction (see DESIGN.md §4):
+
+1. **Stable-sort edges by destination.** Per-destination contributions
+   keep their original relative order, so the kernel walks each
+   destination's edges in the same order as the COO ``segment_sum``
+   reference (exact agreement up to fp32 reduction associativity inside
+   a block's dot product).
+2. **Tile destinations** into blocks of ``block_rows`` rows. Each tile's
+   run of sorted edges is padded up to a multiple of ``block_e`` slots;
+   tiles with no edges get one all-pad block so every output tile is
+   initialized by exactly one contiguous run of grid steps (the Pallas
+   output-revisiting contract).
+3. **Emit per-slot arrays** reshaped ``(n_blocks, block_e)`` — 2-D so TPU
+   BlockSpecs tile them directly — plus ``tile_of_blk``, the per-block
+   destination-tile id that rides in SMEM via scalar prefetch and steers
+   the output index map.
+
+Pad slots carry ``perm = n_edges`` (one past the last real edge), so a
+single gather from ``append(ew, 0)`` both permutes edge weights into slot
+order and zeroes pad lanes; scatters of per-slot results through ``perm``
+with out-of-bounds drop discard pad contributions for free.
+
+The same machinery, run on the reversed edges, yields the **transpose
+layout** that the backward scatter (``∇x = Aᵀ(g · ew)``) uses — one kernel
+serves both directions.
+
+``SpmmLayout`` is a registered pytree (arrays are children, the
+``CSRMeta`` block geometry is hashable aux data) so it rides through
+``jax.jit`` / ``grad`` untouched.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CSRMeta", "SpmmLayout", "build_spmm_layout", "attach_layout",
+           "maybe_attach_layout"]
+
+# KGNN propagation rules that aggregate through act_spmm (and therefore
+# benefit from a blocked-CSR layout). KGIN/R-GCN modulate messages with
+# per-edge *vectors* and aggregate via raw segment_sum — a layout would
+# be dead weight there.
+SPMM_MODELS = ("kgat", "kgcn")
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRMeta:
+    """Static block geometry — pytree aux data, hashable under jit."""
+
+    n_src: int        # rows of the gathered-from table (x fwd, g bwd)
+    n_dst: int        # output segment count of the forward aggregation
+    n_edges: int      # real (unpadded) edge count E
+    block_e: int      # edge slots per block
+    block_rows: int   # destination rows per output tile
+    n_blocks: int     # forward-direction edge blocks (incl. pad blocks)
+    n_tiles: int      # forward-direction destination tiles
+    t_n_blocks: int   # transpose-direction edge blocks
+    t_n_tiles: int    # transpose-direction tiles (cover n_src rows)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SpmmLayout:
+    """Blocked-CSR slots for one graph, forward + transpose directions.
+
+    All arrays int32. ``*_blk`` arrays are ``(n_blocks, block_e)``; pad
+    slots hold gather-index 0 / local-row 0 / perm ``n_edges``.
+    """
+
+    # forward direction: edges stable-sorted by dst
+    src_blk: jax.Array    # global src id per slot — gather rows of x
+    dstg_blk: jax.Array   # global dst id per slot — gather rows of g (SDDMM)
+    ldst_blk: jax.Array   # dst id local to its tile — in-kernel one-hot row
+    perm_blk: jax.Array   # original edge index per slot; n_edges for pads
+    tile_of_blk: jax.Array  # (n_blocks,) destination tile per edge block
+    # transpose direction: edges stable-sorted by src (drives ∇x)
+    t_src_blk: jax.Array    # global dst id per slot — gather rows of g
+    t_ldst_blk: jax.Array   # src id local to its tile
+    t_perm_blk: jax.Array   # original edge index per slot
+    t_tile_of_blk: jax.Array  # (t_n_blocks,)
+    meta: CSRMeta
+
+    def tree_flatten(self):
+        return (self.src_blk, self.dstg_blk, self.ldst_blk, self.perm_blk,
+                self.tile_of_blk, self.t_src_blk, self.t_ldst_blk,
+                self.t_perm_blk, self.t_tile_of_blk), (self.meta,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(a.size * 4 for a in self.tree_flatten()[0])
+
+
+def _build_direction(gather_ids: np.ndarray, out_ids: np.ndarray,
+                     n_out: int, block_e: int, block_rows: int):
+    """Slot arrays for one aggregation direction (into ``n_out`` rows)."""
+    E = int(out_ids.shape[0])
+    n_tiles = max(1, -(-n_out // block_rows))
+    order = np.argsort(out_ids, kind="stable").astype(np.int64)
+    gat_s = gather_ids[order]
+    out_s = out_ids[order]
+    tile_of_edge = out_s // block_rows
+
+    counts = np.bincount(tile_of_edge, minlength=n_tiles)
+    blocks_per_tile = np.maximum(1, -(-counts // block_e))
+    n_blocks = int(blocks_per_tile.sum())
+    cap = blocks_per_tile * block_e                       # slots per tile
+    tile_slot0 = np.concatenate([[0], np.cumsum(cap)[:-1]])
+    edge_start = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    slot = tile_slot0[tile_of_edge] + (np.arange(E) - edge_start[tile_of_edge])
+
+    total = n_blocks * block_e
+    gat_blk = np.zeros(total, np.int32)
+    outg_blk = np.zeros(total, np.int32)
+    lrow_blk = np.zeros(total, np.int32)
+    perm_blk = np.full(total, E, np.int32)
+    gat_blk[slot] = gat_s
+    outg_blk[slot] = out_s
+    lrow_blk[slot] = out_s - tile_of_edge * block_rows
+    perm_blk[slot] = order
+    tile_of_blk = np.repeat(np.arange(n_tiles, dtype=np.int32),
+                            blocks_per_tile)
+    shape = (n_blocks, block_e)
+    return (gat_blk.reshape(shape), outg_blk.reshape(shape),
+            lrow_blk.reshape(shape), perm_blk.reshape(shape),
+            tile_of_blk, n_blocks, n_tiles)
+
+
+def build_spmm_layout(src, dst, *, n_dst: int, n_src: int | None = None,
+                      block_e: int = 256, block_rows: int = 256) -> SpmmLayout:
+    """One-time host-side preprocessing of a COO edge list.
+
+    src / dst : (E,) integer endpoints (any array-like).
+    n_dst     : forward output segment count (``num_nodes`` of act_spmm).
+    n_src     : row count of the gathered table; defaults to ``n_dst``
+                (set explicitly when x is a gathered global table wider
+                than the local output shard).
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if src.shape != dst.shape or src.ndim != 1:
+        raise ValueError(f"bad edge list shapes {src.shape}/{dst.shape}")
+    n_src = int(n_src if n_src is not None else n_dst)
+
+    (src_blk, dstg_blk, ldst_blk, perm_blk, tile_of_blk,
+     n_blocks, n_tiles) = _build_direction(src, dst, n_dst,
+                                           block_e, block_rows)
+    # transpose: gather rows of g at dst, accumulate into src rows
+    (t_src_blk, _t_outg, t_ldst_blk, t_perm_blk, t_tile_of_blk,
+     t_n_blocks, t_n_tiles) = _build_direction(dst, src, n_src,
+                                               block_e, block_rows)
+
+    meta = CSRMeta(n_src=n_src, n_dst=int(n_dst), n_edges=int(src.shape[0]),
+                   block_e=block_e, block_rows=block_rows,
+                   n_blocks=n_blocks, n_tiles=n_tiles,
+                   t_n_blocks=t_n_blocks, t_n_tiles=t_n_tiles)
+    as_j = jnp.asarray
+    return SpmmLayout(
+        src_blk=as_j(src_blk), dstg_blk=as_j(dstg_blk),
+        ldst_blk=as_j(ldst_blk), perm_blk=as_j(perm_blk),
+        tile_of_blk=as_j(tile_of_blk),
+        t_src_blk=as_j(t_src_blk), t_ldst_blk=as_j(t_ldst_blk),
+        t_perm_blk=as_j(t_perm_blk), t_tile_of_blk=as_j(t_tile_of_blk),
+        meta=meta)
+
+
+def attach_layout(g, *, block_e: int = 256, block_rows: int = 256):
+    """Return a copy of a graph dataclass (e.g. ``models.kgnn.CKG``) with
+    its ``layout`` field populated from its COO edge list."""
+    layout = build_spmm_layout(
+        np.asarray(g.src), np.asarray(g.dst), n_dst=g.n_nodes,
+        block_e=block_e, block_rows=block_rows)
+    return dataclasses.replace(g, layout=layout)
+
+
+def maybe_attach_layout(g, policy, *, model: str | None = None, **kw):
+    """``attach_layout`` iff the policy selects the Pallas backend AND the
+    model's propagation actually aggregates through ``act_spmm``.
+
+    The single guard shared by the training entry points (launcher,
+    example driver, benchmark harness). No-op when the layout is already
+    attached, the policy runs the jnp backend, or ``model`` names a rule
+    (kgin/rgcn) whose aggregation never routes through ``act_spmm``.
+    """
+    if getattr(policy, "kernel", "jnp") != "pallas":
+        return g
+    if g.layout is not None or (model is not None
+                                and model not in SPMM_MODELS):
+        return g
+    return attach_layout(g, **kw)

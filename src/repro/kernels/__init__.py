@@ -2,6 +2,8 @@
 
   quant_pack.py     fused per-row minmax + SR-quantize + bit-pack
   dequant_matmul.py fused dequantize + H^T.grad GEMM (ACT backward)
+  spmm.py           fused KG message passing: forward/transpose SPMM +
+                    dequant-SDDMM for ∇ew — no (E, d) message tensor
   ops.py            jit'd wrappers (QTensor I/O, backend switch)
   ref.py            pure-jnp oracles (bit-exact vs the kernels)
   hashrng.py        counter-hash SR noise (TPU analogue of cuRAND-in-kernel)

@@ -11,18 +11,29 @@ executes the kernel body in Python); on a real TPU set
 
 from __future__ import annotations
 
+import collections
+
 import jax
 import jax.numpy as jnp
 
 from repro.core.quant import QTensor
+from repro.core.quant import dequantize as core_dequantize
+from repro.core.quant import quantize as core_quantize
 
 from . import dequant_matmul as _dqmm
 from . import quant_pack as _qp
+from . import spmm as _spmm
 from .hashrng import key_to_seed
 
-__all__ = ["quantize", "dequantize", "dequant_matmul", "INTERPRET"]
+__all__ = ["quantize", "dequantize", "dequant_matmul", "spmm",
+           "spmm_grad_ew", "INTERPRET", "TRACE_COUNTS"]
 
 INTERPRET = jax.default_backend() != "tpu"
+
+# trace-time call counters per fused op — lets tests assert that a jitted
+# train step actually routed through the Pallas path (each counter bumps
+# once per trace, not per execution)
+TRACE_COUNTS: collections.Counter = collections.Counter()
 
 
 def quantize(x: jax.Array, key: jax.Array, *, bits: int = 2,
@@ -30,6 +41,11 @@ def quantize(x: jax.Array, key: jax.Array, *, bits: int = 2,
     """Fused Pallas quantize+pack -> QTensor (same container as core)."""
     orig_shape = x.shape
     d = orig_shape[-1]
+    if d % (8 // bits):
+        # the fused kernel needs whole pack-chunks (d % (8/bits) == 0);
+        # odd feature dims take the jnp quantizer — same QTensor layout,
+        # different (jax.random) SR draws
+        return core_quantize(x, key, bits=bits, stochastic=stochastic)
     flat = x.reshape(-1, d)
     packed, scale, zero = _qp.quant_pack(
         flat, key_to_seed(key), bits=bits, stochastic=stochastic,
@@ -57,8 +73,49 @@ def dequantize(q: QTensor) -> jax.Array:
 def dequant_matmul(q: QTensor, g: jax.Array) -> jax.Array:
     """Fused ``dequant(q)ᵀ @ g`` — the ACT weight-gradient hot path."""
     n = g.shape[-1]
+    dp = q.packed.shape[-1]
+    if dp * (8 // q.bits) != q.dim:
+        # padded pack from the odd-feature-dim quantizer fallback: the
+        # fused kernel's tile indexing assumes whole chunks — dequantize
+        # rows and take the plain fp32 GEMM instead of crashing
+        xhat = core_dequantize(q).reshape(-1, q.dim)
+        return xhat.astype(jnp.float32).T @ g.reshape(-1, n).astype(
+            jnp.float32)
     return _dqmm.dequant_matmul(
-        q.packed.reshape(-1, q.packed.shape[-1]),
+        q.packed.reshape(-1, dp),
         q.scale.reshape(-1, 1), q.zero.reshape(-1, 1),
         g.reshape(-1, n),
         bits=q.bits, dim=q.dim, interpret=INTERPRET)
+
+
+def spmm(x: jax.Array, ew: jax.Array | None, layout, *,
+         transpose: bool = False) -> jax.Array:
+    """Fused gather+scale+segment-accumulate over a blocked-CSR layout.
+
+    Forward aggregation, or with ``transpose=True`` the ∇x scatter
+    (``dx = Aᵀ(g · ew)``) — no ``(E, d)`` message tensor in HBM either way.
+    """
+    TRACE_COUNTS["spmm_t" if transpose else "spmm"] += 1
+    return _spmm.spmm(x, ew, layout, transpose=transpose,
+                      interpret=INTERPRET)
+
+
+def spmm_grad_ew(res, g: jax.Array, layout) -> jax.Array:
+    """∇ew for the SPMM backward — the fused dequant-SDDMM hot path.
+
+    ``res`` is the saved forward residual: a packed QTensor under an
+    active policy (read directly, shift+mask in-kernel) or the raw fp32
+    activation otherwise. Returns (E,) fp32 in original edge order.
+    """
+    if isinstance(res, QTensor):
+        dp = res.packed.shape[-1]
+        if res.packed.ndim == 2 and dp * (8 // res.bits) == res.dim:
+            TRACE_COUNTS["dequant_sddmm"] += 1
+            return _spmm.dequant_sddmm_ew(
+                res.packed, res.scale, res.zero, g, layout,
+                bits=res.bits, dim=res.dim, interpret=INTERPRET)
+        # odd feature dim (padded pack): dequantize rows, fp32 SDDMM —
+        # still no (E, d) intermediate
+        res = core_dequantize(res)
+    TRACE_COUNTS["sddmm"] += 1
+    return _spmm.sddmm_ew(res, g, layout, interpret=INTERPRET)

@@ -1,0 +1,278 @@
+"""Pallas TPU kernels: fused SPMM for KG message passing (paper Eq. 2).
+
+The op is ``out[v] = Σ_{e=(u→v)} ew[e] · x[u]``. The unfused jnp path
+(``x[src] * ew → segment_sum``) materializes the full ``(E, d)`` message
+tensor in HBM on the forward pass and again (``g[dst] * ew``) on the
+backward — at 3 layers × industry-scale E this dwarfs what the quantizer
+saves. The kernels here never form it:
+
+  ``spmm``             forward / transpose aggregation. Per edge block:
+                       gather source rows into VMEM, scale by edge
+                       weights, accumulate into the destination tile via
+                       a one-hot MXU matmul (the TPU-idiomatic
+                       scatter-add). HBM traffic: gather reads + one
+                       ``(N, d)`` output write — no ``(E, d)`` tensor.
+  ``sddmm_ew``         backward ∇ew = ⟨x̂[src], g[dst]⟩ per edge, fp32
+                       residuals.
+  ``dequant_sddmm_ew`` same, reading the *packed* QTensor residual
+                       directly — shift+mask in-kernel per feature tile,
+                       mirroring ``dequant_matmul`` — so the b-bit
+                       residual never dequantizes to a full fp32 buffer.
+
+Edges arrive pre-blocked by ``repro.data.csr.build_spmm_layout``: each
+``(1, block_e)`` slot block belongs to exactly one destination tile, and
+a tile's blocks are consecutive in the grid, so the output tile is
+accumulated across a contiguous run of grid steps (init on the first
+block of each tile — the standard revisiting pattern, steered by the
+scalar-prefetched ``tile_of_blk`` array in SMEM).
+
+The node table rides in VMEM blocked over the feature dim only
+(``(N, block_d)``); in-kernel gathers are ``jnp.take`` over the sublane
+dim. For CKGs whose node table outgrows VMEM, the upgrade path is
+per-tile DMA gathers from HBM (see DESIGN.md §4) — the layout already
+carries everything that needs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["spmm", "sddmm_ew", "dequant_sddmm_ew"]
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target."""
+    b = min(dim, target)
+    while dim % b:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# forward / transpose aggregation
+# ---------------------------------------------------------------------------
+
+
+def _spmm_kernel(tile_ref, src_ref, ldst_ref, ew_ref, x_ref, out_ref, *,
+                 block_rows: int, block_e: int):
+    e = pl.program_id(1)
+    tile = tile_ref[e]
+    prev = tile_ref[jnp.maximum(e, 1) - 1]
+    first = jnp.logical_or(e == 0, tile != prev)
+
+    src = src_ref[0, :]                                   # (block_e,)
+    msgs = jnp.take(x_ref[...], src, axis=0).astype(jnp.float32)
+    msgs = msgs * ew_ref[0, :][:, None]                   # pads carry ew=0
+    # one-hot scatter-add on the MXU: (rows, E_b) @ (E_b, d)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block_rows, block_e), 0)
+    onehot = (rows == ldst_ref[0, :][None, :]).astype(jnp.float32)
+    acc = jax.lax.dot_general(
+        onehot, msgs,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(jnp.logical_not(first))
+    def _accum():
+        out_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("transpose", "block_d",
+                                             "interpret"))
+def spmm(x: jax.Array, ew: jax.Array | None, layout, *,
+         transpose: bool = False, block_d: int | None = None,
+         interpret: bool = True) -> jax.Array:
+    """Fused gather + scale + segment-accumulate over a blocked-CSR layout.
+
+    x   : (n_src, d) float — the gathered-from table (activations
+          forward; output gradient for the transpose/∇x direction).
+    ew  : (E,) float edge weights in ORIGINAL edge order, or None for
+          unweighted aggregation (plain adjacency).
+    returns (n_out, d) in x.dtype, n_out = n_dst (fwd) / n_src (transpose).
+    """
+    m = layout.meta
+    if transpose:
+        src_blk, ldst_blk = layout.t_src_blk, layout.t_ldst_blk
+        perm_blk, tile_of = layout.t_perm_blk, layout.t_tile_of_blk
+        nb, n_tiles, n_out = m.t_n_blocks, m.t_n_tiles, m.n_src
+    else:
+        src_blk, ldst_blk = layout.src_blk, layout.ldst_blk
+        perm_blk, tile_of = layout.perm_blk, layout.tile_of_blk
+        nb, n_tiles, n_out = m.n_blocks, m.n_tiles, m.n_dst
+    rows, d = x.shape
+
+    # one gather permutes ew into slot order AND zeroes pad lanes
+    # (pad slots carry perm == n_edges, pointing at the appended zero)
+    w = jnp.ones((m.n_edges,), jnp.float32) if ew is None \
+        else ew.astype(jnp.float32)
+    ew_slots = jnp.concatenate([w, jnp.zeros((1,), jnp.float32)])[perm_blk]
+
+    if block_d is None:
+        block_d = min(d, 512)
+    grid_d = -(-d // block_d)
+    pad_d = grid_d * block_d - d
+    xf = x.astype(jnp.float32)
+    if pad_d:
+        xf = jnp.pad(xf, ((0, 0), (0, pad_d)))
+
+    kernel = functools.partial(_spmm_kernel, block_rows=m.block_rows,
+                               block_e=m.block_e)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(grid_d, nb),             # edge blocks innermost: a tile's
+        in_specs=[                     # output accumulates consecutively
+            pl.BlockSpec((1, m.block_e), lambda di, e, s: (e, 0)),
+            pl.BlockSpec((1, m.block_e), lambda di, e, s: (e, 0)),
+            pl.BlockSpec((1, m.block_e), lambda di, e, s: (e, 0)),
+            pl.BlockSpec((rows, block_d), lambda di, e, s: (0, di)),
+        ],
+        out_specs=pl.BlockSpec((m.block_rows, block_d),
+                               lambda di, e, s: (s[e], di)),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (n_tiles * m.block_rows, grid_d * block_d), jnp.float32),
+        interpret=interpret,
+    )(tile_of, src_blk, ldst_blk, ew_slots, xf)
+    return out[:n_out, :d].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# backward ∇ew: SDDMM (sampled dense-dense matmul over the edge pattern)
+# ---------------------------------------------------------------------------
+
+
+def _scatter_dew(dew_slots: jax.Array, perm_blk: jax.Array,
+                 n_edges: int) -> jax.Array:
+    """Per-slot partials -> (E,) in original edge order; pads dropped."""
+    return jnp.zeros((n_edges,), jnp.float32).at[perm_blk.reshape(-1)].add(
+        dew_slots.reshape(-1), mode="drop")
+
+
+def _sddmm_kernel(src_ref, dst_ref, x_ref, g_ref, out_ref):
+    di = pl.program_id(1)
+    xr = jnp.take(x_ref[...], src_ref[0, :], axis=0).astype(jnp.float32)
+    gr = jnp.take(g_ref[...], dst_ref[0, :], axis=0).astype(jnp.float32)
+    part = jnp.sum(xr * gr, axis=-1)                      # (block_e,)
+
+    @pl.when(di == 0)
+    def _init():
+        out_ref[0, :] = part
+
+    @pl.when(di > 0)
+    def _accum():
+        out_ref[0, :] += part
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def sddmm_ew(x: jax.Array, g: jax.Array, layout, *,
+             block_d: int | None = None,
+             interpret: bool = True) -> jax.Array:
+    """∇ew[e] = ⟨x[src_e], g[dst_e]⟩ — fp32 residual path.
+
+    x : (n_src, d) saved activation, g : (n_dst, d) output gradient.
+    returns (E,) fp32 in original edge order.
+    """
+    m = layout.meta
+    n_src, d = x.shape
+    if block_d is None:
+        block_d = min(d, 512)
+    grid_d = -(-d // block_d)
+    pad_d = grid_d * block_d - d
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    if pad_d:
+        xf = jnp.pad(xf, ((0, 0), (0, pad_d)))
+        gf = jnp.pad(gf, ((0, 0), (0, pad_d)))
+
+    out = pl.pallas_call(
+        _sddmm_kernel,
+        grid=(m.n_blocks, grid_d),     # feature tiles innermost: the
+        in_specs=[                     # (1, block_e) out row accumulates
+            pl.BlockSpec((1, m.block_e), lambda e, di: (e, 0)),
+            pl.BlockSpec((1, m.block_e), lambda e, di: (e, 0)),
+            pl.BlockSpec((n_src, block_d), lambda e, di: (0, di)),
+            pl.BlockSpec((gf.shape[0], block_d), lambda e, di: (0, di)),
+        ],
+        out_specs=pl.BlockSpec((1, m.block_e), lambda e, di: (e, 0)),
+        out_shape=jax.ShapeDtypeStruct((m.n_blocks, m.block_e), jnp.float32),
+        interpret=interpret,
+    )(layout.src_blk, layout.dstg_blk, xf, gf)
+    return _scatter_dew(out, layout.perm_blk, m.n_edges)
+
+
+def _dq_sddmm_kernel(src_ref, dst_ref, packed_ref, scale_ref, zero_ref,
+                     g_ref, out_ref, *, bits: int, dp: int, block_d: int):
+    di = pl.program_id(1)
+    src = src_ref[0, :]
+    # which bit-field this feature tile lives in (chunk-interleaved pack)
+    chunk = (di * block_d) // dp
+    shift = (chunk * bits).astype(jnp.uint8)
+    mask = jnp.uint8(2**bits - 1)
+    prows = jnp.take(packed_ref[...], src, axis=0)        # (block_e, block_d)
+    codes = ((prows >> shift) & mask).astype(jnp.float32)
+    xhat = codes * jnp.take(scale_ref[...], src, axis=0) \
+        + jnp.take(zero_ref[...], src, axis=0)
+    gr = jnp.take(g_ref[...], dst_ref[0, :], axis=0).astype(jnp.float32)
+    part = jnp.sum(xhat * gr, axis=-1)
+
+    @pl.when(di == 0)
+    def _init():
+        out_ref[0, :] = part
+
+    @pl.when(di > 0)
+    def _accum():
+        out_ref[0, :] += part
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "dim", "block_d",
+                                             "interpret"))
+def dequant_sddmm_ew(packed: jax.Array, scale: jax.Array, zero: jax.Array,
+                     g: jax.Array, layout, *, bits: int, dim: int,
+                     block_d: int | None = None,
+                     interpret: bool = True) -> jax.Array:
+    """∇ew from the *packed* b-bit residual — shift+mask in-kernel.
+
+    packed : (n_src, dp) uint8 chunk-interleaved codes (dp = dim·bits/8)
+    scale/zero : (n_src, 1) fp32, g : (n_dst, dim) float.
+    returns (E,) fp32 in original edge order.
+    """
+    m = layout.meta
+    n_src, dp = packed.shape
+    cpb = 8 // bits
+    assert dp * cpb == dim, f"packed dim mismatch: {dp}*{cpb} != {dim}"
+    if block_d is None:
+        block_d = _pick_block(dp, 512)
+    assert dp % block_d == 0, (dp, block_d)
+    grid_d = dim // block_d
+    nbt = dp // block_d                # distinct byte tiles (reused cpb×)
+
+    kernel = functools.partial(_dq_sddmm_kernel, bits=bits, dp=dp,
+                               block_d=block_d)
+    out = pl.pallas_call(
+        kernel,
+        grid=(m.n_blocks, grid_d),
+        in_specs=[
+            pl.BlockSpec((1, m.block_e), lambda e, di: (e, 0)),
+            pl.BlockSpec((1, m.block_e), lambda e, di: (e, 0)),
+            pl.BlockSpec((n_src, block_d), lambda e, di: (0, di % nbt)),
+            pl.BlockSpec((n_src, 1), lambda e, di: (0, 0)),
+            pl.BlockSpec((n_src, 1), lambda e, di: (0, 0)),
+            pl.BlockSpec((g.shape[0], block_d), lambda e, di: (0, di)),
+        ],
+        out_specs=pl.BlockSpec((1, m.block_e), lambda e, di: (e, 0)),
+        out_shape=jax.ShapeDtypeStruct((m.n_blocks, m.block_e), jnp.float32),
+        interpret=interpret,
+    )(layout.src_blk, layout.dstg_blk, packed, scale,
+      zero, g.astype(jnp.float32))
+    return _scatter_dew(out, layout.perm_blk, m.n_edges)

@@ -26,6 +26,7 @@ from repro.training.trainer import Trainer, TrainerConfig
 
 
 def _kgnn_job(arch, policy, args):
+    from repro.data.csr import maybe_attach_layout
     from repro.data.synthetic import bpr_batches, gen_kg_dataset
     from repro.models import kgnn
     ds = gen_kg_dataset(n_users=120, n_items=200, n_attrs=80, seed=0)
@@ -35,6 +36,7 @@ def _kgnn_job(arch, policy, args):
         dim=32, n_layers=3,
         readout="concat" if arch.model_cfg.model == "kgat" else "sum")
     g = jax.tree_util.tree_map(jnp.asarray, ds.graph)
+    g = maybe_attach_layout(g, policy, model=cfg.model)
     params = kgnn.init_params(jax.random.PRNGKey(0), cfg)
     opt = adam(3e-3)
     root = jax.random.PRNGKey(1)
@@ -109,11 +111,14 @@ def _recsys_job(arch, policy, args):
 
 
 def _gnn_job(arch, policy, args):
+    from repro.data.csr import build_spmm_layout
     from repro.data.synthetic import cora_like
     from repro.models import gnn
     cfg = reduced(arch).model_cfg
     feats, src, dst, labels = cora_like(n_nodes=300, d_feat=cfg.d_in)
     x, s, d, y = map(jnp.asarray, (feats, src, dst, labels))
+    layout = build_spmm_layout(src, dst, n_dst=300) \
+        if policy.kernel == "pallas" else None
     params = gnn.init_params(jax.random.PRNGKey(0), cfg)
     opt = adam(1e-2)
     root = jax.random.PRNGKey(1)
@@ -124,7 +129,8 @@ def _gnn_job(arch, policy, args):
 
         def loss_fn(p):
             logits = gnn.gcn_forward(p, x, s, d, n_nodes=300, cfg=cfg,
-                                     policy=policy, key=step_key(root, step))
+                                     policy=policy, key=step_key(root, step),
+                                     layout=layout)
             oh = jax.nn.one_hot(y, cfg.n_classes)
             return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
 
@@ -144,10 +150,13 @@ def main() -> None:
     ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--bits", type=int, default=2, help="0 = FP32 baseline")
+    ap.add_argument("--kernel", default="jnp", choices=["jnp", "pallas"],
+                    help="ACT backend: jnp reference or fused Pallas kernels")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     arch = get(args.arch)
-    policy = policy_for_bits(args.bits if args.bits else None)
+    policy = policy_for_bits(args.bits if args.bits else None,
+                             kernel=args.kernel)
 
     job = {
         "kgnn": _kgnn_job, "lm": _lm_job, "moe_lm": _lm_job,

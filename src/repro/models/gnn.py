@@ -58,8 +58,13 @@ def _sym_norm(src, dst, n_nodes, dtype=jnp.float32):
 
 
 def gcn_forward(params, x, src, dst, *, n_nodes: int, cfg: GCNConfig,
-                policy: ACTPolicy = FP32, key=None):
-    """Full-batch GCN: Z = Â ... σ(Â X W0) W1 with self-loops assumed in edges."""
+                policy: ACTPolicy = FP32, key=None, layout=None):
+    """Full-batch GCN: Z = Â ... σ(Â X W0) W1 with self-loops assumed in edges.
+
+    ``layout`` optionally carries the blocked-CSR arrangement of the edge
+    list; under ``ACTPolicy(kernel="pallas")`` the (linear) aggregation
+    then runs through the fused Pallas SPMM in both directions.
+    """
     keys = KeyChain(key if key is not None else jax.random.PRNGKey(0))
     dinv = _sym_norm(src, dst, n_nodes, x.dtype)
     h = x
@@ -69,7 +74,7 @@ def gcn_forward(params, x, src, dst, *, n_nodes: int, cfg: GCNConfig,
             h = act_matmul(h, w, key=keys.next(), policy=policy)
         h = h * dinv[:, None]
         h = act_spmm(h, src, dst, None, num_nodes=n_nodes,
-                     key=keys.next(), policy=policy)
+                     key=keys.next(), policy=policy, layout=layout)
         # pin the aggregation output row-sharded: GSPMD then emits
         # reduce-scatter (1x payload) instead of all-reduce (2x)
         h = constraint(h, "batch", None)
@@ -156,10 +161,10 @@ def gcn_forward_blocks(params, x, blocks, *, cfg: GCNConfig,
 
 def gcn_forward_batched(params, x, src, dst, graph_ids, *, n_graphs: int,
                         n_nodes: int, cfg: GCNConfig,
-                        policy: ACTPolicy = FP32, key=None):
+                        policy: ACTPolicy = FP32, key=None, layout=None):
     """Batched small graphs (molecule): block-diag edges + mean readout."""
     node_logits = gcn_forward(params, x, src, dst, n_nodes=n_nodes, cfg=cfg,
-                              policy=policy, key=key)
+                              policy=policy, key=key, layout=layout)
     pooled = jax.ops.segment_sum(node_logits, graph_ids, num_segments=n_graphs)
     counts = jax.ops.segment_sum(jnp.ones((n_nodes,), x.dtype), graph_ids,
                                  num_segments=n_graphs)

@@ -48,7 +48,10 @@ class CKG:
     """Collaborative knowledge graph in COO form (inverse edges included).
 
     ``n_nodes``/``n_relations`` are pytree aux data — static under jit
-    (segment_sum needs static segment counts).
+    (segment_sum needs static segment counts). ``layout`` optionally
+    carries the blocked-CSR arrangement of the same edge list
+    (``repro.data.csr.attach_layout``) that routes ``act_spmm`` through
+    the fused Pallas kernels under ``ACTPolicy(kernel="pallas")``.
     """
 
     src: jax.Array  # (E,) int32 node ids
@@ -56,14 +59,16 @@ class CKG:
     rel: jax.Array  # (E,) int32 relation ids
     n_nodes: int    # users + entities (static)
     n_relations: int
+    layout: object | None = None  # SpmmLayout (itself a pytree) or None
 
     def tree_flatten(self):
-        return (self.src, self.dst, self.rel), (self.n_nodes,
-                                                self.n_relations)
+        return (self.src, self.dst, self.rel, self.layout), (
+            self.n_nodes, self.n_relations)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        src, dst, rel, layout = children
+        return cls(src, dst, rel, aux[0], aux[1], layout)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,7 +149,7 @@ def _kgat_layer(p, layer: int, e: jax.Array, g: CKG, att: jax.Array,
                 policy: ACTPolicy, keys: KeyChain) -> jax.Array:
     """Bi-interaction aggregator: LeakyReLU(W1(e+eN)) + LeakyReLU(W2(e⊙eN))."""
     e_n = act_spmm(e, g.src, g.dst, att, num_nodes=g.n_nodes,
-                   key=keys.next(), policy=policy)
+                   key=keys.next(), policy=policy, layout=g.layout)
     add = act_matmul(e + e_n, p["w1"][layer], key=keys.next(), policy=policy)
     mul = act_matmul(e * e_n, p["w2"][layer], key=keys.next(), policy=policy)
     add = act_nonlin(add, key=keys.next(), policy=policy, fn="leaky_relu")
@@ -170,7 +175,7 @@ def _kgcn_layer(p, layer: int, e: jax.Array, g: CKG, ew: jax.Array,
                 policy: ACTPolicy, keys: KeyChain) -> jax.Array:
     """KGNN-LS graph convolution: σ((Â E)Θ + b) with relation-scored Â."""
     h = act_spmm(e, g.src, g.dst, ew, num_nodes=g.n_nodes,
-                 key=keys.next(), policy=policy)
+                 key=keys.next(), policy=policy, layout=g.layout)
     j = act_matmul(h + e, p["w"][layer], key=keys.next(), policy=policy)
     j = j + p["b"][layer]
     return act_nonlin(j, key=keys.next(), policy=policy,

@@ -95,6 +95,7 @@ def test_rmsnorm_grads_match():
                                atol=2e-5)
 
 
+@pytest.mark.slow
 def test_spmm_dx_exact_dew_noisy():
     N, E, d = 30, 150, 16
     src = jax.random.randint(KEY, (E,), 0, N)

@@ -22,6 +22,7 @@ LM_ARCHS = [a for a in ASSIGNED if get(a).family in ("lm", "moe_lm")]
 RECSYS_ARCHS = [a for a in ASSIGNED if get(a).family == "recsys"]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", LM_ARCHS)
 def test_lm_train_step(name):
     from repro.models import transformer as tf
@@ -36,6 +37,7 @@ def test_lm_train_step(name):
     assert _finite(grads)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", LM_ARCHS)
 def test_lm_decode_step(name):
     from repro.models import transformer as tf
@@ -115,6 +117,7 @@ def test_gcn_molecule_batched():
     assert _finite(out)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", RECSYS_ARCHS)
 def test_recsys_train_step(name):
     from repro.models import recsys
@@ -152,6 +155,7 @@ def test_recsys_retrieval(name):
     assert _finite(scores)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ["kgat", "kgcn", "kgin"])
 def test_paper_kgnn_train_step(name):
     from repro.models import kgnn

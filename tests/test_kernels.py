@@ -60,6 +60,39 @@ def test_dequant_matmul_vs_oracle(bits, shape, n):
                                atol=2e-4)
 
 
+@pytest.mark.parametrize("bits", [1, 2, 4])
+def test_quantize_odd_feature_dim_falls_back(bits):
+    """d % (8/bits) != 0 can't use the fused pack kernel; ops.quantize
+    must fall back to the jnp quantizer (same QTensor layout) instead of
+    raising."""
+    d = 65  # odd: 65 % {8,4,2} != 0
+    x = jax.random.normal(KEY, (12, d))
+    q = kops.quantize(x, KEY, bits=bits)  # must not raise
+    from repro.core.quant import quantize as core_q
+    r = core_q(x, KEY, bits=bits)  # fallback == jnp quantizer, same draws
+    np.testing.assert_array_equal(np.asarray(q.packed), np.asarray(r.packed))
+    # roundtrip bounded by one quantization bin per row
+    err = jnp.abs(core_dequantize(q) - x)
+    assert float((err - q.scale).max()) < 1e-5
+
+
+def test_odd_feature_dim_trains_end_to_end_pallas():
+    """The padded-pack fallback QTensor must survive the BACKWARD too:
+    dequant_matmul and spmm_grad_ew both consume it (regression: the
+    fused kernel asserted dp*cpb == dim and crashed in grad)."""
+    from repro.core import act_matmul
+    from repro.core.policy import ACTPolicy
+    d = 65
+    x = jax.random.normal(KEY, (16, d))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (d, 8))
+    pol = ACTPolicy(bits=4, kernel="pallas")
+    gw = jax.grad(lambda w_: (act_matmul(
+        x, w_, key=KEY, policy=pol) ** 2).sum())(w)
+    exact = jax.grad(lambda w_: ((x @ w_) ** 2).sum())(w)
+    rel = float(jnp.abs(gw - exact).max() / jnp.abs(exact).max())
+    assert rel < 0.25, rel
+
+
 def test_kernel_core_interop():
     """Either backend can dequantize the other's QTensor (shared layout)."""
     x = jax.random.normal(KEY, (32, 64))

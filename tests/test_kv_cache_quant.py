@@ -5,6 +5,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.models import transformer as tf
 
@@ -25,6 +26,7 @@ def test_cache_bytes_halved():
     assert b8 < 0.5 * b16, (b8, b16)
 
 
+@pytest.mark.slow
 def test_decode_parity_int8_vs_fp_cache():
     params = tf.init_params(KEY, CFG)
     prompt = jax.random.randint(KEY, (2, 16), 0, CFG.vocab)

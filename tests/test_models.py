@@ -4,9 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core.policy import FP32
+pytest.importorskip("hypothesis")  # optional dep — skip module when absent
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.policy import FP32  # noqa: E402
 
 KEY = jax.random.PRNGKey(0)
 

@@ -9,9 +9,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core.quant import (
+pytest.importorskip("hypothesis")  # optional dep — skip module when absent
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.quant import (  # noqa: E402
     act_bytes,
     dequantize,
     pack_bits,
