@@ -2,8 +2,11 @@
 
 Trains real KGNNs (KGAT / KGCN / KGIN) on the synthetic KG dataset with a
 planted latent-factor signal, evaluates Recall@20 / NDCG@20 with the
-paper's protocol, and reports per-step wall time + analytic activation
-memory under each quantization policy.
+paper's protocol, and reports per-step wall time + activation memory
+derived from the residual trace (the ops record what they save while the
+loss is traced under a recording ``ActContext`` — no hand-maintained
+shape tables). Policies may be uniform (``bits=``) or a per-site
+``PolicySchedule`` (``schedule=``).
 """
 
 from __future__ import annotations
@@ -14,8 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import activation_bytes_report, step_key
-from repro.core.policy import policy_for_bits
+from repro.core import act_context, step_key, traced_activation_report
+from repro.core.policy import as_schedule, policy_for_bits
 from repro.data.csr import maybe_attach_layout
 from repro.data.synthetic import KGDataset, bpr_batches, gen_kg_dataset
 from repro.models import kgnn
@@ -56,13 +59,22 @@ def evaluate(params, g, cfg, ds: KGDataset, k=20):
 def train_kgnn(model: str, *, bits: int | None, stochastic: bool = True,
                steps: int = 200, dim: int = 32, batch: int = 256,
                lr: float = 5e-3, seed: int = 0, ds: KGDataset | None = None,
-               eval_every: int = 0, kernel: str = "jnp") -> dict:
-    """Train one (model × policy) cell; returns metrics + timings + curves."""
+               eval_every: int = 0, kernel: str = "jnp",
+               schedule=None) -> dict:
+    """Train one (model × policy) cell; returns metrics + timings + curves.
+
+    ``schedule`` (an ``ACTPolicy`` or ``PolicySchedule``) overrides the
+    uniform policy built from ``bits``; either way each step runs inside an
+    ``act_context`` so per-site policies and scope-hashed SR keys apply.
+    """
     ds = ds or dataset(seed=0)
     cfg = make_cfg(model, ds, dim=dim)
-    policy = policy_for_bits(bits, stochastic=stochastic, kernel=kernel)
+    mixed = schedule is not None
+    if schedule is None:
+        schedule = policy_for_bits(bits, stochastic=stochastic, kernel=kernel)
+    schedule = as_schedule(schedule)
     g = jax.tree_util.tree_map(jnp.asarray, ds.graph)
-    g = maybe_attach_layout(g, policy, model=model)
+    g = maybe_attach_layout(g, schedule, model=model)
     params = kgnn.init_params(jax.random.PRNGKey(seed), cfg)
     opt = adam(lr)
     opt_state = opt.init(params)
@@ -70,16 +82,21 @@ def train_kgnn(model: str, *, bits: int | None, stochastic: bool = True,
 
     @jax.jit
     def train_step(params, opt_state, batch_, key):
-        loss, grads = jax.value_and_grad(kgnn.bpr_loss)(
-            params, g, batch_, cfg, policy=policy, key=key)
+        def loss_fn(p):
+            with act_context(schedule, key):
+                return kgnn.bpr_loss(p, g, batch_, cfg)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
         params, opt_state = opt.update(grads, opt_state, params)
         return params, opt_state, loss
 
     it = bpr_batches(ds, batch, seed=seed)
     losses, curve = [], []
     t_total = 0.0
+    b0 = None
     for step in range(steps):
         b = jax.tree_util.tree_map(jnp.asarray, next(it))
+        b0 = b if b0 is None else b0
         t0 = time.perf_counter()
         params, opt_state, loss = train_step(params, opt_state, b,
                                              step_key(root, step))
@@ -91,10 +108,15 @@ def train_kgnn(model: str, *, bits: int | None, stochastic: bool = True,
             r, n = evaluate(params, g, cfg, ds)
             curve.append({"step": step + 1, "recall": r, "ndcg": n})
     recall, ndcg = evaluate(params, g, cfg, ds)
-    shapes = kgnn.activation_shapes(cfg, n_edges=len(np.asarray(g.src)))
-    mem = activation_bytes_report(shapes, policy)
+    # activation memory from the residual trace (shape-only eval_shape pass)
+    mem = traced_activation_report(
+        lambda p: kgnn.bpr_loss(p, g, b0, cfg), params, schedule=schedule)
     return {
-        "model": model, "bits": bits, "stochastic": stochastic,
+        # a per-site schedule is not a uniform bit-width — don't label it
+        # as one in persisted results
+        "model": model, "bits": None if mixed else bits,
+        "schedule": repr(schedule) if mixed else None,
+        "stochastic": stochastic,
         "recall@20": recall, "ndcg@20": ndcg,
         "final_loss": float(np.mean(losses[-10:])),
         "losses": losses, "eval_curve": curve,

@@ -1,24 +1,35 @@
 """Paper Table 5: activation memory / step time / accuracy trade-off.
 
-"Act Mem" is analytic byte accounting over the exact saved-activation
-shapes (the same O(L·N·d) tensors the paper prices); ratios reproduce the
-paper's 2.2×/3×/7×/10× ladder. Step time measures the real (de)quant
-overhead of the jnp path on this host (paper reports 8-55% on GPU).
+"Act Mem" is byte accounting derived from the residual trace — the ops
+record exactly what they save for backward while the loss is traced under
+a recording ``ActContext`` (the same O(L·N·d) tensors the paper prices);
+ratios reproduce the paper's 2.2×/3×/7×/10× ladder. Step time measures
+the real (de)quant overhead of the jnp path on this host (paper reports
+8-55% on GPU). ``mixed_schedule=True`` appends the tiered
+first-layer-INT8/rest-INT2 preset row per model (per-site bits via
+``PolicySchedule``).
 """
 
 from __future__ import annotations
+
+from repro.core.policy import first_layer_int8_rest_int2
 
 from .common import train_kgnn
 
 BITS = (None, 8, 4, 2, 1)
 
 
-def run(*, steps=60, dim=32, models=("kgat", "kgcn", "kgin")) -> list[dict]:
+def run(*, steps=60, dim=32, models=("kgat", "kgcn", "kgin"),
+        mixed_schedule: bool = False) -> list[dict]:
     rows = []
     for model in models:
         base_ms = base_rec = base_mem = None
-        for bits in BITS:
-            r = train_kgnn(model, bits=bits, steps=steps, dim=dim)
+        cells = [(bits, None) for bits in BITS]
+        if mixed_schedule:
+            cells.append(("8/2", first_layer_int8_rest_int2()))
+        for bits, sched in cells:
+            r = train_kgnn(model, bits=bits if sched is None else 2,
+                           steps=steps, dim=dim, schedule=sched)
             if bits is None:
                 base_ms, base_rec = r["step_ms"], r["recall@20"]
                 base_mem = r["act_mem_fp32_bytes"]

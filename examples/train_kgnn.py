@@ -19,8 +19,8 @@ import jax.numpy as jnp
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from repro.core import step_key  # noqa: E402
-from repro.core.policy import policy_for_bits  # noqa: E402
+from repro.core import act_context  # noqa: E402
+from repro.core.policy import schedule_from_cli  # noqa: E402
 from repro.data.csr import maybe_attach_layout  # noqa: E402
 from repro.data.synthetic import bpr_batches, gen_kg_dataset  # noqa: E402
 from repro.models import kgnn  # noqa: E402
@@ -41,6 +41,9 @@ def main() -> None:
                     help="ACT backend (pallas = fused quant kernels; this "
                          "example's KGIN aggregation does not use act_spmm, "
                          "so the fused SPMM path applies to kgat/kgcn runs)")
+    ap.add_argument("--schedule", default=None,
+                    help="PolicySchedule spec (e.g. "
+                         "first_layer_int8_rest_int2); overrides --bits")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
@@ -52,10 +55,10 @@ def main() -> None:
     cfg = kgnn.KGNNConfig(
         model="kgin", n_users=ds.n_users, n_entities=ds.n_entities,
         n_relations=ds.n_relations, dim=args.dim, n_layers=3, readout="sum")
-    policy = policy_for_bits(args.bits if args.bits else None,
-                             kernel=args.kernel)
+    schedule = schedule_from_cli(args.schedule, args.bits,
+                                 kernel=args.kernel)
     g = jax.tree_util.tree_map(jnp.asarray, ds.graph)
-    g = maybe_attach_layout(g, policy, model=cfg.model)
+    g = maybe_attach_layout(g, schedule, model=cfg.model)
 
     params = kgnn.init_params(jax.random.PRNGKey(0), cfg)
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
@@ -69,9 +72,12 @@ def main() -> None:
     @jax.jit
     def train_step(state, batch, step):
         params, opt_state = state
-        loss, grads = jax.value_and_grad(kgnn.bpr_loss)(
-            params, g, batch, cfg, policy=policy,
-            key=step_key(root, step))
+
+        def loss_fn(p):
+            with act_context(schedule, root, step=step):
+                return kgnn.bpr_loss(p, g, batch, cfg)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
         params, opt_state = opt.update(grads, opt_state, params)
         return (params, opt_state), {"loss": loss}
 

@@ -4,8 +4,13 @@ Public API:
   quant:   quantize / dequantize / QTensor / pack_bits / unpack_bits
   act:     act_matmul / act_dense / act_relu / act_nonlin / act_rmsnorm /
            act_spmm / act_remat
-  policy:  ACTPolicy + FP32/INT8/INT4/INT2/INT1 presets
-  rng:     KeyChain / step_key
+  policy:  ACTPolicy + FP32/INT8/INT4/INT2/INT1 presets, PolicySchedule
+           (ordered per-site rule table) + parse_schedule / presets
+  context: ActContext / act_context — named scopes, schedule resolution,
+           scope-keyed SR, residual trace (DESIGN.md §6)
+  rng:     scope_key / step_key (KeyChain is legacy)
+  memory:  activation_bytes_report / traced_activation_report over the
+           residual trace
 """
 
 from .act import (
@@ -17,16 +22,40 @@ from .act import (
     act_rmsnorm,
     act_spmm,
 )
-from .memory import activation_bytes_report
-from .policy import FP32, INT1, INT2, INT4, INT8, ACTPolicy, policy_for_bits
+from .context import (
+    ActContext,
+    SavedResidual,
+    act_context,
+    current_context,
+    model_context,
+)
+from .memory import activation_bytes_report, traced_activation_report
+from .policy import (
+    FP32,
+    INT1,
+    INT2,
+    INT4,
+    INT8,
+    ACTPolicy,
+    PolicySchedule,
+    ScheduleRule,
+    as_schedule,
+    first_layer_int8_rest_int2,
+    parse_schedule,
+    policy_for_bits,
+)
 from .quant import QTensor, act_bytes, dequantize, pack_bits, quantize, unpack_bits
-from .rng import KeyChain, step_key
+from .rng import KeyChain, scope_hash, scope_key, step_key
 
 __all__ = [
     "ACTPolicy", "FP32", "INT8", "INT4", "INT2", "INT1", "policy_for_bits",
+    "PolicySchedule", "ScheduleRule", "as_schedule", "parse_schedule",
+    "first_layer_int8_rest_int2",
+    "ActContext", "SavedResidual", "act_context", "current_context",
+    "model_context",
     "QTensor", "quantize", "dequantize", "pack_bits", "unpack_bits", "act_bytes",
     "act_matmul", "act_dense", "act_relu", "act_nonlin", "act_rmsnorm",
     "act_spmm", "act_remat",
-    "KeyChain", "step_key",
-    "activation_bytes_report",
+    "KeyChain", "step_key", "scope_key", "scope_hash",
+    "activation_bytes_report", "traced_activation_report",
 ]

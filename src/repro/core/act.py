@@ -28,7 +28,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from .policy import ACTPolicy
+from .context import current_context
+from .policy import ACTPolicy, FP32
 from .quant import QTensor, dequantize, quantize
 
 __all__ = [
@@ -40,6 +41,57 @@ __all__ = [
     "act_spmm",
     "act_remat",
 ]
+
+
+# ---------------------------------------------------------------------------
+# context resolution (DESIGN.md §6)
+#
+# Every public op accepts explicit ``key=`` / ``policy=`` kwargs (the
+# pre-context API, still first in precedence) and an optional ``scope=``
+# site name. Whatever is omitted resolves from the ambient ActContext; with
+# no context either, the policy defaults to FP32. The resolved site is
+# recorded on the context (residual shape/bits) for traced memory
+# accounting.
+# ---------------------------------------------------------------------------
+
+
+@functools.cache
+def _dummy_key() -> jax.Array:
+    # placeholder riding the op signature when no randomness is consumed
+    # (inactive policy or nearest rounding)
+    return jax.random.PRNGKey(0)
+
+
+def _resolve_site(op_kind: str, scope: str | None, key,
+                  policy: ACTPolicy | None, *, need_key: bool = True):
+    """(scope, policy, key, ctx) for one op call; see block comment above."""
+    ctx = current_context()
+    name = None
+    if ctx is not None:
+        name = ctx.qualify(scope or op_kind)
+        if policy is None:
+            policy = ctx.policy_for(op_kind, name)
+        if key is None:
+            key = ctx.key_for(name)
+    if policy is None:
+        policy = FP32
+    if key is None:
+        if need_key and policy.requires_key:
+            raise ValueError(
+                f"act op {name or scope or op_kind!r}: stochastic rounding "
+                "under an active policy needs a PRNG key — pass key=, or "
+                "run inside act_context(..., root_key=...). (A fixed "
+                "default key would replay identical rounding noise.)")
+        key = _dummy_key()
+    return name, policy, key, ctx
+
+
+def _record(ctx, name, op_kind, shape, policy: ACTPolicy) -> None:
+    # bits=None prices the uncompressed fp32 residual — what vanilla
+    # autodiff buffers when the policy is inactive/disabled
+    if ctx is not None and name is not None:
+        ctx.record(name, op_kind, shape,
+                   policy.bits if policy.active else None)
 
 
 def _maybe_quantize(x: jax.Array, key: jax.Array, policy: ACTPolicy):
@@ -91,16 +143,24 @@ def _act_matmul_bwd(policy, res, g):
 _act_matmul.defvjp(_act_matmul_fwd, _act_matmul_bwd)
 
 
-def act_matmul(x, w, *, key, policy: ACTPolicy):
-    """``x @ w`` with b-bit residual storage of ``x``."""
+def act_matmul(x, w, *, key=None, policy: ACTPolicy | None = None,
+               scope: str | None = None):
+    """``x @ w`` with b-bit residual storage of ``x``.
+
+    ``key``/``policy`` omitted resolve from the ambient ``ActContext`` at
+    the site named ``scope`` (default ``"matmul"``); see DESIGN.md §6.
+    """
+    name, policy, key, ctx = _resolve_site("matmul", scope, key, policy)
+    _record(ctx, name, "matmul", x.shape, policy)
     if not policy.enabled:
         return jnp.einsum("...k,kn->...n", x, w)
     return _act_matmul(policy, x, w, key)
 
 
-def act_dense(x, w, b, *, key, policy: ACTPolicy):
+def act_dense(x, w, b, *, key=None, policy: ACTPolicy | None = None,
+              scope: str | None = None):
     """Affine layer; bias grad needs no activation so it rides for free."""
-    out = act_matmul(x, w, key=key, policy=policy)
+    out = act_matmul(x, w, key=key, policy=policy, scope=scope)
     if b is not None:
         out = out + b
     return out
@@ -112,8 +172,7 @@ def act_dense(x, w, b, *, key, policy: ACTPolicy):
 
 
 @jax.custom_vjp
-def act_relu(x):
-    """ReLU with a 1-bit exact mask residual (paper §4.1.4) — lossless."""
+def _act_relu(x):
     return jnp.maximum(x, 0)
 
 
@@ -126,7 +185,20 @@ def _act_relu_bwd(mask, g):
     return (jnp.where(mask, g, 0),)
 
 
-act_relu.defvjp(_act_relu_fwd, _act_relu_bwd)
+_act_relu.defvjp(_act_relu_fwd, _act_relu_bwd)
+
+
+def act_relu(x, *, scope: str | None = None):
+    """ReLU with a 1-bit exact mask residual (paper §4.1.4) — lossless.
+
+    Policy-independent (the mask is exact at any bit-width); under an
+    ambient context the mask still shows up in the residual trace.
+    """
+    ctx = current_context()
+    if ctx is not None:
+        ctx.record(ctx.qualify(scope or "relu"), "relu", x.shape, 1,
+                   exact_mask=True)
+    return _act_relu(x)
 
 
 def _d_silu(x):
@@ -175,8 +247,11 @@ def _act_nonlin_bwd(name, policy, qx, g):
 _act_nonlin.defvjp(_act_nonlin_fwd, _act_nonlin_bwd)
 
 
-def act_nonlin(x, *, key, policy: ACTPolicy, fn: str):
+def act_nonlin(x, *, fn: str, key=None, policy: ACTPolicy | None = None,
+               scope: str | None = None):
     """Elementwise nonlinearity saving a quantized copy of its input."""
+    name, policy, key, ctx = _resolve_site("nonlin", scope or fn, key, policy)
+    _record(ctx, name, "nonlin", x.shape, policy)
     if not policy.enabled:
         return _NONLIN[fn][0](x)
     return _act_nonlin(fn, policy, x, key)
@@ -214,8 +289,11 @@ def _act_rmsnorm_bwd(policy, res, g):
 _act_rmsnorm.defvjp(_act_rmsnorm_fwd, _act_rmsnorm_bwd)
 
 
-def act_rmsnorm(x, gamma, *, key, policy: ACTPolicy, eps: float = 1e-6):
+def act_rmsnorm(x, gamma, *, key=None, policy: ACTPolicy | None = None,
+                scope: str | None = None, eps: float = 1e-6):
     """RMSNorm storing its input quantized; rstd recomputed from x̂ in bwd."""
+    name, policy, key, ctx = _resolve_site("rmsnorm", scope, key, policy)
+    _record(ctx, name, "rmsnorm", x.shape, policy)
     if not policy.enabled:
         r = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
         return x * r * gamma
@@ -347,13 +425,15 @@ def _pallas_layout_ok(layout, x, src, num_nodes: int) -> bool:
     return True
 
 
-def act_spmm(x, src, dst, ew, *, num_nodes: int, key, policy: ACTPolicy,
+def act_spmm(x, src, dst, ew, *, num_nodes: int, key=None,
+             policy: ACTPolicy | None = None, scope: str | None = None,
              layout=None):
     """Weighted sparse aggregation ``H[v] = Σ_{(u,r,v)} w_e · x[u]``.
 
     ``src``/``dst`` are int edge endpoints, ``ew`` per-edge weights. When
     ``ew`` is None (plain normalized adjacency, e.g. GCN/KGCN) the op is
-    linear with index-only residuals — nothing to compress, handled exactly.
+    linear with index-only residuals — nothing to compress, handled exactly
+    (and nothing is recorded in the residual trace).
 
     ``layout`` is an optional blocked-CSR ``repro.data.csr.SpmmLayout``
     for the same edge list. Under ``ACTPolicy(kernel="pallas")`` it routes
@@ -366,6 +446,8 @@ def act_spmm(x, src, dst, ew, *, num_nodes: int, key, policy: ACTPolicy,
     ``layout`` in sync with ``src``/``dst`` (``CKG.layout`` rides inside
     the graph pytree precisely so they travel together).
     """
+    name, policy, key, ctx = _resolve_site("spmm", scope, key, policy,
+                                           need_key=ew is not None)
     fused = policy.kernel == "pallas" and \
         _pallas_layout_ok(layout, x, src, num_nodes)
     if ew is None:
@@ -374,6 +456,7 @@ def act_spmm(x, src, dst, ew, *, num_nodes: int, key, policy: ACTPolicy,
             return _spmm_linear_pallas(treedef, x, *leaves)
         msgs = x[src]
         return jax.ops.segment_sum(msgs, dst, num_segments=num_nodes)
+    _record(ctx, name, "spmm", x.shape, policy)
     if not policy.enabled:
         msgs = x[src] * ew[:, None]
         return jax.ops.segment_sum(msgs, dst, num_segments=num_nodes)
@@ -388,7 +471,8 @@ def act_spmm(x, src, dst, ew, *, num_nodes: int, key, policy: ACTPolicy,
 # ---------------------------------------------------------------------------
 
 
-def act_remat(fn: Callable, policy: ACTPolicy):
+def act_remat(fn: Callable, policy: ACTPolicy | None = None, *,
+              scope: str | None = None, repeat: int = 1):
     """Wrap ``fn(params, x, consts) -> y`` to save only Quant(x) backward.
 
     The backward pass dequantizes x̂ and *recomputes* ``fn`` under ``jax.vjp``
@@ -398,37 +482,55 @@ def act_remat(fn: Callable, policy: ACTPolicy):
 
     ``consts`` is a non-differentiated pytree (positions, masks, …) passed
     as an explicit argument — custom_vjp forbids closed-over tracers.
-    Returns ``wrapped(params, x, key, consts=None)``; under an inactive
-    policy it degrades to plain ``jax.checkpoint`` (the FP32 baseline).
+    Returns ``wrapped(params, x, key=None, consts=None)``; under an
+    inactive policy it degrades to plain ``jax.checkpoint`` (the FP32
+    baseline). Like every other act op, ``policy=None`` resolves from the
+    ambient context at CALL time (site ``scope`` / ``"remat"``), so a
+    block wrapped outside any context still honors the schedule it is
+    later applied under; the quantized-input save is recorded per apply.
+    ``repeat`` is for callers that apply the wrapped fn under
+    ``jax.lax.scan`` (one trace, ``repeat`` runtime applications): the
+    residual trace then carries one record per buffered instance.
     """
 
-    if not policy.active:
-        ck = jax.checkpoint(lambda params, x, consts: fn(params, x, consts))
+    explicit_policy = policy
 
-        def baseline(params, x, key=None, consts=None):
-            del key
-            return ck(params, x, consts)
+    @functools.lru_cache(maxsize=None)
+    def active_path(pol: ACTPolicy):
+        # one custom_vjp instance per resolved policy (hashable dataclass)
+        @jax.custom_vjp
+        def wrapped(params, x, key, consts):
+            return fn(params, x, consts)
 
-        return baseline
+        def fwd(params, x, key, consts):
+            return fn(params, x, consts), (
+                params, _maybe_quantize(x, key, pol), consts)
 
-    @jax.custom_vjp
-    def wrapped(params, x, key, consts):
-        return fn(params, x, consts)
+        def bwd(res, g):
+            params, qx, consts = res
+            xhat = _maybe_dequantize(qx)
+            _, vjp = jax.vjp(lambda p, xx: fn(p, xx, consts), params, xhat)
+            dparams, dx = vjp(g)
+            return dparams, dx, None, None
 
-    def fwd(params, x, key, consts):
-        return fn(params, x, consts), (
-            params, _maybe_quantize(x, key, policy), consts)
+        wrapped.defvjp(fwd, bwd)
+        return wrapped
 
-    def bwd(res, g):
-        params, qx, consts = res
-        xhat = _maybe_dequantize(qx)
-        _, vjp = jax.vjp(lambda p, xx: fn(p, xx, consts), params, xhat)
-        dparams, dx = vjp(g)
-        return dparams, dx, None, None
+    baseline = None  # lazy jax.checkpoint, shared across applies
 
-    wrapped.defvjp(fwd, bwd)
-
-    def apply(params, x, key, consts=None):
-        return wrapped(params, x, key, consts)
+    def apply(params, x, key=None, consts=None):
+        nonlocal baseline
+        name, pol, key, ctx = _resolve_site("remat", scope, key,
+                                            explicit_policy)
+        _record(ctx, name, "remat", x.shape, pol)
+        for i in range(1, repeat):  # scan buffers `repeat` instances
+            _record(ctx, None if name is None else f"{name}[{i}]",
+                    "remat", x.shape, pol)
+        if not pol.active:
+            if baseline is None:
+                baseline = jax.checkpoint(
+                    lambda params, x, consts: fn(params, x, consts))
+            return baseline(params, x, consts)
+        return active_path(pol)(params, x, key, consts)
 
     return apply

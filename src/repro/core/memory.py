@@ -1,46 +1,52 @@
 """Activation-memory accounting (paper Table 5 "Act Mem" column).
 
-Models register the shapes of the activation maps they would save per train
-step; this module prices them under a given ACT policy. This is analytic
-accounting over the *same* shapes XLA would buffer — on CPU we cannot read
-real GPU buffers, and on TPU the dry-run's memory_analysis() provides the
-device-level ground truth.
+Derived from the **residual trace**: while a loss function is traced under
+a recording ``ActContext``, every compressed op records the residual it
+saves (scope, shape, bits, exact-mask flag — ``SavedResidual``), and this
+module prices those records. Footprint accounting therefore reflects what
+is *actually buffered* by the real ctx chain — there are no hand-maintained
+shape tables to drift (the pre-context ``activation_shapes`` functions in
+the model modules are gone). This stays analytic accounting — on CPU we
+cannot read real device buffers; on TPU the dry-run's ``memory_analysis()``
+provides the device-level ground truth.
 """
 
 from __future__ import annotations
 
-from .policy import ACTPolicy
+from typing import Sequence
+
 from .quant import act_bytes
 
-__all__ = ["activation_bytes_report"]
+__all__ = ["activation_bytes_report", "traced_activation_report"]
 
 
-def activation_bytes_report(
-    shapes: dict[str, tuple[int, ...]],
-    policy: ACTPolicy,
-    *,
-    exact_bool_masks: tuple[str, ...] = (),
-) -> dict[str, float]:
-    """Price a model's saved-activation shapes under ``policy``.
+def _mask_bytes(shape: tuple[int, ...]) -> int:
+    """Exact 1-bit bool mask: b/8 payload per row, no scale/zero overhead."""
+    n = 1
+    for s in shape:
+        n *= s
+    rows = n // shape[-1]
+    return rows * ((shape[-1] + 7) // 8)
 
-    shapes           : name -> activation shape (as saved for backward)
-    exact_bool_masks : names stored as 1-bit exact masks regardless of policy
-                       (e.g. ReLU masks)
 
-    Returns dict with per-tensor bytes, totals, and the compression ratio
-    vs the FP32 baseline (the paper's headline 7.1x at INT2).
+def activation_bytes_report(records: Sequence) -> dict[str, float]:
+    """Price a residual trace (``ActContext.records``).
+
+    Each record carries its *own* storage width, so mixed per-site
+    schedules price correctly. Returns per-scope bytes, totals, and the
+    compression ratio vs the FP32 baseline of the same trace (the paper's
+    headline 7.1x at INT2).
     """
-    bits = policy.bits if policy.active else None
     report: dict[str, float] = {}
     total = 0
     total_fp32 = 0
-    for name, shape in shapes.items():
-        fp32 = act_bytes(shape, None)
-        if name in exact_bool_masks:
-            b = act_bytes(shape, 1) - _row_overhead(shape)  # pure 1-bit mask
+    for r in records:
+        fp32 = act_bytes(r.shape, None)
+        if r.exact_mask:
+            b = _mask_bytes(r.shape)
         else:
-            b = act_bytes(shape, bits)
-        report[name] = b
+            b = act_bytes(r.shape, r.bits)
+        report[r.scope] = b
         total += b
         total_fp32 += fp32
     report["total_bytes"] = total
@@ -49,9 +55,23 @@ def activation_bytes_report(
     return report
 
 
-def _row_overhead(shape: tuple[int, ...]) -> int:
-    n = 1
-    for s in shape:
-        n *= s
-    rows = n // shape[-1]
-    return rows * 8  # scale+zero fp32 per row
+def traced_activation_report(fn, *args, schedule=None, key=None,
+                             step=0) -> dict[str, float]:
+    """Trace ``fn(*args)`` under a recording context and price the residuals.
+
+    Runs ``jax.eval_shape`` — no FLOPs, no device buffers — inside a fresh
+    ``ActContext`` so the ops self-report what they would save for the
+    backward pass. ``fn`` must pick its policies up from the ambient
+    context (i.e. not pass explicit ``policy=`` overrides you care about
+    pricing differently).
+    """
+    import jax
+
+    from .context import ActContext
+
+    ctx = ActContext(schedule,
+                     key if key is not None else jax.random.PRNGKey(0),
+                     step=step)
+    with ctx:
+        jax.eval_shape(fn, *args)
+    return activation_bytes_report(ctx.records)

@@ -1,20 +1,49 @@
 """Deterministic key derivation for stochastic rounding.
 
-Every compressed op consumes one PRNG key. ``KeyChain`` derives a fresh key
-per call via ``fold_in`` on a monotonically increasing counter — fully
-deterministic given the root key, which makes fault-tolerant replay exact
-(the restarted step reproduces the same rounding decisions).
+Every compressed op consumes one PRNG key. Keys are derived from the op's
+*named scope* (e.g. ``"kgat/layer2/spmm"``):
+
+    key = fold_in(fold_in(root, crc32(scope)), step)
+
+which is deterministic given the root key — fault-tolerant replay is exact
+(a restarted step reproduces the same rounding decisions) — and **stable
+under program edits**: adding or removing an op changes no other op's key.
+The legacy ``KeyChain`` derives keys from a positional counter instead;
+inserting one op silently re-keys every op after it (changing replay), so
+new code should use scopes (``repro.core.context``) and ``KeyChain`` is
+kept only for explicit-kwargs call sites that predate the context API.
 """
 
 from __future__ import annotations
 
-import jax
+import zlib
 
-__all__ = ["KeyChain", "step_key"]
+import jax
+import jax.numpy as jnp
+
+__all__ = ["KeyChain", "step_key", "scope_hash", "scope_key"]
+
+
+def scope_hash(scope: str) -> int:
+    """Stable 32-bit hash of a scope path (crc32 — not Python ``hash``,
+    which is salted per process and would break cross-run replay)."""
+    return zlib.crc32(scope.encode("utf-8")) & 0xFFFFFFFF
+
+
+def scope_key(root: jax.Array, scope: str,
+              step: jax.Array | int = 0) -> jax.Array:
+    """Key for one op site at one step; see module docstring."""
+    return jax.random.fold_in(
+        jax.random.fold_in(root, jnp.uint32(scope_hash(scope))), step)
 
 
 class KeyChain:
-    """Stateful (trace-time) key dispenser. Use inside a single traced fn."""
+    """Stateful (trace-time) positional key dispenser — legacy.
+
+    Scope-derived keys (``scope_key`` / ``ActContext``) supersede this:
+    the counter re-keys every downstream op when one is inserted. Still
+    valid inside a single traced fn whose op list never changes.
+    """
 
     def __init__(self, root: jax.Array):
         self._root = root

@@ -19,34 +19,50 @@ Usage:
 """
 
 import argparse
+import contextlib
 import json
+import re
 import time
 import traceback
 
 import jax
 
 from repro.configs import ARCHS, ASSIGNED, get
-from repro.core.policy import policy_for_bits
+from repro.core import act_context
+from repro.core.policy import parse_schedule, policy_for_bits
 from repro.launch.mesh import make_production_mesh
 from repro.launch.partition import build_cell
 from repro.launch.roofline import HW, parse_hlo, roofline_terms
 
 
 def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
-             bits: int | None, out_dir: str, verbose: bool = True) -> dict:
+             bits: int | None, out_dir: str, verbose: bool = True,
+             schedule: str | None = None) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.devices.size
     arch = get(arch_name)
-    policy = policy_for_bits(bits)
+    # With --schedule, the cell is lowered inside an ambient act_context
+    # (policy=None rides down to the models, which resolve per-site); the
+    # uniform --bits path keeps passing the explicit policy.
+    if schedule is not None:
+        policy = None
+        cm = act_context(parse_schedule(schedule), jax.random.PRNGKey(0))
+    else:
+        policy = policy_for_bits(bits)
+        cm = contextlib.nullcontext()
     rec = {
         "arch": arch_name, "shape": shape_name,
         "mesh": "x".join(map(str, mesh.devices.shape)),
-        "bits": bits, "n_devices": n_dev,
+        # --schedule overrides --bits; never attribute a mixed-schedule
+        # cell's numbers to a uniform bit-width in the artifact
+        "bits": None if schedule is not None else bits,
+        "schedule": schedule, "n_devices": n_dev,
     }
     t0 = time.time()
     try:
-        cell = build_cell(arch, shape_name, mesh, policy=policy)
-        lowered = cell.lower(mesh)
+        with cm:
+            cell = build_cell(arch, shape_name, mesh, policy=policy)
+            lowered = cell.lower(mesh)
         rec["lower_s"] = round(time.time() - t0, 2)
         t1 = time.time()
         compiled = lowered.compile()
@@ -91,7 +107,11 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
                   flush=True)
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
-        tag = f"{arch_name}__{shape_name}__{rec['mesh']}__b{bits}"
+        if schedule is not None:  # distinct artifact per schedule spec
+            suffix = "s" + re.sub(r"[^A-Za-z0-9._-]", "_", schedule)
+        else:
+            suffix = f"b{bits}"
+        tag = f"{arch_name}__{shape_name}__{rec['mesh']}__{suffix}"
         with open(os.path.join(out_dir, tag + ".json"), "w") as f:
             json.dump(rec, f, indent=1, default=float)
     return rec
@@ -107,6 +127,9 @@ def main() -> None:
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--bits", type=int, default=2,
                     help="ACT bit-width (0 = FP32 baseline)")
+    ap.add_argument("--schedule", default=None,
+                    help="PolicySchedule spec (preset | intN/fp32 | rules); "
+                         "overrides --bits, lowers cells under act_context")
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--include-kgnn", action="store_true",
                     help="also dry-run the paper's KGAT/KGCN/KGIN at "
@@ -130,7 +153,8 @@ def main() -> None:
                 [s.name for s in arch.shapes]
             for sn in shape_names:
                 results.append(run_cell(an, sn, multi_pod=mp, bits=bits,
-                                        out_dir=args.out))
+                                        out_dir=args.out,
+                                        schedule=args.schedule))
     ok = sum(r["ok"] for r in results)
     print(f"[dryrun] {ok}/{len(results)} cells compiled "
           f"(hw: {HW['peak_flops']/1e12:.0f} TF/s, "

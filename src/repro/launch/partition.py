@@ -577,7 +577,9 @@ def _kgnn_cell(arch: ArchSpec, shape: ShapeSpec, mesh,
 
 
 def build_cell(arch: ArchSpec, shape_name: str, mesh, *,
-               policy: ACTPolicy = INT2) -> Cell:
+               policy: ACTPolicy | None = INT2) -> Cell:
+    # policy=None defers per-site policy resolution to the ambient
+    # ActContext at lowering time (dryrun --schedule path)
     shape = arch.shape(shape_name)
     fam = arch.family
     if fam in ("lm", "moe_lm"):

@@ -6,6 +6,15 @@ configs are exercised via dryrun.py).
 
   PYTHONPATH=src python -m repro.launch.train --arch kgat --steps 100
   PYTHONPATH=src python -m repro.launch.train --arch fm --steps 50 --bits 4
+  PYTHONPATH=src python -m repro.launch.train --arch kgat \
+      --schedule first_layer_int8_rest_int2
+
+``--schedule`` takes a ``PolicySchedule`` spec (preset name, uniform
+bit-width, or ordered ``[kind:]glob=bits`` rules — see
+``repro.core.policy.parse_schedule``); each train step then runs inside an
+``act_context`` so every op site resolves its own policy and
+stochastic-rounding key (scope-hashed, replay-exact). ``--bits`` remains
+the uniform fast path.
 """
 
 from __future__ import annotations
@@ -19,13 +28,13 @@ import numpy as np
 
 from repro.configs import ARCHS, get
 from repro.configs.smoke import reduced
-from repro.core import step_key
-from repro.core.policy import policy_for_bits
+from repro.core import act_context
+from repro.core.policy import PolicySchedule, schedule_from_cli
 from repro.training.optimizer import adam
 from repro.training.trainer import Trainer, TrainerConfig
 
 
-def _kgnn_job(arch, policy, args):
+def _kgnn_job(arch, schedule: PolicySchedule, args):
     from repro.data.csr import maybe_attach_layout
     from repro.data.synthetic import bpr_batches, gen_kg_dataset
     from repro.models import kgnn
@@ -36,7 +45,7 @@ def _kgnn_job(arch, policy, args):
         dim=32, n_layers=3,
         readout="concat" if arch.model_cfg.model == "kgat" else "sum")
     g = jax.tree_util.tree_map(jnp.asarray, ds.graph)
-    g = maybe_attach_layout(g, policy, model=cfg.model)
+    g = maybe_attach_layout(g, schedule, model=cfg.model)
     params = kgnn.init_params(jax.random.PRNGKey(0), cfg)
     opt = adam(3e-3)
     root = jax.random.PRNGKey(1)
@@ -44,8 +53,12 @@ def _kgnn_job(arch, policy, args):
     @jax.jit
     def train_step(state, batch, step):
         params, opt_state = state
-        loss, grads = jax.value_and_grad(kgnn.bpr_loss)(
-            params, g, batch, cfg, policy=policy, key=step_key(root, step))
+
+        def loss_fn(p):
+            with act_context(schedule, root, step=step):
+                return kgnn.bpr_loss(p, g, batch, cfg)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
         params, opt_state = opt.update(grads, opt_state, params)
         return (params, opt_state), {"loss": loss}
 
@@ -56,7 +69,7 @@ def _kgnn_job(arch, policy, args):
     return train_step, (params, opt.init(params)), data()
 
 
-def _lm_job(arch, policy, args):
+def _lm_job(arch, schedule: PolicySchedule, args):
     from repro.data.synthetic import lm_batches
     from repro.models import transformer as tf
     cfg = reduced(arch).model_cfg
@@ -67,8 +80,12 @@ def _lm_job(arch, policy, args):
     @jax.jit
     def train_step(state, batch, step):
         params, opt_state = state
-        loss, grads = jax.value_and_grad(tf.lm_loss)(
-            params, batch, cfg=cfg, policy=policy, key=step_key(root, step))
+
+        def loss_fn(p):
+            with act_context(schedule, root, step=step):
+                return tf.lm_loss(p, batch, cfg=cfg)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
         params, opt_state = opt.update(grads, opt_state, params)
         return (params, opt_state), {"loss": loss}
 
@@ -79,7 +96,7 @@ def _lm_job(arch, policy, args):
     return train_step, (params, opt.init(params)), data()
 
 
-def _recsys_job(arch, policy, args):
+def _recsys_job(arch, schedule: PolicySchedule, args):
     from repro.data.synthetic import criteo_batches
     from repro.models import recsys
     cfg = reduced(arch).model_cfg
@@ -92,8 +109,8 @@ def _recsys_job(arch, policy, args):
         params, opt_state = state
 
         def loss_fn(p):
-            logits = recsys.forward(p, batch, cfg, policy=policy,
-                                    key=step_key(root, step))
+            with act_context(schedule, root, step=step):
+                logits = recsys.forward(p, batch, cfg)
             lab = batch["label"]
             return -jnp.mean(lab * jax.nn.log_sigmoid(logits)
                              + (1 - lab) * jax.nn.log_sigmoid(-logits))
@@ -110,7 +127,7 @@ def _recsys_job(arch, policy, args):
     return train_step, (params, opt.init(params)), data()
 
 
-def _gnn_job(arch, policy, args):
+def _gnn_job(arch, schedule: PolicySchedule, args):
     from repro.data.csr import build_spmm_layout
     from repro.data.synthetic import cora_like
     from repro.models import gnn
@@ -118,7 +135,7 @@ def _gnn_job(arch, policy, args):
     feats, src, dst, labels = cora_like(n_nodes=300, d_feat=cfg.d_in)
     x, s, d, y = map(jnp.asarray, (feats, src, dst, labels))
     layout = build_spmm_layout(src, dst, n_dst=300) \
-        if policy.kernel == "pallas" else None
+        if schedule.kernel == "pallas" else None
     params = gnn.init_params(jax.random.PRNGKey(0), cfg)
     opt = adam(1e-2)
     root = jax.random.PRNGKey(1)
@@ -128,9 +145,9 @@ def _gnn_job(arch, policy, args):
         params, opt_state = state
 
         def loss_fn(p):
-            logits = gnn.gcn_forward(p, x, s, d, n_nodes=300, cfg=cfg,
-                                     policy=policy, key=step_key(root, step),
-                                     layout=layout)
+            with act_context(schedule, root, step=step):
+                logits = gnn.gcn_forward(p, x, s, d, n_nodes=300, cfg=cfg,
+                                         layout=layout)
             oh = jax.nn.one_hot(y, cfg.n_classes)
             return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
 
@@ -150,22 +167,24 @@ def main() -> None:
     ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--bits", type=int, default=2, help="0 = FP32 baseline")
+    ap.add_argument("--schedule", default=None,
+                    help="PolicySchedule spec (preset | intN/fp32 | "
+                         "'[kind:]glob=bits,...'); overrides --bits")
     ap.add_argument("--kernel", default="jnp", choices=["jnp", "pallas"],
                     help="ACT backend: jnp reference or fused Pallas kernels")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     arch = get(args.arch)
-    policy = policy_for_bits(args.bits if args.bits else None,
-                             kernel=args.kernel)
+    schedule = schedule_from_cli(args.schedule, args.bits, kernel=args.kernel)
 
     job = {
         "kgnn": _kgnn_job, "lm": _lm_job, "moe_lm": _lm_job,
         "recsys": _recsys_job, "gnn": _gnn_job,
     }[arch.family]
-    train_step, state, data = job(arch, policy, args)
+    train_step, state, data = job(arch, schedule, args)
     n = sum(x.size for x in jax.tree_util.tree_leaves(state[0]))
     print(f"[train] {args.arch} ({arch.family}) {n/1e6:.2f}M params "
-          f"bits={args.bits}")
+          f"schedule={args.schedule or ('fp32' if not args.bits else f'int{args.bits}')}")
     cfg = TrainerConfig(
         total_steps=args.steps,
         ckpt_dir=args.ckpt or tempfile.mkdtemp(prefix="repro_ckpt_"),

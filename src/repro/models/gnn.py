@@ -19,13 +19,20 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import ACTPolicy, FP32, KeyChain, act_matmul, act_relu, act_spmm
+from repro.core import (
+    ACTPolicy,
+    PolicySchedule,
+    act_matmul,
+    act_relu,
+    act_spmm,
+    model_context,
+)
 from repro.sharding.logical import constraint
 
 from .layers import glorot
 
 __all__ = ["GCNConfig", "init_params", "gcn_forward", "gcn_forward_blocks",
-           "gcn_forward_batched", "activation_shapes"]
+           "gcn_forward_batched"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,36 +65,44 @@ def _sym_norm(src, dst, n_nodes, dtype=jnp.float32):
 
 
 def gcn_forward(params, x, src, dst, *, n_nodes: int, cfg: GCNConfig,
-                policy: ACTPolicy = FP32, key=None, layout=None):
+                policy: ACTPolicy | PolicySchedule | None = None, key=None,
+                layout=None):
     """Full-batch GCN: Z = Â ... σ(Â X W0) W1 with self-loops assumed in edges.
 
     ``layout`` optionally carries the blocked-CSR arrangement of the edge
     list; under ``ACTPolicy(kernel="pallas")`` the (linear) aggregation
     then runs through the fused Pallas SPMM in both directions.
+    ``policy``/``key`` omitted resolve from the ambient ``ActContext`` at
+    the ``gcn/layer<l>/...`` sites.
     """
-    keys = KeyChain(key if key is not None else jax.random.PRNGKey(0))
+    ctx = model_context(policy, key)
+    ctx.check_key("gcn_forward")
     dinv = _sym_norm(src, dst, n_nodes, x.dtype)
     h = x
-    for l, w in enumerate(params["w"]):
-        pre = cfg.transform_first and w.shape[0] > w.shape[1]
-        if pre:  # (ÂX)W == Â(XW): aggregate the narrow side
-            h = act_matmul(h, w, key=keys.next(), policy=policy)
-        h = h * dinv[:, None]
-        h = act_spmm(h, src, dst, None, num_nodes=n_nodes,
-                     key=keys.next(), policy=policy, layout=layout)
-        # pin the aggregation output row-sharded: GSPMD then emits
-        # reduce-scatter (1x payload) instead of all-reduce (2x)
-        h = constraint(h, "batch", None)
-        h = h * dinv[:, None]
-        if not pre:
-            h = act_matmul(h, w, key=keys.next(), policy=policy)
-        if l < len(params["w"]) - 1:
-            h = act_relu(h)
+    with ctx, ctx.scope("gcn"):
+        for l, w in enumerate(params["w"]):
+            with ctx.scope(f"layer{l}"):
+                pre = cfg.transform_first and w.shape[0] > w.shape[1]
+                if pre:  # (ÂX)W == Â(XW): aggregate the narrow side
+                    h = act_matmul(h, w, scope="dense")
+                h = h * dinv[:, None]
+                h = act_spmm(h, src, dst, None, num_nodes=n_nodes,
+                             scope="agg", layout=layout)
+                # pin the aggregation output row-sharded: GSPMD then emits
+                # reduce-scatter (1x payload) instead of all-reduce (2x)
+                h = constraint(h, "batch", None)
+                h = h * dinv[:, None]
+                if not pre:
+                    h = act_matmul(h, w, scope="dense")
+                if l < len(params["w"]) - 1:
+                    h = act_relu(h, scope="relu")
     return h
 
 
 def gcn_forward_spmd(params, x, src_g, dst_l, deg, *, mesh, axes,
-                     cfg: GCNConfig, policy: ACTPolicy = FP32, key=None):
+                     cfg: GCNConfig,
+                     policy: ACTPolicy | PolicySchedule | None = None,
+                     key=None):
     """Explicitly-partitioned full-graph GCN (shard_map aggregation).
 
     Production layout (EXPERIMENTS.md §Perf hillclimb #3, iter 3):
@@ -101,7 +116,8 @@ def gcn_forward_spmd(params, x, src_g, dst_l, deg, *, mesh, axes,
     """
     from jax.sharding import PartitionSpec as P
 
-    keys = KeyChain(key if key is not None else jax.random.PRNGKey(0))
+    ctx = model_context(policy, key)
+    ctx.check_key("gcn_forward_spmd")
     dinv = jax.lax.rsqrt(jnp.maximum(deg, 1.0))
 
     def agg_local(x_loc, src_, dst_):
@@ -121,22 +137,25 @@ def gcn_forward_spmd(params, x, src_g, dst_l, deg, *, mesh, axes,
         out_specs=P(axes, None))
 
     h = x
-    for l, w in enumerate(params["w"]):
-        pre = cfg.transform_first and w.shape[0] > w.shape[1]
-        if pre:
-            h = act_matmul(h, w, key=keys.next(), policy=policy)
-        h = h * dinv[:, None]
-        h = agg(h, src_g, dst_l)
-        h = h * dinv[:, None]
-        if not pre:
-            h = act_matmul(h, w, key=keys.next(), policy=policy)
-        if l < len(params["w"]) - 1:
-            h = act_relu(h)
+    with ctx, ctx.scope("gcn"):
+        for l, w in enumerate(params["w"]):
+            with ctx.scope(f"layer{l}"):
+                pre = cfg.transform_first and w.shape[0] > w.shape[1]
+                if pre:
+                    h = act_matmul(h, w, scope="dense")
+                h = h * dinv[:, None]
+                h = agg(h, src_g, dst_l)
+                h = h * dinv[:, None]
+                if not pre:
+                    h = act_matmul(h, w, scope="dense")
+                if l < len(params["w"]) - 1:
+                    h = act_relu(h, scope="relu")
     return h
 
 
 def gcn_forward_blocks(params, x, blocks, *, cfg: GCNConfig,
-                       policy: ACTPolicy = FP32, key=None):
+                       policy: ACTPolicy | PolicySchedule | None = None,
+                       key=None):
     """Sampled-minibatch GCN over fanout blocks (GraphSAGE-style training).
 
     ``blocks``: list (outermost hop first) of dicts with
@@ -144,24 +163,28 @@ def gcn_forward_blocks(params, x, blocks, *, cfg: GCNConfig,
       n_src, n_dst : static sizes (padded)
     ``x``: features of the outermost src node set.
     """
-    keys = KeyChain(key if key is not None else jax.random.PRNGKey(0))
+    ctx = model_context(policy, key)
+    ctx.check_key("gcn_forward_blocks")
     h = x
-    for l, (w, blk) in enumerate(zip(params["w"], blocks)):
-        deg = jax.ops.segment_sum(
-            jnp.ones_like(blk["src"], dtype=h.dtype), blk["dst"],
-            num_segments=blk["n_dst"])
-        agg = act_spmm(h, blk["src"], blk["dst"], None,
-                       num_nodes=blk["n_dst"], key=keys.next(), policy=policy)
-        h = agg / jnp.maximum(deg, 1.0)[:, None]
-        h = act_matmul(h, w, key=keys.next(), policy=policy)
-        if l < len(params["w"]) - 1:
-            h = act_relu(h)
+    with ctx, ctx.scope("gcn_blocks"):
+        for l, (w, blk) in enumerate(zip(params["w"], blocks)):
+            with ctx.scope(f"layer{l}"):
+                deg = jax.ops.segment_sum(
+                    jnp.ones_like(blk["src"], dtype=h.dtype), blk["dst"],
+                    num_segments=blk["n_dst"])
+                agg = act_spmm(h, blk["src"], blk["dst"], None,
+                               num_nodes=blk["n_dst"], scope="agg")
+                h = agg / jnp.maximum(deg, 1.0)[:, None]
+                h = act_matmul(h, w, scope="dense")
+                if l < len(params["w"]) - 1:
+                    h = act_relu(h, scope="relu")
     return h
 
 
 def gcn_forward_batched(params, x, src, dst, graph_ids, *, n_graphs: int,
                         n_nodes: int, cfg: GCNConfig,
-                        policy: ACTPolicy = FP32, key=None, layout=None):
+                        policy: ACTPolicy | PolicySchedule | None = None,
+                        key=None, layout=None):
     """Batched small graphs (molecule): block-diag edges + mean readout."""
     node_logits = gcn_forward(params, x, src, dst, n_nodes=n_nodes, cfg=cfg,
                               policy=policy, key=key, layout=layout)
@@ -171,11 +194,6 @@ def gcn_forward_batched(params, x, src, dst, graph_ids, *, n_graphs: int,
     return pooled / jnp.maximum(counts, 1.0)[:, None]
 
 
-def activation_shapes(cfg: GCNConfig, n_nodes: int) -> dict:
-    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
-    shapes = {}
-    for l in range(cfg.n_layers):
-        shapes[f"H_{l}"] = (n_nodes, dims[l])       # matmul input
-        if l < cfg.n_layers - 1:
-            shapes[f"mask_{l}"] = (n_nodes, dims[l + 1])  # relu mask (1-bit)
-    return shapes
+# Activation-memory accounting is trace-derived: run the forward under a
+# recording ActContext (``repro.core.traced_activation_report``). The old
+# hand-maintained ``activation_shapes`` table is gone.

@@ -5,8 +5,9 @@ KGIN — plus R-GCN, over a collaborative knowledge graph (CKG): users, items
 and attribute entities are one node space; user-item interactions are
 `interact` relations merged with the item KG (paper §3.1).
 
-Message passing is built on ``jax.ops.segment_sum`` over COO edge lists
-(JAX has no CSR) and is ACT-compressed end-to-end:
+Message passing defaults to ``jax.ops.segment_sum`` over COO edge lists,
+with a blocked-CSR fused-Pallas path (``repro.data.csr`` + DESIGN.md §4)
+under ``kernel="pallas"`` policies, and is ACT-compressed end-to-end:
 
   * ``act_spmm``    — weighted neighbor aggregation; saves Quant(E^(l))
   * ``act_matmul``  — layer transform ∇Θ = Ĥᵀ∇J; saves Quant(H^(l))
@@ -16,11 +17,18 @@ which is exactly the ctx(·) chain in paper Eq. (2). Edge-softmax
 probabilities are (E,)-scalars (no feature dim) and stay fp32 — they are
 O(E) not O(N·d), i.e. the "trivial" footprint class of the paper's
 memory analysis.
+
+Every op site carries a named scope (``"kgat/layer2/spmm"``): the ambient
+``ActContext`` resolves its per-site policy from a ``PolicySchedule`` and
+derives its stochastic-rounding key from the scope hash (DESIGN.md §6),
+and the residual trace replaces the old hand-maintained
+``activation_shapes`` tables for memory accounting.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -28,17 +36,17 @@ import jax.numpy as jnp
 from repro.core import (
     ACTPolicy,
     FP32,
-    KeyChain,
+    PolicySchedule,
     act_matmul,
     act_nonlin,
     act_spmm,
+    model_context,
 )
 from .layers import glorot, normal_init
 
 __all__ = [
     "KGNNConfig", "CKG", "segment_softmax",
     "init_params", "propagate", "score_pairs", "bpr_loss",
-    "activation_shapes",
 ]
 
 
@@ -145,15 +153,19 @@ def init_params(key: jax.Array, cfg: KGNNConfig) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def _kgat_layer(p, layer: int, e: jax.Array, g: CKG, att: jax.Array,
-                policy: ACTPolicy, keys: KeyChain) -> jax.Array:
-    """Bi-interaction aggregator: LeakyReLU(W1(e+eN)) + LeakyReLU(W2(e⊙eN))."""
+def _kgat_layer(p, layer: int, e: jax.Array, g: CKG,
+                att: jax.Array) -> jax.Array:
+    """Bi-interaction aggregator: LeakyReLU(W1(e+eN)) + LeakyReLU(W2(e⊙eN)).
+
+    Policies/keys resolve from the ambient ActContext at the scoped sites
+    (``.../spmm``, ``.../w1`` ...).
+    """
     e_n = act_spmm(e, g.src, g.dst, att, num_nodes=g.n_nodes,
-                   key=keys.next(), policy=policy, layout=g.layout)
-    add = act_matmul(e + e_n, p["w1"][layer], key=keys.next(), policy=policy)
-    mul = act_matmul(e * e_n, p["w2"][layer], key=keys.next(), policy=policy)
-    add = act_nonlin(add, key=keys.next(), policy=policy, fn="leaky_relu")
-    mul = act_nonlin(mul, key=keys.next(), policy=policy, fn="leaky_relu")
+                   scope="spmm", layout=g.layout)
+    add = act_matmul(e + e_n, p["w1"][layer], scope="w1")
+    mul = act_matmul(e * e_n, p["w2"][layer], scope="w2")
+    add = act_nonlin(add, fn="leaky_relu", scope="act1")
+    mul = act_nonlin(mul, fn="leaky_relu", scope="act2")
     return add + mul
 
 
@@ -171,19 +183,18 @@ def _kgat_attention(p, e: jax.Array, g: CKG) -> jax.Array:
     return segment_softmax(logits, g.dst, g.n_nodes)
 
 
-def _kgcn_layer(p, layer: int, e: jax.Array, g: CKG, ew: jax.Array,
-                policy: ACTPolicy, keys: KeyChain) -> jax.Array:
+def _kgcn_layer(p, layer: int, e: jax.Array, g: CKG,
+                ew: jax.Array) -> jax.Array:
     """KGNN-LS graph convolution: σ((Â E)Θ + b) with relation-scored Â."""
     h = act_spmm(e, g.src, g.dst, ew, num_nodes=g.n_nodes,
-                 key=keys.next(), policy=policy, layout=g.layout)
-    j = act_matmul(h + e, p["w"][layer], key=keys.next(), policy=policy)
+                 scope="spmm", layout=g.layout)
+    j = act_matmul(h + e, p["w"][layer], scope="dense")
     j = j + p["b"][layer]
-    return act_nonlin(j, key=keys.next(), policy=policy,
+    return act_nonlin(j, scope="act",
                       fn="tanh" if layer == len(p["w"]) - 1 else "sigmoid")
 
 
-def _kgin_layer(p, e: jax.Array, r_emb: jax.Array, g: CKG,
-                policy: ACTPolicy, keys: KeyChain) -> jax.Array:
+def _kgin_layer(p, e: jax.Array, r_emb: jax.Array, g: CKG) -> jax.Array:
     """Relational path aggregation: e_h' = Σ_{(r,t)} e_r ⊙ e_t (KGIN eq. 8)."""
     msgs_src = e * 1.0  # (N, d)
     # modulate by relation embedding per edge: gather-then-scale is O(E d);
@@ -194,15 +205,14 @@ def _kgin_layer(p, e: jax.Array, r_emb: jax.Array, g: CKG,
                               num_segments=g.n_nodes)
     agg = jax.ops.segment_sum(gathered, g.dst, num_segments=g.n_nodes)
     agg = agg / jnp.maximum(deg, 1.0)[:, None]
-    return act_nonlin(agg, key=keys.next(), policy=policy, fn="leaky_relu")
+    return act_nonlin(agg, fn="leaky_relu", scope="act")
 
 
-def _rgcn_layer(p, layer: int, e: jax.Array, g: CKG,
-                policy: ACTPolicy, keys: KeyChain) -> jax.Array:
+def _rgcn_layer(p, layer: int, e: jax.Array, g: CKG) -> jax.Array:
     """Basis-decomposed R-GCN: W_r = Σ_b a_rb V_b (basis-first projection)."""
     # project once per basis: (N, B, d)
     proj = jnp.stack([
-        act_matmul(e, p["basis"][b], key=keys.next(), policy=policy)
+        act_matmul(e, p["basis"][b], scope=f"basis{b}")
         for b in range(p["basis"].shape[0])
     ], axis=1)
     coef_e = p["coef"][g.rel]                     # (E, B)
@@ -211,44 +221,60 @@ def _rgcn_layer(p, layer: int, e: jax.Array, g: CKG,
                               num_segments=g.n_nodes)
     agg = jax.ops.segment_sum(msgs, g.dst, num_segments=g.n_nodes)
     agg = agg / jnp.maximum(deg, 1.0)[:, None]
-    self_t = act_matmul(e, p["w_self"][layer], key=keys.next(), policy=policy)
-    return act_nonlin(agg + self_t, key=keys.next(), policy=policy, fn="leaky_relu")
+    self_t = act_matmul(e, p["w_self"][layer], scope="self")
+    return act_nonlin(agg + self_t, fn="leaky_relu", scope="act")
 
 
 def propagate(params: dict, g: CKG, cfg: KGNNConfig, *,
-              policy: ACTPolicy = FP32, key: jax.Array | None = None):
-    """Run L layers of message passing; returns final node representations."""
-    keys = KeyChain(key if key is not None else jax.random.PRNGKey(0))
+              policy: ACTPolicy | PolicySchedule | None = None,
+              key: jax.Array | None = None):
+    """Run L layers of message passing; returns final node representations.
+
+    ``policy``/``key`` omitted resolve from the ambient ``ActContext``
+    (explicit kwargs build a local one; no context at all means FP32).
+    Under an active stochastic policy a key (or a context root key) is
+    REQUIRED — there is no silent constant-key fallback, which would
+    replay identical rounding noise every step and void the
+    unbiasedness-in-expectation argument (Proposition 1).
+    """
+    ctx = model_context(policy, key)
+    ctx.check_key(f"propagate({cfg.model})")
     e = params["entity"]
     outs = [e]
 
-    if cfg.model == "kgat":
-        att = _kgat_attention(params, e, g)
-        for l in range(cfg.n_layers):
-            e = _kgat_layer(params, l, e, g, att, policy, keys)
-            outs.append(e)
-    elif cfg.model == "kgcn":
-        # relation scores are user-agnostic at graph level (KGNN-LS's label-
-        # smoothed global graph); per-edge weight = softmax over dst of r·mean
-        logits = jnp.sum(params["relation"][g.rel] * e[g.src], axis=-1)
-        ew = segment_softmax(logits, g.dst, g.n_nodes)
-        for l in range(cfg.n_layers):
-            e = _kgcn_layer(params, l, e, g, ew, policy, keys)
-            outs.append(e)
-    elif cfg.model == "kgin":
-        # intent-weighted relation embeddings
-        alpha = jax.nn.softmax(params["intent"], axis=-1)       # (P, R)
-        r_int = alpha @ params["relation"]                      # (P, d)
-        r_emb = params["relation"] + jnp.mean(r_int, 0)         # broadcast intent
-        for _ in range(cfg.n_layers):
-            e = _kgin_layer(params, e, r_emb, g, policy, keys)
-            outs.append(e)
-    elif cfg.model == "rgcn":
-        for l in range(cfg.n_layers):
-            e = _rgcn_layer(params, l, e, g, policy, keys)
-            outs.append(e)
-    else:
-        raise ValueError(cfg.model)
+    with ctx, ctx.scope(cfg.model):
+        if cfg.model == "kgat":
+            att = _kgat_attention(params, e, g)
+            for l in range(cfg.n_layers):
+                with ctx.scope(f"layer{l}"):
+                    e = _kgat_layer(params, l, e, g, att)
+                outs.append(e)
+        elif cfg.model == "kgcn":
+            # relation scores are user-agnostic at graph level (KGNN-LS's
+            # label-smoothed global graph); per-edge weight = softmax over
+            # dst of r·mean
+            logits = jnp.sum(params["relation"][g.rel] * e[g.src], axis=-1)
+            ew = segment_softmax(logits, g.dst, g.n_nodes)
+            for l in range(cfg.n_layers):
+                with ctx.scope(f"layer{l}"):
+                    e = _kgcn_layer(params, l, e, g, ew)
+                outs.append(e)
+        elif cfg.model == "kgin":
+            # intent-weighted relation embeddings
+            alpha = jax.nn.softmax(params["intent"], axis=-1)   # (P, R)
+            r_int = alpha @ params["relation"]                  # (P, d)
+            r_emb = params["relation"] + jnp.mean(r_int, 0)     # broadcast
+            for l in range(cfg.n_layers):
+                with ctx.scope(f"layer{l}"):
+                    e = _kgin_layer(params, e, r_emb, g)
+                outs.append(e)
+        elif cfg.model == "rgcn":
+            for l in range(cfg.n_layers):
+                with ctx.scope(f"layer{l}"):
+                    e = _rgcn_layer(params, l, e, g)
+                outs.append(e)
+        else:
+            raise ValueError(cfg.model)
 
     if cfg.readout == "concat":
         return jnp.concatenate(outs, axis=-1)
@@ -263,7 +289,8 @@ def propagate(params: dict, g: CKG, cfg: KGNNConfig, *,
 
 
 def propagate_spmd(params: dict, g: CKG, cfg: KGNNConfig, *, mesh, axes,
-                   policy: ACTPolicy = FP32, key: jax.Array | None = None):
+                   policy: ACTPolicy | PolicySchedule | None = None,
+                   key: jax.Array | None = None):
     """Explicitly-partitioned KGAT propagation (shard_map).
 
     Layout (same scheme as gnn.gcn_forward_spmd, §Perf hillclimb #3):
@@ -272,14 +299,23 @@ def propagate_spmd(params: dict, g: CKG, cfg: KGNNConfig, *, mesh, axes,
     tiled all-gather of the (N, d) entity matrix; edge attention, edge
     softmax and the weighted scatter all run shard-local. The layer
     transforms stay GSPMD (row-sharded matmuls).
+
+    Keys/policies resolve per scoped site like ``propagate``; the SPMM key
+    is derived OUTSIDE shard_map (``ctx.scope_path`` + ``key_for``) and
+    rides in replicated — closed-over tracers are off-limits inside a
+    shard_map body. The in-body ``act_spmm`` still records its residual
+    under the same site name: what each device buffers is Quant(e_full),
+    the all-gathered table, which is exactly the recorded shape.
     """
     from jax.sharding import PartitionSpec as P
 
     assert cfg.model == "kgat", "spmd propagate implemented for KGAT"
-    keys = KeyChain(key if key is not None else jax.random.PRNGKey(0))
+    ctx = model_context(policy, key)
+    ctx.check_key("propagate_spmd(kgat)")
     e = params["entity"]
 
-    def layer_local(e_loc, basis, src_g, dst_l, rel, coef, r_emb, att_key):
+    def layer_local(e_loc, basis, src_g, dst_l, rel, coef, r_emb, att_key,
+                    *, spmm_policy):
         # e_loc (N/D, d) local entity rows; src_g GLOBAL ids, dst_l LOCAL
         # dst rows (edges pre-partitioned by destination shard)
         proj_loc = jnp.einsum("nd,bdk->bnk", e_loc, basis)  # (B, N/D, d)
@@ -291,27 +327,31 @@ def propagate_spmd(params: dict, g: CKG, cfg: KGNNConfig, *, mesh, axes,
         att = segment_softmax(logits, dst_l, e_loc.shape[0])
         return act_spmm(e_full, src_g, dst_l, att,
                         num_nodes=e_loc.shape[0], key=att_key,
-                        policy=policy)
-
-    spmd_layer = jax.shard_map(
-        layer_local, mesh=mesh,
-        in_specs=(P(axes, None), P(None, None, None), P(axes), P(axes),
-                  P(axes), P(None, None), P(None, None), P()),
-        out_specs=P(axes, None))
+                        policy=spmm_policy)
 
     outs = [e]
-    for l in range(cfg.n_layers):
-        e_n = spmd_layer(e, params["att_basis"], g.src, g.dst, g.rel,
-                         params["att_coef"], params["relation"],
-                         keys.next())
-        add = act_matmul(e + e_n, params["w1"][l], key=keys.next(),
-                         policy=policy)
-        mul = act_matmul(e * e_n, params["w2"][l], key=keys.next(),
-                         policy=policy)
-        e = act_nonlin(add, key=keys.next(), policy=policy, fn="leaky_relu") \
-            + act_nonlin(mul, key=keys.next(), policy=policy,
-                         fn="leaky_relu")
-        outs.append(e)
+    with ctx, ctx.scope(cfg.model):
+        for l in range(cfg.n_layers):
+            with ctx.scope(f"layer{l}"):
+                site = ctx.scope_path("spmm")  # not registered: the op
+                pol = ctx.policy_for("spmm", site)  # inside claims the name
+                k_spmm = ctx.key_for(site)
+                spmd_layer = jax.shard_map(
+                    functools.partial(layer_local, spmm_policy=pol or FP32),
+                    mesh=mesh,
+                    in_specs=(P(axes, None), P(None, None, None), P(axes),
+                              P(axes), P(axes), P(None, None), P(None, None),
+                              P()),
+                    out_specs=P(axes, None))
+                e_n = spmd_layer(e, params["att_basis"], g.src, g.dst, g.rel,
+                                 params["att_coef"], params["relation"],
+                                 k_spmm if k_spmm is not None
+                                 else jax.random.PRNGKey(0))
+                add = act_matmul(e + e_n, params["w1"][l], scope="w1")
+                mul = act_matmul(e * e_n, params["w2"][l], scope="w2")
+                e = act_nonlin(add, fn="leaky_relu", scope="act1") \
+                    + act_nonlin(mul, fn="leaky_relu", scope="act2")
+            outs.append(e)
     return jnp.concatenate(outs, axis=-1) if cfg.readout == "concat" \
         else sum(outs)
 
@@ -323,7 +363,8 @@ def score_pairs(reps: jax.Array, users: jax.Array, items: jax.Array,
 
 
 def bpr_loss(params: dict, g: CKG, batch: dict, cfg: KGNNConfig, *,
-             policy: ACTPolicy = FP32, key: jax.Array | None = None):
+             policy: ACTPolicy | PolicySchedule | None = None,
+             key: jax.Array | None = None):
     """BPR pairwise ranking loss + L2 (the KGAT/KGIN objective)."""
     reps = propagate(params, g, cfg, policy=policy, key=key)
     pos = score_pairs(reps, batch["user"], batch["pos"], cfg.n_users)
@@ -333,20 +374,9 @@ def bpr_loss(params: dict, g: CKG, batch: dict, cfg: KGNNConfig, *,
     return loss + cfg.l2 * reg
 
 
-def activation_shapes(cfg: KGNNConfig, n_edges: int) -> dict:
-    """Saved-activation shapes per train step (paper Table 5 accounting).
-
-    Per layer the ctx chain stores: E^(l) for spmm's ∇ew, H^(l) for the
-    transform's ∇Θ, and J^(l) for σ'. KGAT's bi-interaction doubles the
-    matmul/nonlin entries.
-    """
-    n, dims = cfg.n_nodes, cfg.dims
-    shapes = {}
-    per_layer = {"kgat": 4, "kgcn": 2, "kgin": 1, "rgcn": 2}[cfg.model]
-    d_in = cfg.dim
-    for l, d_out in enumerate(dims):
-        shapes[f"E_{l}"] = (n, d_in)                   # spmm input
-        for j in range(per_layer):
-            shapes[f"HJ_{l}_{j}"] = (n, d_out if j % 2 else d_in)
-        d_in = d_out
-    return shapes
+# Memory accounting (paper Table 5) is derived from the residual trace —
+# run the loss under a recording ActContext (or use
+# ``repro.core.traced_activation_report``) instead of the old
+# hand-maintained ``activation_shapes`` table, which had already drifted
+# from the real ctx chain (it priced a phantom spmm residual for KGIN,
+# whose aggregation never routes through act_spmm).

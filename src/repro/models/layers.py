@@ -8,6 +8,7 @@ built from these layers is TinyKG-compressible end to end.
 
 from __future__ import annotations
 
+import contextlib
 import math
 from typing import Sequence
 
@@ -15,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ACTPolicy, KeyChain, act_dense, act_nonlin, act_relu
+from repro.core.context import current_context
 
 __all__ = [
     "glorot", "lecun", "normal_init",
@@ -53,22 +55,30 @@ def mlp_params(key, dims: Sequence[int], *, bias: bool = True,
             for k, a, b in zip(keys, dims[:-1], dims[1:])]
 
 
-def mlp_apply(params: list, x: jax.Array, *, policy: ACTPolicy,
-              keys: KeyChain, act: str = "relu",
-              final_act: bool = False) -> jax.Array:
+def mlp_apply(params: list, x: jax.Array, *, policy: ACTPolicy | None = None,
+              keys: KeyChain | None = None, act: str = "relu",
+              final_act: bool = False, scope: str = "mlp") -> jax.Array:
     """MLP with ACT-compressed matmuls + activations.
 
     ReLU uses the exact 1-bit mask path; other activations store quantized
-    inputs per the policy.
+    inputs per the policy. Two key regimes: pass a legacy ``KeyChain``
+    (positional keys, explicit ``policy``) or pass neither and let the
+    ambient ``ActContext`` resolve per-site at ``<scope>/fc<i>``.
     """
     n = len(params)
-    for i, p in enumerate(params):
-        x = act_dense(x, p["w"], p.get("b"), key=keys.next(), policy=policy)
-        if i < n - 1 or final_act:
-            if act == "relu":
-                x = act_relu(x)
-            else:
-                x = act_nonlin(x, key=keys.next(), policy=policy, fn=act)
+    ctx = current_context()
+    with ctx.scope(scope) if ctx is not None else contextlib.nullcontext():
+        for i, p in enumerate(params):
+            k = keys.next() if keys is not None else None
+            x = act_dense(x, p["w"], p.get("b"), key=k, policy=policy,
+                          scope=f"fc{i}")
+            if i < n - 1 or final_act:
+                if act == "relu":
+                    x = act_relu(x, scope=f"relu{i}")
+                else:
+                    k = keys.next() if keys is not None else None
+                    x = act_nonlin(x, key=k, policy=policy, fn=act,
+                                   scope=f"act{i}")
     return x
 
 

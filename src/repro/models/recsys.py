@@ -19,12 +19,16 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import ACTPolicy, FP32, KeyChain, act_matmul, act_relu
+from repro.core import (
+    ACTPolicy,
+    PolicySchedule,
+    act_matmul,
+    model_context,
+)
 
 from .layers import embedding_bag, mlp_apply, mlp_params, normal_init
 
-__all__ = ["RecsysConfig", "init_params", "forward", "retrieval_scores",
-           "activation_shapes"]
+__all__ = ["RecsysConfig", "init_params", "forward", "retrieval_scores"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,53 +112,60 @@ def _dot_interaction(vectors: jax.Array) -> jax.Array:
     return gram[:, iu, ju]
 
 
-def _cin(params, x0: jax.Array, cfg: RecsysConfig, policy, keys):
+def _cin(params, x0: jax.Array, cfg: RecsysConfig):
     """Compressed Interaction Network: x^l_h = Σ_{ij} W^l_{h,ij}(x^{l-1}_i ⊙ x^0_j)."""
     B, F, k = x0.shape
     xs, pooled = x0, []
-    for w in params["cin"]:
+    for i, w in enumerate(params["cin"]):
         # outer product along fields, contracted against W via one matmul:
         # z (B, H_prev*F, k) -> transpose to (B, k, H_prev*F) @ (H_prev*F, H)
         z = jnp.einsum("bhk,bfk->bhfk", xs, x0).reshape(B, -1, k)
         zt = jnp.swapaxes(z, 1, 2)                       # (B, k, H_prev*F)
         xs = jnp.swapaxes(
-            act_matmul(zt, w, key=keys.next(), policy=policy), 1, 2)  # (B, H, k)
+            act_matmul(zt, w, scope=f"cin{i}"), 1, 2)    # (B, H, k)
         pooled.append(jnp.sum(xs, axis=-1))              # (B, H)
     return jnp.concatenate(pooled, axis=-1)
 
 
 def forward(params: dict, batch: dict, cfg: RecsysConfig, *,
-            policy: ACTPolicy = FP32, key: jax.Array | None = None):
-    """Returns logits (B,). batch: sparse (B,F) int32 [+ dense (B,n_dense)]."""
-    keys = KeyChain(key if key is not None else jax.random.PRNGKey(0))
-    emb, lin = _lookup(params, batch["sparse"], cfg)
-    B = emb.shape[0]
+            policy: ACTPolicy | PolicySchedule | None = None,
+            key: jax.Array | None = None):
+    """Returns logits (B,). batch: sparse (B,F) int32 [+ dense (B,n_dense)].
 
-    if cfg.model == "fm":
-        return params["bias"] + lin + _fm_pairwise(emb)
+    ``policy``/``key`` omitted resolve from the ambient ``ActContext`` at
+    the ``<model>/...`` sites.
+    """
+    ctx = model_context(policy, key)
+    ctx.check_key(f"recsys.forward({cfg.model})")
+    with ctx, ctx.scope(cfg.model):
+        emb, lin = _lookup(params, batch["sparse"], cfg)
+        B = emb.shape[0]
 
-    if cfg.model == "wide_deep":
-        x = emb.reshape(B, -1)
-        if cfg.n_dense:
-            x = jnp.concatenate([x, batch["dense"]], axis=-1)
-        deep = mlp_apply(params["deep"], x, policy=policy, keys=keys)[:, 0]
-        return params["bias"] + lin + deep
+        if cfg.model == "fm":
+            return params["bias"] + lin + _fm_pairwise(emb)
 
-    if cfg.model == "dlrm":
-        bot = mlp_apply(params["bot"], batch["dense"], policy=policy,
-                        keys=keys, final_act=True)       # (B, k)
-        vecs = jnp.concatenate([bot[:, None, :], emb], axis=1)
-        inter = _dot_interaction(vecs)                   # (B, n(n-1)/2)
-        top_in = jnp.concatenate([bot, inter], axis=-1)
-        return mlp_apply(params["top"], top_in, policy=policy, keys=keys)[:, 0]
+        if cfg.model == "wide_deep":
+            x = emb.reshape(B, -1)
+            if cfg.n_dense:
+                x = jnp.concatenate([x, batch["dense"]], axis=-1)
+            deep = mlp_apply(params["deep"], x, scope="deep")[:, 0]
+            return params["bias"] + lin + deep
 
-    if cfg.model == "xdeepfm":
-        cin_feats = _cin(params, emb, cfg, policy, keys)
-        cin_logit = act_matmul(cin_feats, params["cin_out"], key=keys.next(),
-                               policy=policy)[:, 0]
-        deep = mlp_apply(params["deep"], emb.reshape(B, -1), policy=policy,
-                         keys=keys)[:, 0]
-        return params["bias"] + lin + cin_logit + deep
+        if cfg.model == "dlrm":
+            bot = mlp_apply(params["bot"], batch["dense"], scope="bot",
+                            final_act=True)              # (B, k)
+            vecs = jnp.concatenate([bot[:, None, :], emb], axis=1)
+            inter = _dot_interaction(vecs)               # (B, n(n-1)/2)
+            top_in = jnp.concatenate([bot, inter], axis=-1)
+            return mlp_apply(params["top"], top_in, scope="top")[:, 0]
+
+        if cfg.model == "xdeepfm":
+            cin_feats = _cin(params, emb, cfg)
+            cin_logit = act_matmul(cin_feats, params["cin_out"],
+                                   scope="cin_out")[:, 0]
+            deep = mlp_apply(params["deep"], emb.reshape(B, -1),
+                             scope="deep")[:, 0]
+            return params["bias"] + lin + cin_logit + deep
 
     raise ValueError(cfg.model)
 
@@ -177,28 +188,6 @@ def retrieval_scores(params: dict, query: dict, cand_ids: jax.Array,
     return cand @ user_vec + cand_lin
 
 
-def activation_shapes(cfg: RecsysConfig, batch: int) -> dict:
-    """Saved-activation shapes per train step (Table 5-style accounting)."""
-    F, k = cfg.n_sparse, cfg.embed_dim
-    shapes: dict = {}
-    if cfg.model == "wide_deep":
-        dims = (F * k + cfg.n_dense,) + cfg.mlp
-        for i, d in enumerate(dims):
-            shapes[f"mlp_in_{i}"] = (batch, d)
-    elif cfg.model == "dlrm":
-        for i, d in enumerate((cfg.n_dense,) + cfg.bot_mlp[:-1]):
-            shapes[f"bot_in_{i}"] = (batch, d)
-        n_vec = F + 1
-        d_int = n_vec * (n_vec - 1) // 2 + cfg.bot_mlp[-1]
-        for i, d in enumerate((d_int,) + cfg.top_mlp[:-1]):
-            shapes[f"top_in_{i}"] = (batch, d)
-    elif cfg.model == "xdeepfm":
-        h_prev = F
-        for i, h in enumerate(cfg.cin_layers):
-            shapes[f"cin_z_{i}"] = (batch, k, h_prev * F)
-            h_prev = h
-        for i, d in enumerate((F * k,) + cfg.mlp):
-            shapes[f"deep_in_{i}"] = (batch, d)
-    else:  # fm: only the embedding sums (linear op) — nothing saved
-        shapes["emb"] = (batch, F * k)
-    return shapes
+# Activation-memory accounting is trace-derived: run ``forward`` under a
+# recording ActContext (``repro.core.traced_activation_report``). The old
+# hand-maintained ``activation_shapes`` table is gone.

@@ -24,7 +24,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core import ACTPolicy, FP32, act_remat
+from repro.core import ACTPolicy, PolicySchedule, act_remat, current_context
 from repro.sharding.logical import constraint
 
 from .attention import chunked_causal_attention, decode_attention, rope
@@ -174,14 +174,40 @@ def _block_fwd(cfg: TransformerConfig):
 
 
 def forward(params: dict, tokens: jax.Array, cfg: TransformerConfig, *,
-            policy: ACTPolicy = FP32, key: jax.Array | None = None):
-    """tokens (B, S) -> logits (B, S, vocab)."""
+            policy: ACTPolicy | PolicySchedule | None = None,
+            key: jax.Array | None = None):
+    """tokens (B, S) -> logits (B, S, vocab).
+
+    ``policy``/``key`` omitted resolve from the ambient ``ActContext``:
+    the block policy at the (scope-stacked, #k-deduped) site
+    ``.../lm/block`` inside ``act_remat``, and the per-layer SR keys from
+    a root keyed at the registered site ``.../lm`` — so two forwards
+    under one recording context get distinct rounding noise, like every
+    other op.
+    """
     B, S = tokens.shape
-    key = key if key is not None else jax.random.PRNGKey(0)
+    if isinstance(policy, PolicySchedule):
+        # the whole stack is one remat site — resolve the schedule here
+        policy = policy.resolve("remat", "lm/block")
+    ctx = current_context()
+    if key is None:
+        if ctx is not None and ctx.root_key is not None:
+            key = ctx.key_for(ctx.qualify("lm"))
+        else:
+            if ctx is not None:
+                ctx.check_key("transformer.forward")
+            if policy is not None and policy.requires_key:
+                raise ValueError(
+                    "transformer.forward: stochastic rounding under an "
+                    "active policy needs a PRNG key — pass key=, or run "
+                    "inside act_context(..., root_key=...)")
+            key = jax.random.PRNGKey(0)
     x = constraint(jnp.take(params["emb"], tokens, axis=0),
                    "batch", "seq", "embed")
     positions = jnp.arange(S)
-    block = act_remat(_block_fwd(cfg), policy)
+    # all layers share one scan body: one act_remat site, `repeat` records
+    block = act_remat(_block_fwd(cfg), policy, scope="lm/block",
+                      repeat=cfg.n_layers)
     layer_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
         jnp.arange(cfg.n_layers))
 
@@ -195,7 +221,8 @@ def forward(params: dict, tokens: jax.Array, cfg: TransformerConfig, *,
 
 
 def lm_loss(params: dict, batch: dict, cfg: TransformerConfig, *,
-            policy: ACTPolicy = FP32, key: jax.Array | None = None):
+            policy: ACTPolicy | PolicySchedule | None = None,
+            key: jax.Array | None = None):
     """Next-token cross entropy. batch: tokens (B, S), loss on shifted."""
     tokens = batch["tokens"]
     logits = forward(params, tokens[:, :-1], cfg, policy=policy, key=key)

@@ -44,7 +44,15 @@ class PrefetchIterator:
 
     A data shard that exceeds ``timeout_s`` is skipped (the producer keeps
     running; the consumer just takes the next ready batch).
+
+    ``close()`` genuinely stops the producer: puts use a bounded-timeout
+    loop that re-checks the done flag, so a producer blocked on a full
+    queue (the common steady state — the consumer is the slow side)
+    observes shutdown instead of outliving the trainer. A plain
+    ``Queue.put`` would block forever once the consumer stops taking.
     """
+
+    _PUT_POLL_S = 0.05
 
     def __init__(self, it: Iterator, depth: int = 2,
                  timeout_s: float = 30.0):
@@ -54,13 +62,22 @@ class PrefetchIterator:
 
         def worker():
             for item in it:
-                if self._done:
+                if not self._put(item):
                     return
-                self._q.put(item)
-            self._q.put(StopIteration)
+            self._put(StopIteration)
 
         self._thread = threading.Thread(target=worker, daemon=True)
         self._thread.start()
+
+    def _put(self, item) -> bool:
+        """Bounded-timeout put; False once the iterator is closed."""
+        while not self._done:
+            try:
+                self._q.put(item, timeout=self._PUT_POLL_S)
+                return True
+            except queue.Full:
+                continue
+        return False
 
     def next(self):
         item = self._q.get(timeout=self._timeout)
@@ -68,8 +85,15 @@ class PrefetchIterator:
             raise StopIteration
         return item
 
-    def close(self):
+    def close(self, join_timeout_s: float = 5.0):
+        """Stop the producer thread and drain pending items."""
         self._done = True
+        while True:  # unblock a producer waiting on a full queue
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=join_timeout_s)
 
 
 class Trainer:
@@ -104,6 +128,12 @@ class Trainer:
         return self
 
     def run(self):
+        try:
+            return self._run()
+        finally:
+            self.data.close()  # don't leak the prefetch producer thread
+
+    def _run(self):
         cfg = self.cfg
         while self.step < cfg.total_steps:
             try:

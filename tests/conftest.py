@@ -14,8 +14,9 @@ Two jobs:
 
        PYTHONPATH=src python -m pytest -q -m "not slow"
 
-   and finishes in well under two minutes. CI runs the full suite; local
-   iteration uses the fast tier. See DESIGN.md §5.
+   and finishes in well under two minutes. CI (.github/workflows/ci.yml)
+   runs the fast tier on CPU; the slow tier is a local/pre-release gate.
+   See DESIGN.md §5.
 """
 
 from __future__ import annotations

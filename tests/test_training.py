@@ -17,7 +17,7 @@ from repro.training.checkpoint import (
 )
 from repro.training.metrics import auc, recall_ndcg_at_k
 from repro.training.optimizer import adam, adamw, cosine_warmup, sgd
-from repro.training.trainer import Trainer, TrainerConfig
+from repro.training.trainer import PrefetchIterator, Trainer, TrainerConfig
 
 KEY = jax.random.PRNGKey(0)
 
@@ -199,6 +199,46 @@ def test_trainer_restart_resumes_from_checkpoint():
     assert tr2.step == 20
     out = tr2.run()
     assert float(out["w"]) == 40.0
+
+
+# --- prefetch iterator -----------------------------------------------------
+
+
+def test_prefetch_close_stops_blocked_producer():
+    """A producer blocked on a full queue must observe close() and exit
+    (regression: plain Queue.put never re-checked the done flag, so the
+    thread outlived the trainer)."""
+    def infinite():
+        i = 0
+        while True:
+            yield i
+            i += 1
+
+    it = PrefetchIterator(infinite(), depth=1, timeout_s=5.0)
+    assert it.next() == 0  # producer is now parked on a full queue
+    it.close()
+    assert not it._thread.is_alive()
+
+
+def test_prefetch_close_idempotent_after_exhaustion():
+    it = PrefetchIterator(iter([1, 2]), depth=4, timeout_s=5.0)
+    assert it.next() == 1
+    assert it.next() == 2
+    with pytest.raises(StopIteration):
+        it.next()
+    it.close()
+    it.close()
+    assert not it._thread.is_alive()
+
+
+def test_trainer_run_closes_prefetch_thread():
+    d = tempfile.mkdtemp()
+    cfg = TrainerConfig(total_steps=5, ckpt_dir=d, ckpt_every=100,
+                        log_every=1000)
+    tr = Trainer(lambda s, b, n: (s, {}), {"w": jnp.zeros(())},
+                 _counting_data(), cfg, log_fn=lambda *a: None)
+    tr.run()
+    assert not tr.data._thread.is_alive()
 
 
 # --- data pipeline ---------------------------------------------------------
