@@ -1,0 +1,114 @@
+"""Nightly perf gate: kernel ratios must not regress vs the committed
+baseline (``BENCH_kernels.json`` at the repo root).
+
+``benchmarks/run.py`` overwrites the repo-root file in place, so the
+nightly workflow (.github/workflows/nightly.yml) snapshots the
+committed baseline first and compares — reproduce a gate failure
+locally with the same sequence:
+
+    cp BENCH_kernels.json /tmp/bench_baseline.json
+    PYTHONPATH=src python -m benchmarks.run --quick
+    python benchmarks/check_regression.py \
+        --baseline /tmp/bench_baseline.json --current BENCH_kernels.json
+
+Gating policy:
+
+  * every ``*_ratio`` field (e.g. ``fused_traffic_ratio``, the modeled
+    HBM-traffic saving of the fused SPMM path — deterministic, derived
+    from shapes) is higher-is-better and HARD-fails when it drops more
+    than ``--tol`` (default 10%) below baseline;
+  * jnp-vs-pallas timing speedups are derived and REPORTED for every
+    ``<x>_jnp_us`` / ``<x>_pallas_interp_us`` pair but only gate under
+    ``--strict-timing`` — wall-clock interpret-mode timings on shared CI
+    runners are too noisy to block on by default;
+  * a baseline row with no matching current row is a coverage
+    regression and fails.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+_KEY_FIELDS = ("op", "bits", "dim", "n_edges", "n_nodes", "model")
+
+
+def _key(row: dict) -> tuple:
+    return tuple((f, row[f]) for f in _KEY_FIELDS if f in row)
+
+
+def _ratios(row: dict) -> dict:
+    """Gateable ratios: explicit ``*_ratio`` fields plus derived
+    jnp/pallas speedups (all higher-is-better)."""
+    out = {}
+    for k, v in row.items():
+        if k.endswith("_ratio") and isinstance(v, (int, float)):
+            out[k] = float(v)
+    for k, v in row.items():
+        if not k.endswith("_jnp_us"):
+            continue
+        mate = k[:-len("_jnp_us")] + "_pallas_interp_us"
+        if isinstance(v, (int, float)) and row.get(mate):
+            out[k[:-len("_jnp_us")] + "_speedup"] = \
+                float(v) / float(row[mate])
+    return out
+
+
+def compare(baseline: list, current: list, *, tol: float,
+            strict_timing: bool) -> list[str]:
+    cur_by_key = {_key(r): r for r in current}
+    failures = []
+    for brow in baseline:
+        key = _key(brow)
+        crow = cur_by_key.get(key)
+        tag = ",".join(f"{f}={v}" for f, v in key) or "<unkeyed>"
+        if crow is None:
+            failures.append(f"{tag}: row missing from current run "
+                            "(benchmark coverage regressed)")
+            continue
+        base_r, cur_r = _ratios(brow), _ratios(crow)
+        for name, bval in base_r.items():
+            cval = cur_r.get(name)
+            if cval is None:
+                failures.append(f"{tag}: metric {name} missing")
+                continue
+            drop = 1.0 - cval / bval if bval else 0.0
+            line = (f"{tag}: {name} {bval:.3f} -> {cval:.3f} "
+                    f"({'-' if drop > 0 else '+'}{abs(drop) * 100:.1f}%)")
+            gate = name.endswith("_ratio") or strict_timing
+            if drop > tol and gate:
+                failures.append("REGRESSION " + line)
+            else:
+                print(("  " if drop <= tol else "  (timing, not gated) ")
+                      + line)
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--tol", type=float, default=0.10,
+                    help="allowed fractional drop before failing (0.10)")
+    ap.add_argument("--strict-timing", action="store_true",
+                    help="also gate on jnp/pallas wall-clock speedups")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    failures = compare(baseline, current, tol=args.tol,
+                       strict_timing=args.strict_timing)
+    if failures:
+        print(f"\n{len(failures)} kernel-ratio regression(s) > "
+              f"{args.tol * 100:.0f}%:", file=sys.stderr)
+        for msg in failures:
+            print("  " + msg, file=sys.stderr)
+        raise SystemExit(1)
+    print(f"[check_regression] OK: no ratio regressed more than "
+          f"{args.tol * 100:.0f}% across {len(baseline)} rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -47,7 +47,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["CSRMeta", "SpmmLayout", "build_spmm_layout", "attach_layout",
-           "maybe_attach_layout"]
+           "maybe_attach_layout", "EdgePartition", "partition_edges",
+           "unpartition_edges"]
 
 # KGNN propagation rules that aggregate through act_spmm (and therefore
 # benefit from a blocked-CSR layout). KGIN/R-GCN modulate messages with
@@ -204,3 +205,156 @@ def maybe_attach_layout(g, policy, *, model: str | None = None, **kw):
                                 and model not in SPMM_MODELS):
         return g
     return attach_layout(g, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Destination-sharded edge partition (data-parallel shard_map, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class EdgePartition:
+    """Edges of one graph split by destination shard, shard_map-ready.
+
+    Destination rows are tiled contiguously: shard ``s`` owns rows
+    ``[s*rows_per_shard, (s+1)*rows_per_shard)`` of the (padded) node
+    space. Every per-edge array is stacked ``(n_shards, e_cap)`` so a
+    ``P(axis)`` prefix spec hands each device its own slice; pad slots
+    are masked, not dropped, because shard_map needs equal shapes.
+
+    The halo is the per-shard set of *remote* reads: the unique global
+    source ids a shard gathers before its local scatter. ``src_h``
+    indexes into the shard's own ``halo`` row order, so the inner SPMM
+    touches only an ``(h_cap, d)`` table — the gather working set the
+    halo-exchange roofline term is priced on — instead of ``(N, d)``.
+
+    Within a shard, edges keep their original relative order
+    (stable partition), so per-destination accumulation order matches
+    the unsharded ``segment_sum`` — the partition-invariance tests rely
+    on this being bit-exact, not merely close.
+    """
+
+    src_g: jax.Array      # (S, Ec) int32 global source ids (pads: 0)
+    src_h: jax.Array      # (S, Ec) int32 halo-local source index
+    dst_l: jax.Array      # (S, Ec) int32 dst row local to the shard
+    rel: jax.Array        # (S, Ec) int32 relation ids (pads: 0)
+    mask: jax.Array       # (S, Ec) float32 1=real edge, 0=pad
+    perm: jax.Array       # (S, Ec) int32 original edge index; pads: n_edges
+    halo: jax.Array       # (S, Hc) int32 unique global src ids per shard
+    halo_count: jax.Array  # (S,) int32 real halo rows (rest repeat slot 0)
+    n_shards: int = 1     # static aux
+    rows_per_shard: int = 0
+    n_nodes: int = 0      # original (unpadded) node count
+    n_edges: int = 0
+
+    def tree_flatten(self):
+        return (self.src_g, self.src_h, self.dst_l, self.rel, self.mask,
+                self.perm, self.halo, self.halo_count), (
+            self.n_shards, self.rows_per_shard, self.n_nodes, self.n_edges)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def n_nodes_padded(self) -> int:
+        return self.n_shards * self.rows_per_shard
+
+    @property
+    def e_cap(self) -> int:
+        return int(self.src_g.shape[1])
+
+    @property
+    def h_cap(self) -> int:
+        return int(self.halo.shape[1])
+
+
+def partition_edges(src, dst, rel=None, *, n_nodes: int, n_shards: int,
+                    pad_multiple: int = 8) -> EdgePartition:
+    """Split a COO edge list by destination shard (host-side, once).
+
+    Returns per-shard CSR-style blocks (dst-contiguous, original
+    relative edge order preserved) plus halo gather indices. Shards are
+    padded to a common edge capacity (``pad_multiple``-aligned) and halo
+    capacity; ``unpartition_edges`` is the exact inverse over real
+    edges, which the round-trip test pins down.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    rel = np.zeros_like(src) if rel is None else np.asarray(rel, np.int64)
+    if not (src.shape == dst.shape == rel.shape) or src.ndim != 1:
+        raise ValueError(
+            f"bad edge list shapes {src.shape}/{dst.shape}/{rel.shape}")
+    if n_shards < 1:
+        raise ValueError(f"n_shards={n_shards}")
+    if src.size and not (0 <= src.min() and src.max() < n_nodes
+                         and 0 <= dst.min() and dst.max() < n_nodes):
+        # an out-of-range dst would fall in no shard and vanish silently
+        raise ValueError(
+            f"edge endpoints outside [0, {n_nodes}): src range "
+            f"[{src.min()}, {src.max()}], dst range "
+            f"[{dst.min()}, {dst.max()}]")
+    E = int(src.shape[0])
+    rows = -(-n_nodes // n_shards)            # ceil; node space pads to S*rows
+    shard_of = dst // rows
+    per = [np.flatnonzero(shard_of == s) for s in range(n_shards)]
+    e_cap = max(1, max((len(ix) for ix in per), default=1))
+    e_cap = -(-e_cap // pad_multiple) * pad_multiple
+
+    halos = [np.unique(src[ix]) if len(ix) else np.zeros(1, np.int64)
+             for ix in per]
+    h_cap = max(1, max(len(h) for h in halos))
+    h_cap = -(-h_cap // pad_multiple) * pad_multiple
+
+    src_g = np.zeros((n_shards, e_cap), np.int32)
+    src_h = np.zeros((n_shards, e_cap), np.int32)
+    dst_l = np.zeros((n_shards, e_cap), np.int32)
+    rel_a = np.zeros((n_shards, e_cap), np.int32)
+    mask = np.zeros((n_shards, e_cap), np.float32)
+    perm = np.full((n_shards, e_cap), E, np.int32)
+    halo = np.zeros((n_shards, h_cap), np.int32)
+    halo_n = np.zeros((n_shards,), np.int32)
+    for s, ix in enumerate(per):
+        k = len(ix)
+        src_g[s, :k] = src[ix]
+        src_h[s, :k] = np.searchsorted(halos[s], src[ix])
+        dst_l[s, :k] = dst[ix] - s * rows
+        rel_a[s, :k] = rel[ix]
+        mask[s, :k] = 1.0
+        perm[s, :k] = ix
+        halo[s, :len(halos[s])] = halos[s]
+        halo_n[s] = len(halos[s])
+
+    as_j = jnp.asarray
+    return EdgePartition(
+        src_g=as_j(src_g), src_h=as_j(src_h), dst_l=as_j(dst_l),
+        rel=as_j(rel_a), mask=as_j(mask), perm=as_j(perm),
+        halo=as_j(halo), halo_count=as_j(halo_n),
+        n_shards=n_shards, rows_per_shard=int(rows),
+        n_nodes=int(n_nodes), n_edges=E)
+
+
+def unpartition_edges(part: EdgePartition):
+    """Reassemble the original (src, dst, rel) COO lists from a partition.
+
+    Pad slots (``perm == n_edges``) are dropped; real edges scatter back
+    to their original positions, so the output is elementwise equal to
+    the ``partition_edges`` input — the round-trip CI check.
+    """
+    E = part.n_edges
+    perm = np.asarray(part.perm).ravel()
+    keep = perm < E
+    if int(keep.sum()) != E:
+        raise ValueError(
+            f"partition covers {int(keep.sum())} edges, expected {E}")
+    src = np.zeros(E, np.int32)
+    dst = np.zeros(E, np.int32)
+    rel = np.zeros(E, np.int32)
+    shard_ix = np.repeat(np.arange(part.n_shards), part.e_cap)[keep]
+    p = perm[keep]
+    src[p] = np.asarray(part.src_g).ravel()[keep]
+    dst[p] = (np.asarray(part.dst_l).ravel()[keep]
+              + shard_ix * part.rows_per_shard)
+    rel[p] = np.asarray(part.rel).ravel()[keep]
+    return src, dst, rel

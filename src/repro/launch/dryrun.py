@@ -1,11 +1,43 @@
+import math
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+
+
+def _early_device_count() -> int:
+    """512 covers both production meshes; ``--sim NxM`` forces only what
+    the simulated mesh needs (parsed pre-argparse: the device count locks
+    at first jax init, before main() runs). Handles both the space and
+    ``--sim=NxM`` spellings argparse accepts."""
+    shape = None
+    for i, arg in enumerate(sys.argv):
+        if arg == "--sim" and i + 1 < len(sys.argv):
+            shape = sys.argv[i + 1]
+        elif arg.startswith("--sim="):
+            shape = arg.split("=", 1)[1]
+    if shape is not None:
+        try:
+            return math.prod(int(s) for s in shape.split("x"))
+        except ValueError:
+            return 8
+    return 512
+
+
+# append rather than overwrite/setdefault: unrelated user XLA_FLAGS must
+# survive, and an existing device-count forcing must win
+_FLAGS = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _FLAGS:
+    os.environ["XLA_FLAGS"] = (
+        _FLAGS
+        + f" --xla_force_host_platform_device_count={_early_device_count()}"
+    ).strip()
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
-The two lines above MUST run before any other import (jax locks the device
+The lines above MUST run before any other import (jax locks the device
 count at first init). 512 host devices cover both the 16×16 single-pod
-mesh (first 256) and the 2×16×16 multi-pod mesh.
+mesh (first 256) and the 2×16×16 multi-pod mesh; ``--sim 2x4`` dry-runs
+the same cells on a laptop-sized simulated mesh via the
+``make_production_mesh(sim=...)`` escape hatch.
 
 Per cell this records: memory_analysis (proves it fits), cost_analysis,
 and the trip-count-corrected roofline terms parsed from the partitioned
@@ -37,8 +69,9 @@ from repro.launch.roofline import HW, parse_hlo, roofline_terms
 
 def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
              bits: int | None, out_dir: str, verbose: bool = True,
-             schedule: str | None = None) -> dict:
-    mesh = make_production_mesh(multi_pod=multi_pod)
+             schedule: str | None = None,
+             sim: tuple | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod, sim=sim)
     n_dev = mesh.devices.size
     arch = get(arch_name)
     # With --schedule, the cell is lowered inside an ambient act_context
@@ -80,6 +113,8 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
                         - ma.alias_size_in_bytes) / 2**30,
         }
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # JAX 0.4.x: one dict per device
+            ca = ca[0] if ca else {}
         rec["cost_analysis"] = {
             "flops": ca.get("flops"),
             "bytes_accessed": ca.get("bytes accessed"),
@@ -134,7 +169,17 @@ def main() -> None:
     ap.add_argument("--include-kgnn", action="store_true",
                     help="also dry-run the paper's KGAT/KGCN/KGIN at "
                          "Amazon-Book scale")
+    ap.add_argument("--sim", default=None,
+                    help="simulated mesh extents 'DxM' (or 'PxDxM' with "
+                         "--multi-pod), e.g. --sim 2x4 — lowers the same "
+                         "cells without 512 host devices")
     args = ap.parse_args()
+    sim = tuple(int(s) for s in args.sim.split("x")) if args.sim else None
+    if sim is not None and args.both_meshes:
+        # sim extents can match only one of the two axis layouts; the
+        # other leg would die outside run_cell's try, discarding results
+        raise SystemExit("--sim fixes one mesh layout; drop --both-meshes "
+                         "and pass --multi-pod explicitly if wanted")
     bits = args.bits if args.bits else None
 
     arch_names = [args.arch] if args.arch else list(ASSIGNED)
@@ -154,7 +199,7 @@ def main() -> None:
             for sn in shape_names:
                 results.append(run_cell(an, sn, multi_pod=mp, bits=bits,
                                         out_dir=args.out,
-                                        schedule=args.schedule))
+                                        schedule=args.schedule, sim=sim))
     ok = sum(r["ok"] for r in results)
     print(f"[dryrun] {ok}/{len(results)} cells compiled "
           f"(hw: {HW['peak_flops']/1e12:.0f} TF/s, "

@@ -3,6 +3,13 @@
 ``make_production_mesh`` is a FUNCTION (importing this module never touches
 jax device state). Single-pod uses the first 256 devices so both meshes can
 be built in one 512-device dry-run process.
+
+Mesh construction routes through ``repro.sharding.compat`` so the same
+code builds on JAX 0.4.x (no axis types) and current releases. On hosts
+with fewer devices than a pod, the honest failure mode is an error that
+names the fix; ``sim=`` is the dry-run escape hatch that keeps the axis
+names (so every ``PartitionSpec`` downstream still resolves) while
+shrinking the per-axis extents to what the host can simulate.
 """
 
 from __future__ import annotations
@@ -10,17 +17,48 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from repro.sharding.compat import (
+    auto_axis_types,
+    host_device_count,
+    mesh_from_devices,
+    sim_mesh_env_hint,
+)
+
 __all__ = ["make_production_mesh", "batch_axes"]
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def make_production_mesh(*, multi_pod: bool = False,
+                         sim: tuple | None = None):
+    """The 16×16 (data, model) pod mesh, or 2×16×16 with ``multi_pod``.
+
+    ``sim`` substitutes per-axis extents (same axis names, same order) so
+    dry-run tests can exercise the full partition machinery on a handful
+    of forced host devices — e.g. ``sim=(2, 4)`` or
+    ``sim=(2, 2, 2)`` with ``multi_pod=True``. Production callers leave
+    it ``None`` and get a real error, not a silent downsize, when the
+    host cannot back the pod.
+    """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if sim is not None:
+        sim = tuple(int(s) for s in sim)
+        if len(sim) != len(axes):
+            raise ValueError(
+                f"sim mesh shape {sim} must name {len(axes)} extents for "
+                f"axes {axes} (got {len(sim)})")
+        shape = sim
     n = int(np.prod(shape))
+    avail = host_device_count()
+    if avail < n:
+        raise RuntimeError(
+            f"make_production_mesh(multi_pod={multi_pod}, sim={sim}) needs "
+            f"{n} devices but this host exposes {avail}. On real hardware "
+            "check the slice topology; for a simulated run either pass "
+            "sim=<smaller per-axis extents> or force host devices via "
+            + sim_mesh_env_hint(n))
     devices = np.asarray(jax.devices()[:n]).reshape(shape)
-    return jax.sharding.Mesh(
-        devices, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return mesh_from_devices(devices, axes,
+                             axis_types=auto_axis_types(len(axes)))
 
 
 def batch_axes(mesh) -> tuple:

@@ -25,10 +25,11 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs.base import ArchSpec, ShapeSpec
 from repro.core.policy import ACTPolicy, INT2
+from repro.sharding.compat import P
 from repro.sharding.logical import axis_rules
 from repro.training.optimizer import adam
 

@@ -8,6 +8,7 @@ configs are exercised via dryrun.py).
   PYTHONPATH=src python -m repro.launch.train --arch fm --steps 50 --bits 4
   PYTHONPATH=src python -m repro.launch.train --arch kgat \
       --schedule first_layer_int8_rest_int2
+  PYTHONPATH=src python -m repro.launch.train --arch kgat --mesh data=8
 
 ``--schedule`` takes a ``PolicySchedule`` spec (preset name, uniform
 bit-width, or ordered ``[kind:]glob=bits`` rules — see
@@ -15,11 +16,19 @@ bit-width, or ordered ``[kind:]glob=bits`` rules — see
 ``act_context`` so every op site resolves its own policy and
 stochastic-rounding key (scope-hashed, replay-exact). ``--bits`` remains
 the uniform fast path.
+
+``--mesh data=N`` (KGAT only) runs the data-parallel shard_map path
+(DESIGN.md §7): edges dst-partitioned over N shards, per-shard ACT-
+compressed propagation, gradients all-reduced through the INT8
+compressed psum (``--allreduce fp32`` for the exact baseline). On a CPU
+host the N simulated devices are forced automatically — provided no jax
+call has initialized the backend first.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import tempfile
 
 import jax
@@ -34,10 +43,65 @@ from repro.training.optimizer import adam
 from repro.training.trainer import Trainer, TrainerConfig
 
 
+def _parse_mesh(spec: str) -> tuple[str, int]:
+    """``"data=8"`` -> ``("data", 8)``."""
+    try:
+        axis, n = spec.split("=")
+        return axis, int(n)
+    except ValueError:
+        raise SystemExit(f"--mesh expects AXIS=N (e.g. data=8), got {spec!r}")
+
+
+def _force_host_devices(n: int) -> None:
+    """Request ``n`` simulated CPU devices — only effective before the
+    first jax call initializes the backend (``make_sim_mesh`` raises the
+    honest error with the manual fix if it is too late)."""
+    cur = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in cur:
+        os.environ["XLA_FLAGS"] = \
+            (cur + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+def _kgat_dp_job(arch, schedule: PolicySchedule, args):
+    """--mesh data=N: the shard_map data-parallel path (DESIGN.md §7)."""
+    from repro.data.synthetic import bpr_batches, gen_kg_dataset
+    from repro.models import kgnn
+    from repro.sharding.compat import make_sim_mesh
+    from repro.training import data_parallel as dp
+
+    axis, n = _parse_mesh(args.mesh)
+    mesh = make_sim_mesh(n, (axis,))
+    ds = gen_kg_dataset(n_users=120, n_items=200, n_attrs=80, seed=0)
+    cfg = kgnn.KGNNConfig(
+        model="kgat", n_users=ds.n_users, n_entities=ds.n_entities,
+        n_relations=ds.n_relations, dim=32, n_layers=3, readout="concat")
+    g = jax.tree_util.tree_map(jnp.asarray, ds.graph)
+    part = dp.partition_graph(g, mesh, axis=axis)
+    params = kgnn.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adam(3e-3)
+    train_step = dp.make_kgat_dp_step(
+        cfg, part, mesh, opt, schedule=schedule,
+        root_key=jax.random.PRNGKey(1), axis=axis,
+        compress_grads=args.allreduce == "int8")
+
+    def data():
+        for b in bpr_batches(ds, 512, seed=2):
+            yield jax.tree_util.tree_map(jnp.asarray, b)
+
+    print(f"[train] data-parallel kgat: mesh {axis}={n}, "
+          f"allreduce={args.allreduce}, "
+          f"edges/shard≤{part.e_cap}, halo/shard≤{part.h_cap}")
+    return train_step, (params, opt.init(params)), data()
+
+
 def _kgnn_job(arch, schedule: PolicySchedule, args):
     from repro.data.csr import maybe_attach_layout
     from repro.data.synthetic import bpr_batches, gen_kg_dataset
     from repro.models import kgnn
+    if args.mesh:
+        if arch.model_cfg.model != "kgat":
+            raise SystemExit("--mesh is implemented for --arch kgat")
+        return _kgat_dp_job(arch, schedule, args)
     ds = gen_kg_dataset(n_users=120, n_items=200, n_attrs=80, seed=0)
     cfg = kgnn.KGNNConfig(
         model=arch.model_cfg.model, n_users=ds.n_users,
@@ -172,9 +236,21 @@ def main() -> None:
                          "'[kind:]glob=bits,...'); overrides --bits")
     ap.add_argument("--kernel", default="jnp", choices=["jnp", "pallas"],
                     help="ACT backend: jnp reference or fused Pallas kernels")
+    ap.add_argument("--mesh", default=None,
+                    help="AXIS=N, e.g. data=8: shard_map data-parallel "
+                         "training on a simulated N-device mesh (kgat)")
+    ap.add_argument("--allreduce", default="int8", choices=["int8", "fp32"],
+                    help="gradient all-reduce wire format on the --mesh "
+                         "path (int8 = compressed SR psum)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
+    if args.mesh:
+        # must precede every jax call: the device count locks at first init
+        _force_host_devices(_parse_mesh(args.mesh)[1])
     arch = get(args.arch)
+    if args.mesh and arch.family != "kgnn":
+        raise SystemExit("--mesh (shard_map data parallelism) is "
+                         "implemented for the kgnn family (--arch kgat)")
     schedule = schedule_from_cli(args.schedule, args.bits, kernel=args.kernel)
 
     job = {

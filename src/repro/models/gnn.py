@@ -114,7 +114,7 @@ def gcn_forward_spmd(params, x, src_g, dst_l, deg, *, mesh, axes,
     Autodiff through shard_map gives the transposed schedule for free
     (all-gatherᵀ = reduce-scatter).
     """
-    from jax.sharding import PartitionSpec as P
+    from repro.sharding.compat import P, shard_map
 
     ctx = model_context(policy, key)
     ctx.check_key("gcn_forward_spmd")
@@ -131,7 +131,7 @@ def gcn_forward_spmd(params, x, src_g, dst_l, deg, *, mesh, axes,
                                     num_segments=x_loc.shape[0])
         return agg_v.astype(x_loc.dtype)
 
-    agg = jax.shard_map(
+    agg = shard_map(
         agg_local, mesh=mesh,
         in_specs=(P(axes, None), P(axes), P(axes)),
         out_specs=P(axes, None))

@@ -45,7 +45,7 @@ from repro.core import (
 from .layers import glorot, normal_init
 
 __all__ = [
-    "KGNNConfig", "CKG", "segment_softmax",
+    "KGNNConfig", "CKG", "segment_softmax", "kgat_bi_interaction",
     "init_params", "propagate", "score_pairs", "bpr_loss",
 ]
 
@@ -153,20 +153,38 @@ def init_params(key: jax.Array, cfg: KGNNConfig) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def _kgat_layer(p, layer: int, e: jax.Array, g: CKG,
-                att: jax.Array) -> jax.Array:
+def kgat_bi_interaction(p, layer: int, e: jax.Array, e_n: jax.Array, *,
+                        keys: dict | None = None,
+                        policies: dict | None = None) -> jax.Array:
     """Bi-interaction aggregator: LeakyReLU(W1(e+eN)) + LeakyReLU(W2(e⊙eN)).
 
-    Policies/keys resolve from the ambient ActContext at the scoped sites
-    (``.../spmm``, ``.../w1`` ...).
+    The single source of the (e, e_n) -> layer-output math for every
+    KGAT path. With ``keys``/``policies`` omitted the ``w1``/``w2``/
+    ``act1``/``act2`` sites resolve from the ambient ActContext; the
+    explicitly-partitioned paths (shard_map bodies, where ambient
+    resolution can't reach) pass per-site dicts instead — the DP
+    bit-exactness contract rests on both paths running THIS code.
     """
+    k = keys or {}
+    po = policies or {}
+    add = act_matmul(e + e_n, p["w1"][layer], scope="w1",
+                     key=k.get("w1"), policy=po.get("w1"))
+    mul = act_matmul(e * e_n, p["w2"][layer], scope="w2",
+                     key=k.get("w2"), policy=po.get("w2"))
+    add = act_nonlin(add, fn="leaky_relu", scope="act1",
+                     key=k.get("act1"), policy=po.get("act1"))
+    mul = act_nonlin(mul, fn="leaky_relu", scope="act2",
+                     key=k.get("act2"), policy=po.get("act2"))
+    return add + mul
+
+
+def _kgat_layer(p, layer: int, e: jax.Array, g: CKG,
+                att: jax.Array) -> jax.Array:
+    """One KGAT layer; policies/keys resolve from the ambient ActContext
+    at the scoped sites (``.../spmm``, ``.../w1`` ...)."""
     e_n = act_spmm(e, g.src, g.dst, att, num_nodes=g.n_nodes,
                    scope="spmm", layout=g.layout)
-    add = act_matmul(e + e_n, p["w1"][layer], scope="w1")
-    mul = act_matmul(e * e_n, p["w2"][layer], scope="w2")
-    add = act_nonlin(add, fn="leaky_relu", scope="act1")
-    mul = act_nonlin(mul, fn="leaky_relu", scope="act2")
-    return add + mul
+    return kgat_bi_interaction(p, layer, e, e_n)
 
 
 def _kgat_attention(p, e: jax.Array, g: CKG) -> jax.Array:
@@ -307,7 +325,7 @@ def propagate_spmd(params: dict, g: CKG, cfg: KGNNConfig, *, mesh, axes,
     under the same site name: what each device buffers is Quant(e_full),
     the all-gathered table, which is exactly the recorded shape.
     """
-    from jax.sharding import PartitionSpec as P
+    from repro.sharding.compat import P, shard_map
 
     assert cfg.model == "kgat", "spmd propagate implemented for KGAT"
     ctx = model_context(policy, key)
@@ -336,7 +354,7 @@ def propagate_spmd(params: dict, g: CKG, cfg: KGNNConfig, *, mesh, axes,
                 site = ctx.scope_path("spmm")  # not registered: the op
                 pol = ctx.policy_for("spmm", site)  # inside claims the name
                 k_spmm = ctx.key_for(site)
-                spmd_layer = jax.shard_map(
+                spmd_layer = shard_map(
                     functools.partial(layer_local, spmm_policy=pol or FP32),
                     mesh=mesh,
                     in_specs=(P(axes, None), P(None, None, None), P(axes),
@@ -347,10 +365,7 @@ def propagate_spmd(params: dict, g: CKG, cfg: KGNNConfig, *, mesh, axes,
                                  params["att_coef"], params["relation"],
                                  k_spmm if k_spmm is not None
                                  else jax.random.PRNGKey(0))
-                add = act_matmul(e + e_n, params["w1"][l], scope="w1")
-                mul = act_matmul(e * e_n, params["w2"][l], scope="w2")
-                e = act_nonlin(add, fn="leaky_relu", scope="act1") \
-                    + act_nonlin(mul, fn="leaky_relu", scope="act2")
+                e = kgat_bi_interaction(params, l, e, e_n)
             outs.append(e)
     return jnp.concatenate(outs, axis=-1) if cfg.readout == "concat" \
         else sum(outs)

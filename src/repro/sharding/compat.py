@@ -1,0 +1,227 @@
+"""JAX-version portability shim for the SPMD layer (DESIGN.md §7.5).
+
+The distribution code targets the *current* JAX SPMD API surface
+(``jax.shard_map``, ``jax.sharding.AxisType``, meshes with
+``axis_types``, ``jax.sharding.reshard``), but the pinned toolchain is
+JAX 0.4.37 where none of those names exist yet — ``shard_map`` lives in
+``jax.experimental.shard_map`` and meshes carry no axis types. Upstream
+has renamed these entry points more than once; every rename used to kill
+the whole distributed layer at import time.
+
+This module is the single place that knows about those renames. Policy:
+
+  * supported range: JAX 0.4.30 → current release (the CI fast matrix
+    pins 0.4.37 and latest; a rename upstream breaks the ``latest`` leg
+    here, not at 40 call sites)
+  * resolution happens ONCE at import via feature probes
+    (``hasattr``/``inspect.signature``), never by version-string
+    comparison — prereleases and vendor forks misreport versions
+  * every exported symbol keeps the NEW (current-JAX) calling
+    convention; the shim adapts it down to what the pinned runtime
+    accepts (e.g. ``check_rep`` is dropped/renamed as needed, an
+    ``axis_types`` request is silently elided on meshes that predate
+    axis types — semantically safe, 0.4.x meshes are all ``Auto``)
+
+Everything SPMD in the repo imports from here:
+
+    from repro.sharding.compat import shard_map, make_sim_mesh, P
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+import math
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "AxisType", "HAS_AXIS_TYPES", "HAS_NATIVE_SHARD_MAP", "P",
+    "auto_axis_types", "host_device_count", "make_mesh",
+    "make_sim_mesh", "mesh_from_devices", "reshard", "shard_map",
+    "sim_mesh_env_hint",
+]
+
+
+# --- feature probes (import-time, hasattr-based — never version strings) ---
+
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
+
+class _AxisTypeShim(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` on JAX < axis-types.
+
+    Pre-axis-type meshes behave exactly like all-``Auto`` meshes, so
+    carrying the enum purely as documentation is sound: requesting
+    ``Auto`` is a no-op and requesting ``Explicit``/``Manual`` on a
+    runtime that cannot honor it raises at mesh construction.
+    """
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+AxisType = jax.sharding.AxisType if HAS_AXIS_TYPES else _AxisTypeShim
+
+
+def auto_axis_types(n_axes: int):
+    """``(AxisType.Auto,) * n_axes`` in whichever enum this JAX speaks."""
+    return (AxisType.Auto,) * n_axes
+
+
+def _kwarg_names(fn) -> frozenset:
+    try:
+        return frozenset(inspect.signature(fn).parameters)
+    except (TypeError, ValueError):  # C-level / pybind signatures
+        return frozenset()
+
+
+# --- shard_map -------------------------------------------------------------
+
+if HAS_NATIVE_SHARD_MAP:
+    _SM = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _SM  # noqa: F401
+
+_SM_KWARGS = _kwarg_names(_SM)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool = False):
+    """``jax.shard_map`` with one calling convention across JAX versions.
+
+    ``check_rep`` maps onto whatever the runtime calls replication
+    checking (``check_rep`` in 0.4.x, ``check_vma`` today). It defaults
+    OFF because our bodies differentiate through ``custom_vjp`` ops
+    (``act_spmm``), for which old JAX has no replication rule — the
+    out_specs are the ground truth either way.
+    """
+    kw = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    if "check_vma" in _SM_KWARGS:
+        kw["check_vma"] = check_rep
+    elif "check_rep" in _SM_KWARGS:
+        kw["check_rep"] = check_rep
+    return _SM(f, **kw)
+
+
+# --- meshes ----------------------------------------------------------------
+
+
+def _native_axis_types(axis_types):
+    """Translate shim enum members to the native enum (when both exist)."""
+    if axis_types is None:
+        return None
+    out = []
+    for t in axis_types:
+        if isinstance(t, _AxisTypeShim):
+            if not HAS_AXIS_TYPES:
+                out.append(t)
+                continue
+            t = getattr(jax.sharding.AxisType, t.name)
+        out.append(t)
+    return tuple(out)
+
+
+def mesh_from_devices(devices, axis_names, *, axis_types=None):
+    """``jax.sharding.Mesh`` that tolerates runtimes without axis types.
+
+    On pre-axis-type JAX an all-``Auto`` request is elided (0.4.x meshes
+    ARE auto meshes); any other request cannot be honored and raises.
+    """
+    devices = np.asarray(devices)
+    axis_types = _native_axis_types(axis_types)
+    if axis_types is not None and HAS_AXIS_TYPES:
+        return jax.sharding.Mesh(devices, axis_names, axis_types=axis_types)
+    if axis_types is not None and any(
+            getattr(t, "name", str(t)) != "Auto" for t in axis_types):
+        raise NotImplementedError(
+            f"axis_types={axis_types} need jax.sharding.AxisType, which "
+            f"this JAX ({jax.__version__}) predates; only Auto meshes are "
+            "expressible here")
+    return jax.sharding.Mesh(devices, axis_names)
+
+
+_MAKE_MESH = getattr(jax, "make_mesh", None)
+_MAKE_MESH_KWARGS = _kwarg_names(_MAKE_MESH) if _MAKE_MESH else frozenset()
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+    """``jax.make_mesh`` signature, portable down to manual construction."""
+    if _MAKE_MESH is not None:
+        kw = {}
+        if devices is not None:
+            kw["devices"] = devices
+        if axis_types is not None and "axis_types" in _MAKE_MESH_KWARGS:
+            kw["axis_types"] = _native_axis_types(axis_types)
+            return _MAKE_MESH(tuple(axis_shapes), tuple(axis_names), **kw)
+        m = _MAKE_MESH(tuple(axis_shapes), tuple(axis_names), **kw)
+        if axis_types is None:
+            return m
+        # native make_mesh predates axis_types: rebuild through the
+        # validating constructor (honors them when Mesh can, raises on a
+        # non-Auto request this runtime cannot express — never elides)
+        return mesh_from_devices(m.devices, tuple(axis_names),
+                                 axis_types=axis_types)
+    n = math.prod(axis_shapes)
+    devs = list(devices) if devices is not None else jax.devices()[:n]
+    return mesh_from_devices(
+        np.asarray(devs[:n]).reshape(tuple(axis_shapes)), tuple(axis_names),
+        axis_types=axis_types)
+
+
+def host_device_count() -> int:
+    return len(jax.devices())
+
+
+def sim_mesh_env_hint(n: int) -> str:
+    """The incantation for an n-way simulated CPU mesh, for error text."""
+    return (f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            "(must be set before the first jax call in the process)")
+
+
+def make_sim_mesh(shape, axis_names=("data",), *, axis_types=None):
+    """Test/dev mesh over forced host (CPU) devices.
+
+    ``shape`` is an int (1-D mesh) or a tuple matching ``axis_names``.
+    Raises with the exact ``XLA_FLAGS`` fix when the process has fewer
+    devices than the mesh needs — the number-one SPMD test footgun (the
+    device count locks at first jax init, so pytest main processes
+    usually sit at 1).
+    """
+    if isinstance(shape, int):
+        shape = (shape,)
+    if len(shape) != len(axis_names):
+        raise ValueError(f"mesh shape {shape} vs axis names {axis_names}")
+    n = math.prod(shape)
+    avail = host_device_count()
+    if avail < n:
+        raise RuntimeError(
+            f"make_sim_mesh({shape}) needs {n} devices but this process "
+            f"has {avail}; run under {sim_mesh_env_hint(n)}")
+    if axis_types is None:
+        axis_types = auto_axis_types(len(axis_names))
+    return mesh_from_devices(
+        np.asarray(jax.devices()[:n]).reshape(shape), tuple(axis_names),
+        axis_types=axis_types)
+
+
+# --- resharding ------------------------------------------------------------
+
+
+def reshard(x, mesh, spec):
+    """Place ``x`` onto ``NamedSharding(mesh, spec)``.
+
+    Uses ``jax.sharding.reshard`` where it exists (explicit-sharding
+    API); ``device_put`` is the portable equivalent for Auto meshes.
+    """
+    sharding = NamedSharding(mesh, spec)
+    native = getattr(jax.sharding, "reshard", None)
+    if native is not None and HAS_AXIS_TYPES:
+        try:
+            return native(x, sharding)
+        except (TypeError, ValueError):
+            pass  # reshard refuses non-explicit meshes; fall through
+    return jax.device_put(x, sharding)

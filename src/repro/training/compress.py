@@ -11,9 +11,11 @@ reuse it for the cross-replica gradient all-reduce:
      when the reduce is expressible; we model the int32 accumulate)
   4. dequantize by scale/replica-count
 
-Used inside ``shard_map`` over the `data`/`pod` mesh axes. At 2+ pods the
-inter-pod (DCN) hop is the slow link — compressing it 4× moves the
-collective roofline term directly (see EXPERIMENTS.md §Perf).
+Used inside ``shard_map`` (via ``repro.sharding.compat``) over the
+`data`/`pod` mesh axes — the live call site is the data-parallel KGAT
+step in ``repro.training.data_parallel``. At 2+ pods the inter-pod (DCN)
+hop is the slow link — compressing it 4× moves the collective roofline
+term directly (see EXPERIMENTS.md §Perf).
 """
 
 from __future__ import annotations
@@ -21,7 +23,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["compressed_psum_mean", "psum_mean"]
+__all__ = ["all_reduce_grads", "compressed_psum_mean", "psum_mean"]
 
 
 def _sr_quantize_int8(g: jax.Array, scale: jax.Array, key: jax.Array):
@@ -33,7 +35,16 @@ def _sr_quantize_int8(g: jax.Array, scale: jax.Array, key: jax.Array):
 
 
 def compressed_psum_mean(grads, axis_name: str, key: jax.Array):
-    """Mean-all-reduce each leaf with int8 SR compression (unbiased)."""
+    """Mean-all-reduce each leaf with int8 SR compression (unbiased).
+
+    ``key`` may be replicated: each replica folds in its own axis index,
+    so rounding noise is independent across replicas and averages down
+    ~1/√n in the psum instead of adding coherently (shard gradients are
+    near-equal batch estimates — with a shared draw the identical
+    components, e.g. the L2 term, would round identically on every
+    replica and the mean would keep the full single-replica error).
+    """
+    key = jax.random.fold_in(key, jax.lax.axis_index(axis_name))
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     n = jax.lax.psum(1, axis_name)
     out = []
@@ -52,3 +63,21 @@ def psum_mean(grads, axis_name: str):
     n = jax.lax.psum(1, axis_name)
     return jax.tree_util.tree_map(
         lambda g: jax.lax.psum(g, axis_name) / n, grads)
+
+
+def all_reduce_grads(grads, axis_name: str, *, key: jax.Array | None = None,
+                     compressed: bool = True):
+    """The one gradient all-reduce entry point for shard_map train steps.
+
+    ``compressed=False`` (or no key) is the exact fp32 path — the
+    bit-verification baseline; ``compressed=True`` needs a per-step key
+    (reusing one would replay identical rounding noise every step and
+    void unbiasedness-in-expectation, same rule as the ACT sites).
+    """
+    if not compressed:
+        return psum_mean(grads, axis_name)
+    if key is None:
+        raise ValueError(
+            "compressed grad all-reduce needs a per-step PRNG key "
+            "(pass compressed=False for the exact baseline)")
+    return compressed_psum_mean(grads, axis_name, key)

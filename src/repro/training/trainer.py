@@ -128,6 +128,12 @@ class Trainer:
         return self
 
     def run(self):
+        # one-line topology breadcrumb: SPMD steps (shard_map over a
+        # simulated or real mesh) look identical from here, so make the
+        # device layout part of the log contract for post-mortems
+        self.log(f"[trainer] {jax.device_count()} device(s), "
+                 f"backend={jax.default_backend()}, "
+                 f"start step {self.step}/{self.cfg.total_steps}")
         try:
             return self._run()
         finally:

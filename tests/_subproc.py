@@ -1,0 +1,26 @@
+"""Shared subprocess runner for multi-device tests.
+
+The XLA device count locks at first jax init, so the main pytest
+process stays at 1 device; anything needing a real mesh runs in a child
+process with ``--xla_force_host_platform_device_count`` forced. Used by
+tests/test_distributed.py and tests/test_data_parallel.py.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def forced_device_run(src: str, n_devices: int = 8,
+                      timeout: int = 480) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(src)], env=env,
+        capture_output=True, text=True, timeout=timeout, cwd=_REPO)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout

@@ -1,0 +1,267 @@
+"""Data-parallel training path: edge partitioning, the shard_map KGAT
+step, and the compressed gradient all-reduce (DESIGN.md §7).
+
+Host-side partitioning and error contracts run in-process (1 device);
+anything that needs a real multi-device mesh runs in a subprocess with
+forced host devices, same pattern as tests/test_distributed.py.
+"""
+
+import numpy as np
+import pytest
+
+from _subproc import forced_device_run as _run
+
+
+# ---------------------------------------------------------------------------
+# partition_edges (host-side, no mesh needed)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4, 8])
+def test_partition_edges_roundtrip(n_shards):
+    """Reassembled shards == original COO lists, for every shard count."""
+    from repro.data.csr import partition_edges, unpartition_edges
+
+    rng = np.random.default_rng(3)
+    n_nodes, n_edges = 37, 211   # deliberately not shard-divisible
+    src = rng.integers(0, n_nodes, n_edges)
+    dst = rng.integers(0, n_nodes, n_edges)
+    rel = rng.integers(0, 7, n_edges)
+    part = partition_edges(src, dst, rel, n_nodes=n_nodes,
+                           n_shards=n_shards)
+    assert part.n_shards == n_shards
+    assert part.n_nodes_padded >= n_nodes
+    s2, d2, r2 = unpartition_edges(part)
+    np.testing.assert_array_equal(s2, src)
+    np.testing.assert_array_equal(d2, dst)
+    np.testing.assert_array_equal(r2, rel)
+
+
+def test_partition_edges_halo_and_locality():
+    """Halo-local src indices resolve to the global ids, local dst rows
+    stay inside the shard, masks cover exactly the real edges."""
+    from repro.data.csr import partition_edges
+
+    rng = np.random.default_rng(0)
+    n_nodes, n_edges = 64, 400
+    src = rng.integers(0, n_nodes, n_edges)
+    dst = rng.integers(0, n_nodes, n_edges)
+    part = partition_edges(src, dst, n_nodes=n_nodes, n_shards=4)
+    mask = np.asarray(part.mask) > 0
+    assert int(mask.sum()) == n_edges
+    halo = np.asarray(part.halo)
+    src_h = np.asarray(part.src_h)
+    src_g = np.asarray(part.src_g)
+    resolved = np.take_along_axis(halo, src_h, axis=1)
+    np.testing.assert_array_equal(resolved[mask], src_g[mask])
+    assert np.asarray(part.dst_l).max() < part.rows_per_shard
+    # halo is deduplicated: per-shard unique sources only
+    for s in range(4):
+        h = halo[s, :int(np.asarray(part.halo_count)[s])]
+        assert len(np.unique(h)) == len(h)
+
+
+def test_partition_edges_errors():
+    from repro.data.csr import partition_edges
+
+    with pytest.raises(ValueError, match="bad edge list"):
+        partition_edges([1, 2], [1], n_nodes=4, n_shards=2)
+    with pytest.raises(ValueError, match="n_shards"):
+        partition_edges([1], [1], n_nodes=4, n_shards=0)
+
+
+# ---------------------------------------------------------------------------
+# mesh construction contracts (honest errors on small hosts)
+# ---------------------------------------------------------------------------
+
+
+def test_production_mesh_honest_error_and_sim_hatch():
+    """On a 1-device host the pod mesh fails with the fix in the message;
+    sim= keeps the axis names at host-sized extents."""
+    from repro.launch.mesh import batch_axes, make_production_mesh
+
+    with pytest.raises(RuntimeError) as ei:
+        make_production_mesh()
+    msg = str(ei.value)
+    assert "256 devices" in msg and "XLA_FLAGS" in msg and "sim=" in msg
+    m = make_production_mesh(sim=(1, 1))
+    assert m.axis_names == ("data", "model")
+    assert batch_axes(m) == ("data",)
+    with pytest.raises(ValueError, match="must name 3 extents"):
+        make_production_mesh(multi_pod=True, sim=(1, 1))
+
+
+def test_make_sim_mesh_honest_error():
+    from repro.sharding.compat import make_sim_mesh
+
+    m = make_sim_mesh(1)
+    assert m.axis_names == ("data",)
+    with pytest.raises(RuntimeError, match="xla_force_host_platform"):
+        make_sim_mesh(4096)
+    with pytest.raises(ValueError, match="axis names"):
+        make_sim_mesh((2, 2), ("data",))
+
+
+def test_make_mesh_axis_type_requests():
+    """make_mesh honors Auto requests on every runtime and refuses —
+    never silently elides — non-Auto requests a pre-axis-type runtime
+    cannot express."""
+    from repro.sharding.compat import (HAS_AXIS_TYPES, AxisType, make_mesh)
+
+    m = make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    assert m.axis_names == ("data",)
+    assert make_mesh((1,), ("data",)).axis_names == ("data",)
+    if not HAS_AXIS_TYPES:
+        with pytest.raises(NotImplementedError, match="Auto meshes"):
+            make_mesh((1,), ("data",), axis_types=(AxisType.Explicit,))
+
+
+def test_all_reduce_grads_requires_key():
+    from repro.training.compress import all_reduce_grads
+
+    with pytest.raises(ValueError, match="per-step PRNG key"):
+        all_reduce_grads({"w": np.zeros(4)}, "data", compressed=True)
+
+
+def test_dp_step_contract_errors():
+    """Shard-count and batch-divisibility mismatches fail fast, before
+    any shard_map tracing."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data.csr import partition_edges
+    from repro.models import kgnn
+    from repro.sharding.compat import make_sim_mesh
+    from repro.training import data_parallel as dp
+
+    cfg = kgnn.KGNNConfig(model="kgat", n_users=4, n_entities=12,
+                          n_relations=3, dim=4, n_layers=1, n_bases=2)
+    part2 = partition_edges([0, 1], [1, 2], n_nodes=cfg.n_nodes, n_shards=2)
+    mesh1 = make_sim_mesh(1)
+    params = kgnn.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {k: jnp.zeros((4,), jnp.int32) for k in ("user", "pos", "neg")}
+    with pytest.raises(ValueError, match="partition built for 2"):
+        dp.dp_bpr_loss_and_grads(params, part2, batch, cfg=cfg, mesh=mesh1,
+                                 root_key=jax.random.PRNGKey(0))
+    part1 = partition_edges([0, 1], [1, 2], n_nodes=cfg.n_nodes, n_shards=1)
+    with pytest.raises(ValueError, match="root key"):
+        dp.dp_bpr_loss_and_grads(params, part1, batch, cfg=cfg, mesh=mesh1)
+
+
+# ---------------------------------------------------------------------------
+# multi-device semantics (subprocess, forced host devices)
+# ---------------------------------------------------------------------------
+
+# indented to match the test bodies so the concatenation dedents cleanly
+_SETUP = """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.flatten_util import ravel_pytree
+        from repro.models import kgnn
+        from repro.training import data_parallel as dp
+        from repro.sharding.compat import make_sim_mesh
+
+        rng = np.random.default_rng(0)
+        cfg = kgnn.KGNNConfig(model="kgat", n_users=16, n_entities=48,
+                              n_relations=5, dim=8, n_layers=2, n_bases=2,
+                              readout="concat")
+        N, E, B = cfg.n_nodes, 200, 32
+        g = kgnn.CKG(src=jnp.asarray(rng.integers(0, N, E), jnp.int32),
+                     dst=jnp.asarray(rng.integers(0, N, E), jnp.int32),
+                     rel=jnp.asarray(rng.integers(0, 5, E), jnp.int32),
+                     n_nodes=N, n_relations=5)
+        params = kgnn.init_params(jax.random.PRNGKey(0), cfg)
+        batch = {
+            "user": jnp.asarray(rng.integers(0, cfg.n_users, B), jnp.int32),
+            "pos": jnp.asarray(rng.integers(0, cfg.n_entities, B), jnp.int32),
+            "neg": jnp.asarray(rng.integers(0, cfg.n_entities, B), jnp.int32)}
+"""
+
+
+def test_dp_step_matches_single_device():
+    """8-shard shard_map KGAT step vs the single-device step, exact
+    compression + fp32 all-reduce: per-shard forward rows are bit-exact
+    (stable dst partition, same accumulation order) and the gradient
+    all-reduce agrees to fp32-reassociation roundoff. One optimizer step
+    stays within the same bound."""
+    print(_run(_SETUP + """
+        from repro.training.optimizer import adam
+        loss_ref, g_ref = jax.value_and_grad(kgnn.bpr_loss)(
+            params, g, batch, cfg, policy=None, key=None)
+        mesh = make_sim_mesh(8)
+        part = dp.partition_graph(g, mesh)
+        loss_dp, g_dp = dp.dp_bpr_loss_and_grads(
+            params, part, batch, cfg=cfg, mesh=mesh, schedule=None,
+            root_key=jax.random.PRNGKey(7), compress_grads=False)
+        assert abs(float(loss_ref - loss_dp)) < 1e-6, (loss_ref, loss_dp)
+        fr, _ = ravel_pytree(g_ref)
+        fd, _ = ravel_pytree(g_dp)
+        rel = float(jnp.abs(fr - fd).max() / (jnp.abs(fr).max() + 1e-12))
+        assert rel < 1e-5, rel
+
+        opt = adam(1e-2)
+        st_ref = opt.update(g_ref, opt.init(params), params)[0]
+        st_dp = opt.update(g_dp, opt.init(params), params)[0]
+        pr, _ = ravel_pytree(st_ref)
+        pd, _ = ravel_pytree(st_dp)
+        drift = float(jnp.abs(pr - pd).max())
+        assert drift < 1e-5, drift
+        print("dp==single ok: loss", float(loss_dp), "grad rel", rel,
+              "param drift", drift)
+    """))
+
+
+def test_dp_forward_loss_invariant_under_act_policy():
+    """ACT compresses *residuals*, never the forward values: the DP loss
+    under a stochastic INT8 schedule equals the exact-policy loss."""
+    print(_run(_SETUP + """
+        from repro.core.policy import parse_schedule
+        mesh = make_sim_mesh(4)
+        part = dp.partition_graph(g, mesh)
+        l_exact, _ = dp.dp_bpr_loss_and_grads(
+            params, part, batch, cfg=cfg, mesh=mesh, schedule=None,
+            root_key=jax.random.PRNGKey(3), compress_grads=False)
+        l_int8, _ = dp.dp_bpr_loss_and_grads(
+            params, part, batch, cfg=cfg, mesh=mesh,
+            schedule=parse_schedule("int8"),
+            root_key=jax.random.PRNGKey(3), compress_grads=True)
+        d = abs(float(l_exact - l_int8))
+        assert d < 1e-7, d
+        print("forward invariance ok", d)
+    """, n_devices=4))
+
+
+@pytest.mark.slow
+def test_compressed_psum_grad_unbiasedness_2_4_8():
+    """The INT8 SR gradient all-reduce is an unbiased estimator of the
+    exact mean-reduced gradient at every shard count: averaging the
+    compressed DP gradients over 200 psum keys converges ~1/sqrt(K) to
+    the exact-all-reduce gradients (single draws sit ~20x further out)."""
+    print(_run(_SETUP + """
+        for S in (2, 4, 8):
+            mesh = make_sim_mesh(S)
+            part = dp.partition_graph(g, mesh)
+            _, g_exact = dp.dp_bpr_loss_and_grads(
+                params, part, batch, cfg=cfg, mesh=mesh, schedule=None,
+                root_key=jax.random.PRNGKey(0), compress_grads=False)
+            fe, _ = ravel_pytree(g_exact)
+
+            @jax.jit
+            def comp(root, part=part, mesh=mesh):
+                _, gr = dp.dp_bpr_loss_and_grads(
+                    params, part, batch, cfg=cfg, mesh=mesh, schedule=None,
+                    root_key=root, compress_grads=True)
+                return ravel_pytree(gr)[0]
+
+            acc = jnp.zeros_like(fe)
+            single = None
+            for k in jax.random.split(jax.random.PRNGKey(5), 200):
+                v = comp(k)
+                acc = acc + v
+                if single is None:
+                    single = float(jnp.abs(v - fe).max())
+            mean_err = float(jnp.abs(acc / 200 - fe).max())
+            assert single < 5e-3, (S, single)
+            assert mean_err < 6e-5, (S, mean_err)
+            print(S, "shards: single", single, "mean", mean_err)
+        print("compressed-psum unbiasedness ok")
+    """, timeout=900))

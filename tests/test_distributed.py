@@ -1,35 +1,22 @@
 """Distribution tests: run in a subprocess with forced host devices
 (XLA device count is locked at first jax init, so the main pytest process
-stays at 1 device)."""
+stays at 1 device).
 
-import os
-import subprocess
-import sys
-import textwrap
+Everything SPMD goes through ``repro.sharding.compat`` — these tests are
+the executable statement of the supported-JAX-range policy (DESIGN.md
+§7.5): they must pass on the pinned 0.4.37 *and* on the latest release
+leg of the CI matrix, on a simulated 8-device CPU mesh.
+"""
 
-import pytest
-
-_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run(src: str, n_devices: int = 8, timeout: int = 480) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
-    env["PYTHONPATH"] = os.path.join(_REPO, "src")
-    out = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(src)], env=env,
-        capture_output=True, text=True, timeout=timeout, cwd=_REPO)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
+from _subproc import forced_device_run as _run
 
 
 def test_compressed_psum_matches_mean():
     print(_run("""
         import jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P
+        from repro.sharding.compat import P, make_sim_mesh, shard_map
         from repro.training.compress import compressed_psum_mean, psum_mean
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_sim_mesh(8)
         grads = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 64, 32)),
                  "b": jax.random.normal(jax.random.PRNGKey(1), (8, 16))}
 
@@ -38,7 +25,7 @@ def test_compressed_psum_matches_mean():
             return (compressed_psum_mean(g, "data", key),
                     psum_mean(g, "data"))
 
-        comp, exact = jax.jit(jax.shard_map(
+        comp, exact = jax.jit(shard_map(
             body, mesh=mesh, in_specs=P("data"),
             out_specs=P()))(grads)
         for k in grads:
@@ -56,18 +43,17 @@ def test_compressed_psum_matches_mean():
 def test_compressed_psum_unbiased():
     print(_run("""
         import jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P
+        from repro.sharding.compat import P, make_sim_mesh, shard_map
         from repro.training.compress import compressed_psum_mean
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_sim_mesh(4)
         g = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 128))}
         ref = g["w"].mean(0)
 
         def body(g_, key):
             return compressed_psum_mean(g_, "data", key)
 
-        f = jax.jit(jax.shard_map(body, mesh=mesh,
-                                  in_specs=(P("data"), P()), out_specs=P()))
+        f = jax.jit(shard_map(body, mesh=mesh,
+                              in_specs=(P("data"), P()), out_specs=P()))
         keys = jax.random.split(jax.random.PRNGKey(1), 300)
         outs = jnp.stack([f(g, k)["w"] for k in keys])
         err = float(jnp.abs(outs.mean(0) - ref).max())
@@ -80,13 +66,12 @@ def test_mesh_and_cell_lowering_small():
     """build_cell lowers on an 8-device (2×4) mini-mesh — exercises the
     full partition machinery without the 512-device cost."""
     print(_run("""
-        import jax
         from repro.configs import get
         from repro.configs.smoke import reduced
         from repro.core.policy import INT2
         from repro.launch.partition import build_cell
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.sharding.compat import make_sim_mesh
+        mesh = make_sim_mesh((2, 4), ("data", "model"))
         for arch_name, shape in [("fm", "serve_p99"),
                                  ("gcn-cora", "molecule")]:
             cell = build_cell(get(arch_name), shape, mesh, policy=INT2)
@@ -107,6 +92,10 @@ def test_production_mesh_shapes():
         m2 = make_production_mesh(multi_pod=True)
         assert m2.devices.shape == (2, 16, 16)
         assert batch_axes(m2) == ("pod", "data")
+        # the sim= escape hatch keeps axis names at laptop extents
+        m3 = make_production_mesh(sim=(2, 4))
+        assert m3.devices.shape == (2, 4)
+        assert m3.axis_names == ("data", "model")
         print("meshes OK")
     """, n_devices=512))
 
@@ -116,19 +105,15 @@ def test_checkpoint_reshard_elastic():
     (elastic scale-down) via sharding-aware device_put."""
     print(_run("""
         import jax, jax.numpy as jnp, tempfile
-        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.sharding.compat import P, make_sim_mesh, reshard
         from repro.training.checkpoint import (save_checkpoint,
                                                restore_checkpoint)
-        mesh8 = jax.make_mesh((8,), ("data",),
-                              axis_types=(jax.sharding.AxisType.Auto,))
-        x = jax.device_put(jnp.arange(64.0),
-                           NamedSharding(mesh8, P("data")))
+        mesh8 = make_sim_mesh(8)
+        x = reshard(jnp.arange(64.0), mesh8, P("data"))
         d = tempfile.mkdtemp()
         save_checkpoint(d, 1, {"x": x})
-        mesh4 = jax.sharding.Mesh(jax.devices()[:4], ("data",),
-                axis_types=(jax.sharding.AxisType.Auto,))
-        tmpl = {"x": jax.device_put(jnp.zeros(64),
-                NamedSharding(mesh4, P("data")))}
+        mesh4 = make_sim_mesh(4)
+        tmpl = {"x": reshard(jnp.zeros(64), mesh4, P("data"))}
         step, restored = restore_checkpoint(d, tmpl)
         assert step == 1
         assert restored["x"].sharding.mesh.shape["data"] == 4
@@ -143,9 +128,9 @@ def test_kgat_spmd_partition_invariance():
     explicitly-partitioned KGAT layer."""
     print(_run("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import PartitionSpec as P
         from repro.models import kgnn
         from repro.core.policy import FP32
+        from repro.sharding.compat import make_sim_mesh
 
         N, E, R, d = 32, 200, 5, 8
         rng = np.random.default_rng(0)
@@ -188,9 +173,7 @@ def test_kgat_spmd_partition_invariance():
 
         outs = {}
         for n_shards in (1, 4):
-            mesh = jax.sharding.Mesh(
-                np.array(jax.devices()[:n_shards]), ("data",),
-                axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = make_sim_mesh(n_shards)
             s_, d_, r_ = build(n_shards)
             g = kgnn.CKG(src=jnp.asarray(s_), dst=jnp.asarray(d_),
                          rel=jnp.asarray(r_), n_nodes=N, n_relations=R)
