@@ -1,10 +1,11 @@
 """Nightly perf gate: kernel ratios must not regress vs the committed
 baseline (``BENCH_kernels.json`` at the repo root).
 
-``benchmarks/run.py`` overwrites the repo-root file in place, so the
-nightly workflow (.github/workflows/nightly.yml) snapshots the
-committed baseline first and compares — reproduce a gate failure
-locally with the same sequence:
+``benchmarks/run.py`` refreshes its rows in the repo-root file in place
+(merged by row key, so a partial ``--only`` run keeps the other job's
+rows), and the nightly workflow (.github/workflows/nightly.yml)
+snapshots the committed baseline first and compares — reproduce a gate
+failure locally with the same sequence:
 
     cp BENCH_kernels.json /tmp/bench_baseline.json
     PYTHONPATH=src python -m benchmarks.run --quick
@@ -14,9 +15,12 @@ locally with the same sequence:
 Gating policy:
 
   * every ``*_ratio`` field (e.g. ``fused_traffic_ratio``, the modeled
-    HBM-traffic saving of the fused SPMM path — deterministic, derived
-    from shapes) is higher-is-better and HARD-fails when it drops more
-    than ``--tol`` (default 10%) below baseline;
+    HBM-traffic saving of the fused SPMM path, or the serving rows'
+    ``store_bytes_ratio`` — fp32 bytes over packed store bytes from
+    ``QuantizedEmbeddingStore.memory_report()``, acceptance bar INT8
+    >= 3.5x — both deterministic, derived from shapes) is
+    higher-is-better and HARD-fails when it drops more than ``--tol``
+    (default 10%) below baseline;
   * jnp-vs-pallas timing speedups are derived and REPORTED for every
     ``<x>_jnp_us`` / ``<x>_pallas_interp_us`` pair but only gate under
     ``--strict-timing`` — wall-clock interpret-mode timings on shared CI
@@ -31,7 +35,9 @@ import argparse
 import json
 import sys
 
-_KEY_FIELDS = ("op", "bits", "dim", "n_edges", "n_nodes", "model")
+# "k" keys the serving top-K rows (serve_bench.py); absent fields are
+# simply skipped, so kernel rows are unaffected
+_KEY_FIELDS = ("op", "bits", "dim", "n_edges", "n_nodes", "model", "k")
 
 
 def _key(row: dict) -> tuple:

@@ -1,0 +1,116 @@
+"""Serving-subsystem benchmark: store bytes, QPS/latency, fused parity.
+
+One row per store precision (fp32 / INT8 / INT4) on the standard
+synthetic KG benchmark graph (KGAT rollout, dim 32 × 4-layer concat
+readout = 128-dim representations):
+
+  * ``store_bytes_ratio``   — fp32 bytes / packed bytes from
+    ``memory_report()`` (deterministic, shape-derived; nightly-gated
+    like every ``*_ratio`` via benchmarks/check_regression.py; the
+    acceptance bar is INT8 >= 3.5x);
+  * ``topk_jnp_us`` / ``topk_pallas_interp_us`` — chunked scorer wall
+    time per batch, fused kernel vs jnp fallback (check_regression
+    derives the speedup; report-only, interpret-mode timings are noise);
+  * ``qps`` / ``p50_ms`` / ``p99_ms`` — micro-batching engine under a
+    burst of single-user requests;
+  * ``fused_jnp_bitexact`` — the fused/fallback parity contract,
+    asserted (not just reported) while measuring;
+  * ``stream_dense_max_diff`` — streaming evaluator vs the dense
+    reference on the same store (exactness check, asserted <= 1e-6).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import kgnn
+from repro.serving import (ServingEngine, build_kgnn_store,
+                           padded_pos_lists, streaming_eval_dataset,
+                           topk_scores)
+from repro.training.metrics import recall_ndcg_at_k
+
+from .common import dataset, make_cfg
+
+K = 20
+BATCH = 64          # scorer batch for the timing measurement
+
+
+def _time_scorer(q, items, excl, backend, *, reps=3) -> float:
+    out = topk_scores(q, items, K, exclude=excl, backend=backend)
+    jax.block_until_ready(out)                       # compile outside timing
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = topk_scores(q, items, K, exclude=excl, backend=backend)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6   # us / batch
+
+
+def run(*, requests: int = 200, seed: int = 0) -> list[dict]:
+    ds = dataset(seed=seed)
+    cfg = make_cfg("kgat", ds)
+    params = kgnn.init_params(jax.random.PRNGKey(seed), cfg)
+    g = jax.tree_util.tree_map(jnp.asarray, ds.graph)
+    exclude = padded_pos_lists(ds.train_pos, ds.n_users)
+    rng = np.random.default_rng(seed)
+    uids = rng.integers(0, ds.n_users, BATCH)
+    excl_b = jnp.asarray(exclude[uids])
+
+    rows = []
+    for bits in (None, 8, 4):
+        store = build_kgnn_store(params, g, cfg, ds.n_items, bits=bits)
+        mem = store.memory_report()
+        q = store.user_vectors(jnp.asarray(uids))
+        backend = "pallas" if bits is not None else "jnp"
+
+        row = {
+            "op": "serve_topk", "model": "kgat",
+            "bits": bits or "fp32", "dim": mem["dim"], "k": K,
+            "store_total_bytes": mem["total_bytes"],
+            "store_fp32_bytes": mem["fp32_bytes"],
+            "store_bytes_ratio": round(mem["compression_ratio"], 4),
+            "topk_jnp_us": _time_scorer(q, store.items, excl_b, "jnp"),
+        }
+        if bits is not None:
+            row["topk_pallas_interp_us"] = _time_scorer(
+                q, store.items, excl_b, "pallas")
+            vf, xf = topk_scores(q, store.items, K, exclude=excl_b,
+                                 backend="pallas")
+            vj, xj = topk_scores(q, store.items, K, exclude=excl_b,
+                                 backend="jnp")
+            exact = bool(jnp.array_equal(vf, vj)) and \
+                bool(jnp.array_equal(xf, xj))
+            assert exact, "fused/fallback parity broken"
+            row["fused_jnp_bitexact"] = exact
+
+        with ServingEngine(store, k=K, exclude=exclude, backend=backend,
+                           buckets=(1, 4, 16, 64)) as eng:
+            eng.warmup()
+            futs = [eng.submit(int(u))
+                    for u in rng.integers(0, ds.n_users, requests)]
+            for f in futs:
+                f.result(timeout=300)
+        st = eng.stats()
+        row.update(qps=round(st.qps, 1), p50_ms=round(st.p50_ms, 3),
+                   p99_ms=round(st.p99_ms, 3))
+
+        # streaming evaluator vs dense reference ON THE SAME STORE
+        r_s, n_s = streaming_eval_dataset(store, ds, k=K, backend=backend)
+        reps_u = store.user_vectors(jnp.arange(ds.n_users))
+        scores = reps_u @ store.item_matrix().T
+        tr, te = ds.interaction_matrices()
+        r_d, n_d = recall_ndcg_at_k(scores, jnp.asarray(te),
+                                    jnp.asarray(tr), k=K)
+        diff = max(abs(r_s - float(r_d)), abs(n_s - float(n_d)))
+        assert diff <= 1e-6, f"streaming/dense eval diverged: {diff}"
+        row.update({"recall@20": round(r_s, 4), "ndcg@20": round(n_s, 4),
+                    "stream_dense_max_diff": diff})
+        rows.append(row)
+        print(f"[serve_bench] bits={row['bits']}: "
+              f"bytes_ratio={row['store_bytes_ratio']} "
+              f"qps={row['qps']} p99={row['p99_ms']}ms "
+              f"stream|dense diff={diff:.1e}", flush=True)
+    return rows

@@ -4,6 +4,11 @@ Trains KGAT / KGCN / KGIN at FP32 (baseline) and INT8/4/2/1 compressed
 activations on the synthetic KG dataset, reporting Recall@20 / NDCG@20.
 Claims under test (paper §4.2.1): INT8 ≤ 0.3% relative loss, INT2 < 2%,
 INT1 < 6% (vs ≫6% drops typical for CNNs).
+
+Metrics come from the streaming full-ranking evaluator
+(``repro.serving.eval`` via ``common.evaluate``) — exact-equivalent to
+the dense ``recall_ndcg_at_k`` reference (tests/test_serving.py) but
+without materializing the (U, I) score matrix.
 """
 
 from __future__ import annotations

@@ -1,10 +1,16 @@
-"""Serve a DLRM-style ranking model with batched requests.
+"""Serve a DLRM-style recommender through the quantized serving stack.
 
-Simulates the serve_p99 path: a warm jitted scoring function, batched
-request queue, latency percentiles, plus the retrieval head scoring one
-query against a large candidate set.
+The serve_p99 path has two stages (DESIGN.md §8):
 
-    PYTHONPATH=src python examples/serve_recsys.py [--requests 200]
+  1. RETRIEVAL — the two-tower head (``recsys.retrieval_towers``) packed
+     into a ``QuantizedEmbeddingStore``; requests flow through the
+     micro-batching ``ServingEngine`` (bounded queue, bucketed padding,
+     fused dequant·score·top-K scorer) instead of the old hand-rolled
+     single-query dense dot.
+  2. RE-RANK — the full-interaction DLRM ``forward`` scores only the
+     retrieved top-K per request (a warm jitted batch).
+
+    PYTHONPATH=src python examples/serve_recsys.py [--requests 200] [--bits 8]
 """
 
 import argparse
@@ -17,52 +23,84 @@ import numpy as np
 from repro.configs import get
 from repro.configs.smoke import reduced
 from repro.models import recsys
+from repro.serving import QuantizedEmbeddingStore, ServingEngine
+
+N_CAND = 10_000        # retrieval candidate pool (item tower rows)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=200)
-    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--bits", default="8", choices=["8", "4", "fp32"],
+                    help="item-tower store precision")
+    ap.add_argument("--k", type=int, default=32, help="retrieval top-K")
     args = ap.parse_args()
 
     arch = reduced(get("dlrm-mlperf"))
     cfg = arch.model_cfg
     params = recsys.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    n_cand = min(N_CAND, cfg.vocab_sizes[0])
+    bits = None if args.bits == "fp32" else int(args.bits)
 
+    # -- offline rollout: pack the item tower, precompute the query pool.
+    # "Users" in the store are the encoded query vectors of the simulated
+    # request population (one row per request id).
+    queries = rng.integers(0, min(cfg.vocab_sizes),
+                           (args.requests, cfg.n_sparse)).astype(np.int32)
+    user_aug, cand_aug = recsys.retrieval_towers(
+        params, jnp.asarray(queries), jnp.arange(n_cand), cfg)
+    # only the ITEM tower is packed: query vectors are computed per
+    # request, nothing is saved by quantizing them
+    store = QuantizedEmbeddingStore.from_arrays(user_aug, cand_aug, bits=bits,
+                                                quantize_users=False)
+    mem = store.memory_report()
+    print(f"item tower: {n_cand} cands bits={args.bits} "
+          f"{mem['total_bytes']} B ({mem['compression_ratio']:.2f}x vs fp32)")
+
+    # -- stage 1: retrieval through the engine (micro-batched top-K)
+    backend = "pallas" if bits is not None else "jnp"
+    with ServingEngine(store, k=args.k, backend=backend,
+                       buckets=(1, 4, 16, 64)) as eng:
+        eng.warmup()
+        futs = [eng.submit(i) for i in range(args.requests)]
+        retrieved = [f.result(timeout=300) for f in futs]
+    print(f"retrieval: {eng.stats()}")
+
+    # -- stage 2: re-rank each top-K with the full DLRM forward
     @jax.jit
-    def score(params, batch):
+    def rerank(params, batch):
         return recsys.forward(params, batch, cfg, key=None)
 
-    rng = np.random.default_rng(0)
-
-    def request(n):
-        return {
-            "sparse": jnp.asarray(rng.integers(
-                0, min(cfg.vocab_sizes), (n, cfg.n_sparse)), jnp.int32),
-            "dense": jnp.asarray(rng.normal(size=(n, cfg.n_dense)),
-                                 jnp.float32),
-        }
-
-    score(params, request(args.batch)).block_until_ready()  # warm
+    topk_ids = np.stack([idx for _, idx in retrieved])       # (R, k)
+    first = {"sparse": jnp.asarray(np.repeat(queries[:1], args.k, 0)
+                                   .copy()),
+             "dense": jnp.zeros((args.k, cfg.n_dense), jnp.float32)}
+    rerank(params, first).block_until_ready()                # warm
     lat = []
-    for _ in range(args.requests):
-        b = request(args.batch)
+    best = None
+    for r in range(args.requests):
+        b_sparse = np.repeat(queries[r:r + 1], args.k, 0).copy()
+        b_sparse[:, 0] = topk_ids[r]                         # candidate slot
+        batch = {"sparse": jnp.asarray(b_sparse),
+                 "dense": jnp.zeros((args.k, cfg.n_dense), jnp.float32)}
         t0 = time.perf_counter()
-        score(params, b).block_until_ready()
+        scores = rerank(params, batch).block_until_ready()
         lat.append((time.perf_counter() - t0) * 1e3)
+        if r == 0:
+            best = topk_ids[0][int(jnp.argmax(scores))]
     lat = np.sort(np.array(lat))
-    print(f"dlrm serve: batch={args.batch} n={args.requests} | "
-          f"p50 {lat[len(lat)//2]:.2f}ms  p99 {lat[int(len(lat)*0.99)]:.2f}ms")
+    print(f"re-rank: batch={args.k} p50 {lat[len(lat) // 2]:.2f}ms "
+          f"p99 {lat[int(len(lat) * 0.99)]:.2f}ms")
 
-    # retrieval: one query against 100k candidates as a single batched dot
-    cand = jnp.arange(min(100_000, cfg.vocab_sizes[0]))
-    q = {"sparse": jnp.asarray(rng.integers(
-        0, min(cfg.vocab_sizes), (cfg.n_sparse,)), jnp.int32)}
-    t0 = time.perf_counter()
-    scores = recsys.retrieval_scores(params, q, cand, cfg)
-    top = jax.lax.top_k(scores, 10)[1].block_until_ready()
-    print(f"retrieval: scored {len(cand)} candidates in "
-          f"{(time.perf_counter()-t0)*1e3:.1f}ms; top10 = {np.asarray(top)}")
+    # -- parity: engine retrieval vs the reference dense retrieval head
+    ref = recsys.retrieval_scores(params, {"sparse": jnp.asarray(queries[0])},
+                                  jnp.arange(n_cand), cfg)
+    ref_top = np.asarray(jax.lax.top_k(ref, 10)[1])
+    got_top = retrieved[0][1][:10]
+    tag = ("exact" if bits is None else f"int{bits} store")
+    print(f"top10 ({tag}) = {got_top}  | fp32 reference = {ref_top}")
+    print(f"winner after re-rank for request 0: candidate {best}")
 
 
 if __name__ == "__main__":

@@ -4,6 +4,8 @@
   dequant_matmul.py fused dequantize + H^T.grad GEMM (ACT backward)
   spmm.py           fused KG message passing: forward/transpose SPMM +
                     dequant-SDDMM for ∇ew — no (E, d) message tensor
+  topk_score.py     fused dequant·score·running-top-K retrieval over a
+                    packed embedding store — no (B, I) score matrix
   ops.py            jit'd wrappers (QTensor I/O, backend switch)
   ref.py            pure-jnp oracles (bit-exact vs the kernels)
   hashrng.py        counter-hash SR noise (TPU analogue of cuRAND-in-kernel)

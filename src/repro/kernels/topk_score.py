@@ -1,0 +1,151 @@
+"""Pallas TPU kernel: fused dequantize + score + running top-K retrieval.
+
+Serving-side generalization of ``dequant_matmul.py``'s in-kernel
+shift+mask unpack: score a block of query vectors against a PACKED
+item-embedding store and keep only the running top-K — the dense
+``(B, I)`` score matrix never exists, in VMEM beyond one item chunk or
+in HBM at all:
+
+    HBM read : packed uint8 (I·d·b/8) + scale/zero (8I) + q (B·d·4)
+               + exclusion lists (B·P·4)
+    HBM write: top-K values + indices (B·K·8)
+
+vs the unfused serving path which dequantizes the store (I·d·4) AND
+materializes all scores (B·I·4). Grid is 1-D over item chunks; the two
+output blocks (values, indices) map every grid step to block (0, 0) —
+the standard revisiting pattern (cf. ``dequant_matmul``'s r-innermost
+accumulator), here carrying a running top-K instead of a partial GEMM.
+
+Exactness contract (tested, incl. ties): the merge is LOSSLESS — the
+result is bit-identical to ``jax.lax.top_k`` over the full score row as
+computed chunk-wise (an independently-computed dense matmul can differ
+in value ulps from reduction reassociation, never in tie order or in
+which items win by more than fp32 matmul tolerance). lax.top_k breaks
+ties by
+lowest index; chunk ``c``'s candidate indices are all larger than every
+index already in the running top-K, and within the running top-K ties
+are (inductively) in ascending-index order — so concatenating
+``[running, candidates]`` and re-taking top-K preserves the global
+tie order at every merge, including ties that straddle chunk
+boundaries. This requires ``block_i >= k`` (enforced by the wrapper) so
+the first chunk can seed the running state without -inf sentinels.
+
+Per-user exclusion (train positives at eval, already-seen items in
+production) rides in as padded index lists — (B, P) int32, pad = -1 —
+and is applied to candidate scores IN-KERNEL before the merge, which is
+exactly equivalent to the dense reference's ``where(train_mask, -inf)``
+without ever building a (B, I) mask.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fused_topk_scores"]
+
+_NEG_INF = float("-inf")  # plain float: a jnp scalar would be captured
+#                           as a kernel constant, which pallas_call rejects
+
+
+def _topk_kernel(q_ref, packed_ref, scale_ref, zero_ref, excl_ref,
+                 vals_ref, idx_ref, *, bits: int, dim: int, dp: int,
+                 cpb: int, k: int, block_i: int, n_items: int):
+    c = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32)          # (B, dim)
+    packed = packed_ref[...]                    # (block_i, dp)
+    # chunk-interleaved unpack (same layout as quant_pack.py): byte j of a
+    # row holds codes [j, dp + j, 2*dp + j, ...] in bits-wide fields
+    if cpb == 1:
+        codes = packed[:, :dim].astype(jnp.float32)
+    else:
+        mask = jnp.uint8(2**bits - 1)
+        chunks = [(packed >> jnp.uint8(kk * bits)) & mask
+                  for kk in range(cpb)]
+        codes = jnp.concatenate(chunks, axis=-1)[:, :dim].astype(jnp.float32)
+    xhat = codes * scale_ref[...] + zero_ref[...]   # (block_i, dim)
+    scores = jax.lax.dot_general(
+        q, xhat, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (B, block_i)
+
+    b = q.shape[0]
+    ids = c * block_i + jax.lax.broadcasted_iota(jnp.int32, (1, block_i), 1)
+    ids = jnp.broadcast_to(ids, (b, block_i))       # (B, block_i) global ids
+    # tail-chunk padding rows score as garbage — mask them out
+    scores = jnp.where(ids < n_items, scores, _NEG_INF)
+    # per-user exclusion lists: (B, P) global item ids, -1 = pad (never hits)
+    excl = excl_ref[...]
+    hit = jnp.any(excl[:, :, None] == ids[:, None, :], axis=1)
+    scores = jnp.where(hit, _NEG_INF, scores)
+
+    @pl.when(c == 0)
+    def _seed():
+        v, p = jax.lax.top_k(scores, k)
+        vals_ref[...] = v
+        idx_ref[...] = jnp.take_along_axis(ids, p, axis=1)
+
+    @pl.when(c > 0)
+    def _merge():
+        all_v = jnp.concatenate([vals_ref[...], scores], axis=1)
+        all_i = jnp.concatenate([idx_ref[...], ids], axis=1)
+        v, p = jax.lax.top_k(all_v, k)
+        vals_ref[...] = v
+        idx_ref[...] = jnp.take_along_axis(all_i, p, axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "dim", "k", "n_items",
+                                    "block_i", "interpret"))
+def fused_topk_scores(q: jax.Array, packed: jax.Array, scale: jax.Array,
+                      zero: jax.Array, excl: jax.Array, *, bits: int,
+                      dim: int, k: int, n_items: int, block_i: int = 1024,
+                      interpret: bool = True):
+    """Top-K of ``q @ dequant(packed, scale, zero)ᵀ`` with exclusions.
+
+    q      : (B, dim) fp32 query vectors (dequantized user rows)
+    packed : (I, dp) uint8 chunk-interleaved codes (dp = dim * bits / 8)
+    scale  : (I, 1) fp32, zero: (I, 1) fp32
+    excl   : (B, P) int32 item ids to force to -inf per row; -1 pads
+    returns (values (B, k) fp32, indices (B, k) int32) — bit-identical to
+    ``jax.lax.top_k`` over the dense masked score row.
+    """
+    rows, dp = packed.shape
+    assert rows == n_items, (rows, n_items)
+    cpb = 8 // bits
+    assert dp * cpb == dim, f"packed dim mismatch: {dp}*{cpb} != {dim}"
+    block_i = max(min(block_i, rows), k)   # first chunk must seed k entries
+    grid_i = -(-rows // block_i)
+    pad_i = grid_i * block_i - rows
+    if pad_i:
+        packed = jnp.pad(packed, ((0, pad_i), (0, 0)))
+        scale = jnp.pad(scale, ((0, pad_i), (0, 0)))
+        zero = jnp.pad(zero, ((0, pad_i), (0, 0)))
+    b, _ = q.shape
+    p = excl.shape[1]
+    kernel = functools.partial(
+        _topk_kernel, bits=bits, dim=dim, dp=dp, cpb=cpb, k=k,
+        block_i=block_i, n_items=n_items)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(grid_i,),
+        in_specs=[
+            pl.BlockSpec((b, dim), lambda c: (0, 0)),
+            pl.BlockSpec((block_i, dp), lambda c: (c, 0)),
+            pl.BlockSpec((block_i, 1), lambda c: (c, 0)),
+            pl.BlockSpec((block_i, 1), lambda c: (c, 0)),
+            pl.BlockSpec((b, p), lambda c: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, k), lambda c: (0, 0)),
+            pl.BlockSpec((b, k), lambda c: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q.astype(jnp.float32), packed, scale, zero, excl.astype(jnp.int32))
+    return vals, idx

@@ -28,7 +28,8 @@ from repro.core import (
 
 from .layers import embedding_bag, mlp_apply, mlp_params, normal_init
 
-__all__ = ["RecsysConfig", "init_params", "forward", "retrieval_scores"]
+__all__ = ["RecsysConfig", "init_params", "forward", "retrieval_scores",
+           "retrieval_towers"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,6 +187,34 @@ def retrieval_scores(params: dict, query: dict, cand_ids: jax.Array,
     cand = jnp.take(params["table"], cand_ids + off, axis=0)  # (N, k)
     cand_lin = jnp.take(params["linear"], cand_ids + off, axis=0)[:, 0]
     return cand @ user_vec + cand_lin
+
+
+def retrieval_towers(params: dict, query_sparse: jax.Array,
+                     cand_ids: jax.Array, cfg: RecsysConfig, *,
+                     item_field: int = 0):
+    """The two towers behind :func:`retrieval_scores`, as row tables.
+
+    Factorizes ``score(u, v) = cand_emb_v · user_vec_u + cand_lin_v``
+    into a single dot product by augmenting both sides with one extra
+    dim (user side gets a constant 1, item side its linear term) — the
+    layout the quantized serving store wants (DESIGN.md §8): the item
+    tower is packed once offline, the user tower is the per-request
+    query vector.
+
+    query_sparse : (B, F) field-local ids
+    returns (user_aug (B, k+1) fp32, cand_aug (N, k+1) fp32) with
+    ``cand_aug @ user_aug[i]`` == ``retrieval_scores`` for query i.
+    """
+    emb, _ = _lookup(params, query_sparse, cfg)               # (B, F, k)
+    mask = jnp.arange(cfg.n_sparse) != item_field
+    user_vec = jnp.sum(emb * mask[None, :, None], axis=1)     # (B, k)
+    user_aug = jnp.concatenate(
+        [user_vec, jnp.ones((user_vec.shape[0], 1), user_vec.dtype)], axis=-1)
+    off = cfg.field_offsets[item_field]
+    cand = jnp.take(params["table"], cand_ids + off, axis=0)  # (N, k)
+    cand_lin = jnp.take(params["linear"], cand_ids + off, axis=0)  # (N, 1)
+    cand_aug = jnp.concatenate([cand, cand_lin], axis=-1)
+    return user_aug.astype(jnp.float32), cand_aug.astype(jnp.float32)
 
 
 # Activation-memory accounting is trace-derived: run ``forward`` under a

@@ -1,0 +1,26 @@
+"""Quantized recommendation serving (DESIGN.md §8).
+
+The training side of this repo compresses *activations*; serving
+compresses the *final representations* the recommender actually ships:
+
+  store.py   offline rollout -> packed ``QuantizedEmbeddingStore``
+             (INT8/INT4 via the quant_pack kernel, fp32 escape hatch)
+  scorer.py  chunked dequant·score·top-K — never builds (U, I); fused
+             Pallas kernel (kernels/topk_score.py) + jnp fallback
+  engine.py  micro-batching request engine: bounded queue, bucketed
+             padding (no retraces), QPS + latency percentiles
+  eval.py    streaming full-ranking Recall@K/NDCG@K over the scorer,
+             exact-equivalent to training.metrics.recall_ndcg_at_k
+"""
+
+from .engine import EngineStats, ServingEngine
+from .eval import streaming_eval_dataset, streaming_recall_ndcg
+from .scorer import merge_topk, topk_scores
+from .store import QuantizedEmbeddingStore, build_kgnn_store, padded_pos_lists
+
+__all__ = [
+    "QuantizedEmbeddingStore", "build_kgnn_store", "padded_pos_lists",
+    "topk_scores", "merge_topk",
+    "ServingEngine", "EngineStats",
+    "streaming_recall_ndcg", "streaming_eval_dataset",
+]

@@ -1,0 +1,221 @@
+"""Micro-batching request engine over the chunked top-K scorer.
+
+Production retrieval traffic arrives one user at a time; the scorer
+wants batches. The engine sits between: a bounded request queue, a
+worker that drains up to ``max(buckets)`` requests per iteration, pads
+the batch up to the nearest BUCKET size (so the jitted scorer sees only
+``len(buckets)`` distinct shapes and never retraces after warmup), and
+fans per-request top-K results back through futures.
+
+Padding repeats the batch's last user id — rows are independent in the
+scorer, pad rows are simply dropped on the way out. Per-request latency
+is measured submit→result; QPS over the serving window. ``warmup()``
+traces every bucket up front so p99 reflects steady state, not compile.
+
+Item shards: a store too big for one scorer call can be split into
+row-shards scored per call and merged host-side with
+``scorer.merge_topk`` (exact — same tie rule); the engine keeps the
+single-shard fast path when ``item_shards == 1``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import QTensor
+
+from .scorer import merge_topk, topk_scores
+from .store import QuantizedEmbeddingStore
+
+__all__ = ["ServingEngine", "EngineStats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineStats:
+    n_requests: int
+    qps: float
+    p50_ms: float
+    p99_ms: float
+    n_batches: int
+
+    def __str__(self) -> str:
+        return (f"{self.n_requests} req | {self.qps:.0f} QPS | "
+                f"p50 {self.p50_ms:.2f}ms p99 {self.p99_ms:.2f}ms | "
+                f"{self.n_batches} batches")
+
+
+def _shard_items(items, n_shards: int):
+    """Split the item table into row-shards (global ids preserved by
+    offsetting scorer indices)."""
+    if n_shards == 1:
+        return [items]
+    if isinstance(items, QTensor):
+        n = items.packed.shape[0]
+        bounds = np.linspace(0, n, n_shards + 1, dtype=int)
+        return [QTensor(packed=items.packed[a:b], scale=items.scale[a:b],
+                        zero=items.zero[a:b], bits=items.bits,
+                        dim=items.dim, dtype=items.dtype)
+                for a, b in zip(bounds[:-1], bounds[1:])]
+    n = items.shape[0]
+    bounds = np.linspace(0, n, n_shards + 1, dtype=int)
+    return [items[a:b] for a, b in zip(bounds[:-1], bounds[1:])]
+
+
+class ServingEngine:
+    """Bounded-queue micro-batching server over a packed store.
+
+    exclude : optional (U, P) int32 per-user item-id lists (-1 pads) —
+              typically the train positives (``store.padded_pos_lists``)
+              — excluded from every response for that user.
+    buckets : ascending padded batch sizes; ``max(buckets)`` is also the
+              per-iteration drain limit.
+    """
+
+    def __init__(self, store: QuantizedEmbeddingStore, *, k: int = 20,
+                 exclude=None, buckets=(1, 4, 16, 64),
+                 backend: str = "pallas", block_i: int = 1024,
+                 item_shards: int = 1, max_queue: int = 1024):
+        self.store = store
+        self.k = k
+        self.buckets = tuple(sorted(buckets))
+        self.backend = backend
+        self.block_i = block_i
+        self.exclude = (jnp.asarray(exclude, jnp.int32) if exclude is not None
+                        else jnp.full((store.n_users, 1), -1, jnp.int32))
+        self._shards = _shard_items(store.items, item_shards)
+        self._shard_offsets = np.cumsum(
+            [0] + [s.packed.shape[0] if isinstance(s, QTensor) else s.shape[0]
+                   for s in self._shards])[:-1]
+        self._queue: queue.Queue = queue.Queue(maxsize=max_queue)
+        self._thread: threading.Thread | None = None
+        self._lat_ms: list[float] = []
+        self._n_batches = 0
+        self._t_first = self._t_last = None
+
+    # -- scoring ------------------------------------------------------------
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def score_batch(self, user_ids: np.ndarray):
+        """Top-K for a batch of user ids, padded to the nearest bucket.
+
+        Returns (values (n, k), indices (n, k)) numpy arrays for the n
+        REAL requests (pad rows stripped).
+        """
+        n = len(user_ids)
+        b = self._bucket(n)
+        padded = np.asarray(user_ids, np.int32)
+        if b > n:
+            padded = np.concatenate([padded, np.full(b - n, padded[-1],
+                                                     np.int32)])
+        q = self.store.user_vectors(jnp.asarray(padded))
+        excl = self.exclude[jnp.asarray(padded)]
+        if len(self._shards) == 1:
+            vals, idx = topk_scores(q, self._shards[0], self.k, exclude=excl,
+                                    backend=self.backend,
+                                    block_i=self.block_i)
+            return np.asarray(vals)[:n], np.asarray(idx)[:n]
+        parts_v, parts_i = [], []
+        for off, shard in zip(self._shard_offsets, self._shards):
+            # shard-local exclusion: shift ids into shard space; out-of-
+            # range entries never match (ids in [0, shard_rows))
+            v, i = topk_scores(q, shard, self.k, exclude=excl - int(off),
+                               backend=self.backend, block_i=self.block_i)
+            parts_v.append(np.asarray(v))
+            parts_i.append(np.asarray(i) + int(off))
+        vals, idx = merge_topk(parts_v, parts_i, self.k)
+        return vals[:n], idx[:n]
+
+    def warmup(self) -> None:
+        """Trace the scorer for every bucket so serving never compiles."""
+        for b in self.buckets:
+            self.score_batch(np.zeros(b, np.int32))
+
+    # -- request loop -------------------------------------------------------
+
+    def submit(self, user_id: int) -> Future:
+        """Enqueue one request; resolves to (values (k,), indices (k,))."""
+        if self._thread is None:
+            raise RuntimeError("engine not started (use `with engine:`)")
+        fut: Future = Future()
+        now = time.perf_counter()
+        if self._t_first is None:
+            self._t_first = now          # serving window opens at first submit
+        self._queue.put((int(user_id), now, fut))
+        return fut
+
+    def _serve_loop(self) -> None:
+        max_b = self.buckets[-1]
+        while True:
+            req = self._queue.get()
+            if req is None:
+                self._cancel_pending()
+                return
+            batch = [req]
+            stop = False
+            while len(batch) < max_b:
+                try:
+                    nxt = self._queue.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is None:
+                    stop = True
+                    break
+                batch.append(nxt)
+            self._drain_batch(batch)
+            if stop:
+                self._cancel_pending()
+                return
+
+    def _cancel_pending(self) -> None:
+        """Shutdown: anything still queued behind the sentinel must fail
+        fast (cancelled), not leave its future blocking forever."""
+        while True:
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if req is not None:
+                req[2].cancel()
+
+    def _drain_batch(self, batch) -> None:
+        ids = np.array([r[0] for r in batch], np.int32)
+        vals, idx = self.score_batch(ids)
+        now = time.perf_counter()
+        self._n_batches += 1
+        self._t_last = now
+        for j, (_, t0, fut) in enumerate(batch):
+            self._lat_ms.append((now - t0) * 1e3)
+            fut.set_result((vals[j], idx[j]))
+
+    def __enter__(self) -> "ServingEngine":
+        self._thread = threading.Thread(target=self._serve_loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._queue.put(None)
+        self._thread.join(timeout=60.0)
+        self._thread = None
+
+    def stats(self) -> EngineStats:
+        lat = np.sort(np.asarray(self._lat_ms))
+        n = len(lat)
+        span = max((self._t_last or 0) - (self._t_first or 0), 1e-9)
+        return EngineStats(
+            n_requests=n,
+            qps=n / span if n else 0.0,
+            p50_ms=float(lat[n // 2]) if n else 0.0,
+            p99_ms=float(lat[min(int(n * 0.99), n - 1)]) if n else 0.0,
+            n_batches=self._n_batches)

@@ -1,0 +1,171 @@
+"""Chunked top-K candidate scoring over a packed store.
+
+Never builds the ``(U, I)`` score matrix: items stream through in
+``block_i``-row chunks and only a running top-K per query survives each
+merge. Two backends with a BIT-EXACT contract between them:
+
+  * ``pallas`` — the fused dequant·score·top-K kernel
+    (``kernels/topk_score.py``): packed uint8 rows are shift+mask
+    unpacked in VMEM, scored on the MXU, merged in-kernel.
+  * ``jnp``    — the same chunk/merge schedule in plain jnp (and the
+    only path for fp32 stores / odd-dim padded packs). Both backends
+    run the identical op sequence per chunk, so in interpret mode the
+    results match bit-for-bit — the parity test in
+    tests/test_serving.py holds to zero ulps.
+
+Tie semantics are those of ``jax.lax.top_k`` (lowest index wins), which
+the chunked merge preserves exactly — see kernels/topk_score.py for the
+argument, tests/test_serving.py for the boundary-tie property test.
+
+``merge_topk`` is the HOST-side merge for results that were produced by
+*separate* scorer calls (item shards too big for one call, or the
+engine fanning a store across processes): same (value desc, index asc)
+order, so composing call-level merges stays exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import QTensor, unpack_bits
+from repro.kernels import topk_score as _tk
+from repro.kernels.ops import INTERPRET, TRACE_COUNTS
+
+__all__ = ["topk_scores", "merge_topk"]
+
+_NEG_INF = float("-inf")
+
+
+def _chunk_merge(q, excl, k, n_items, block_i, chunk_rows):
+    """Shared jnp chunk loop: ``chunk_rows(c0, c1) -> (rows, dim) fp32``.
+
+    Mirrors the kernel exactly, including -inf/ghost-id padding of the
+    tail chunk, so interpret-mode parity is bit-for-bit.
+    """
+    b = q.shape[0]
+    grid = -(-n_items // block_i)
+    vals = idx = None
+    for c in range(grid):
+        c0, c1 = c * block_i, min((c + 1) * block_i, n_items)
+        xhat = chunk_rows(c0, c1)
+        s = jax.lax.dot_general(
+            q, xhat, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (B, c1-c0)
+        if c1 - c0 < block_i:                          # tail: ghost rows
+            s = jnp.pad(s, ((0, 0), (0, block_i - (c1 - c0))),
+                        constant_values=-jnp.inf)
+        ids = c0 + jnp.arange(block_i, dtype=jnp.int32)
+        ids = jnp.broadcast_to(ids[None, :], (b, block_i))
+        hit = jnp.any(excl[:, :, None] == ids[:, None, :], axis=1)
+        s = jnp.where(hit, _NEG_INF, s)
+        if vals is None:
+            vals, p = jax.lax.top_k(s, k)
+            idx = jnp.take_along_axis(ids, p, axis=1)
+        else:
+            all_v = jnp.concatenate([vals, s], axis=1)
+            all_i = jnp.concatenate([idx, ids], axis=1)
+            vals, p = jax.lax.top_k(all_v, k)
+            idx = jnp.take_along_axis(all_i, p, axis=1)
+    return vals, idx
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "dim", "k", "n_items",
+                                             "block_i", "interpret"))
+def _fused(q, packed, scale, zero, excl, *, bits, dim, k, n_items, block_i,
+           interpret):
+    TRACE_COUNTS["topk_fused"] += 1   # trace-time: engine no-retrace tests
+    return _tk.fused_topk_scores(
+        q, packed, scale, zero, excl, bits=bits, dim=dim, k=k,
+        n_items=n_items, block_i=block_i, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "dim", "k", "n_items",
+                                             "block_i"))
+def _jnp_packed(q, packed, scale, zero, excl, *, bits, dim, k, n_items,
+                block_i):
+    TRACE_COUNTS["topk_jnp"] += 1
+
+    def chunk_rows(c0, c1):
+        codes = unpack_bits(packed[c0:c1], bits, dim).astype(jnp.float32)
+        return codes * scale[c0:c1] + zero[c0:c1]
+
+    return _chunk_merge(q, excl, k, n_items, block_i, chunk_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_items", "block_i"))
+def _jnp_dense(q, items, excl, *, k, n_items, block_i):
+    TRACE_COUNTS["topk_jnp"] += 1
+    return _chunk_merge(q, excl, k, n_items, block_i,
+                        lambda c0, c1: items[c0:c1].astype(jnp.float32))
+
+
+def topk_scores(q: jax.Array, items, k: int, *, exclude=None,
+                backend: str = "pallas", block_i: int = 1024,
+                interpret: bool | None = None):
+    """Top-K items for a batch of query vectors against a store table.
+
+    q       : (B, d) fp32 query rows (``store.user_vectors(...)``)
+    items   : ``QTensor`` (packed store table) or fp32 ``(I, d)`` array
+    exclude : optional (B, P) int32 per-row item-id lists (-1 pads) whose
+              scores are forced to -inf BEFORE the merge — exactly the
+              dense reference's ``where(train_mask, -inf)``
+    backend : "pallas" (fused kernel; packed whole-chunk stores only) or
+              "jnp". fp32 tables and odd-dim padded packs always take
+              the jnp path.
+    returns (values (B, k) fp32, indices (B, k) int32) — the chunked
+    merge is lossless (== ``jax.lax.top_k`` over the chunk-computed
+    score row, ties included); vs an independently-computed dense score
+    matrix, values agree to fp32 matmul tolerance (reduction order).
+    """
+    q = jnp.asarray(q, jnp.float32)
+    b = q.shape[0]
+    if exclude is None:
+        exclude = jnp.full((b, 1), -1, jnp.int32)
+    exclude = jnp.asarray(exclude, jnp.int32)
+    if backend not in ("pallas", "jnp"):
+        raise ValueError(f"unknown backend {backend!r}")
+
+    if isinstance(items, QTensor):
+        n_items = items.packed.shape[0]
+        assert k <= n_items, (k, n_items)
+        whole = items.packed.shape[-1] * (8 // items.bits) == items.dim
+        if backend == "pallas" and whole:
+            return _fused(q, items.packed, items.scale, items.zero, exclude,
+                          bits=items.bits, dim=items.dim, k=k,
+                          n_items=n_items,
+                          block_i=max(min(block_i, n_items), k),
+                          interpret=INTERPRET if interpret is None
+                          else interpret)
+        if whole:
+            return _jnp_packed(q, items.packed, items.scale, items.zero,
+                               exclude, bits=items.bits, dim=items.dim, k=k,
+                               n_items=n_items,
+                               block_i=max(min(block_i, n_items), k))
+        # odd-dim padded pack: per-row dequant, dense-chunk path
+        from repro.core.quant import dequantize
+        items = dequantize(items).astype(jnp.float32)
+
+    items = jnp.asarray(items, jnp.float32)
+    n_items = items.shape[0]
+    assert k <= n_items, (k, n_items)
+    return _jnp_dense(q, items, exclude, k=k, n_items=n_items,
+                      block_i=max(min(block_i, n_items), k))
+
+
+def merge_topk(vals_parts, idx_parts, k: int):
+    """Host-side merge of per-shard top-K results (numpy).
+
+    Each part is (B, k_i) from a scorer call over a disjoint item shard
+    (indices already global). Order is (value desc, index asc) — the
+    same tie rule as ``jax.lax.top_k`` — so shard-merge composes exactly
+    with the in-call chunk merge.
+    """
+    vals = np.concatenate([np.asarray(v) for v in vals_parts], axis=1)
+    idx = np.concatenate([np.asarray(i) for i in idx_parts], axis=1)
+    order = np.lexsort((idx, -vals), axis=-1)[:, :k]
+    return (np.take_along_axis(vals, order, axis=1),
+            np.take_along_axis(idx, order, axis=1))

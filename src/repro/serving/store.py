@@ -1,0 +1,174 @@
+"""Packed embedding store: the serving-side rollout (DESIGN.md §8).
+
+A KGNN serves recommendations from its *final* user/item representations
+— the model forward is an offline batch job, not a request-time cost. So
+the serving artifact is two row tables: run ``kgnn.propagate`` once
+(fp32, no ACT policy — the rollout is not a training step), slice users
+and items out of the node space, and pack each table into the SAME
+chunk-interleaved QTensor layout the training kernels read
+(``kernels/quant_pack``, per-row scale/zero). INT8/INT4 by default;
+``bits=None`` keeps fp32 rows (escape hatch and exactness baseline).
+
+Rounding is NEAREST by default: stochastic rounding buys unbiasedness
+*in expectation over training steps*; a serving store is quantized once,
+so the lower-MSE deterministic rounding is the right default (the
+``stochastic`` flag exists for ablations).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import QTensor
+from repro.core.quant import dequantize as core_dequantize
+from repro.kernels import ops as kops
+
+__all__ = ["QuantizedEmbeddingStore", "build_kgnn_store", "padded_pos_lists"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QuantizedEmbeddingStore:
+    """User + item representation tables, packed for serving.
+
+    ``users``/``items`` are either ``QTensor`` (packed, per-row
+    scale/zero) or plain fp32 arrays (``bits=None`` escape hatch). Both
+    are pytree children, so a store passes through ``jax.jit`` whole.
+    """
+
+    users: QTensor | jax.Array   # (U, d)
+    items: QTensor | jax.Array   # (I, d)
+    bits: int | None             # item-table bits; None = fp32 (static)
+    dim: int
+
+    def tree_flatten(self):
+        return (self.users, self.items), (self.bits, self.dim)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def n_users(self) -> int:
+        t = self.users
+        return (t.packed if isinstance(t, QTensor) else t).shape[0]
+
+    @property
+    def n_items(self) -> int:
+        t = self.items
+        return (t.packed if isinstance(t, QTensor) else t).shape[0]
+
+    @classmethod
+    def from_arrays(cls, users: jax.Array, items: jax.Array, *,
+                    bits: int | None = None, quantize_users: bool = True,
+                    stochastic: bool = False,
+                    seed: int = 0) -> "QuantizedEmbeddingStore":
+        """Pack fp32 row tables at ``bits`` (None = keep fp32).
+
+        ``quantize_users=False`` packs only the item table — the right
+        call when "users" are per-request query vectors computed fresh
+        (nothing stored long-term, so quantizing them only adds error);
+        stored user-embedding tables keep the default and share the
+        memory win.
+        """
+        users = jnp.asarray(users, jnp.float32)
+        items = jnp.asarray(items, jnp.float32)
+        assert users.shape[-1] == items.shape[-1], (users.shape, items.shape)
+        dim = int(items.shape[-1])
+        if bits is None:
+            return cls(users, items, None, dim)
+        key = jax.random.PRNGKey(seed)
+        if quantize_users:
+            users = kops.quantize(users, key, bits=bits,
+                                  stochastic=stochastic)
+        return cls(
+            users=users,
+            items=kops.quantize(items, jax.random.fold_in(key, 1), bits=bits,
+                                stochastic=stochastic),
+            bits=bits, dim=dim)
+
+    def user_vectors(self, user_ids: jax.Array) -> jax.Array:
+        """Dequantized fp32 query rows for a batch of user ids."""
+        q = self.users
+        if not isinstance(q, QTensor):
+            return q[user_ids]
+        rows = QTensor(packed=q.packed[user_ids], scale=q.scale[user_ids],
+                       zero=q.zero[user_ids], bits=q.bits, dim=q.dim,
+                       dtype=q.dtype)
+        return core_dequantize(rows).astype(jnp.float32)
+
+    def item_matrix(self) -> jax.Array:
+        """Full dequantized (I, d) item table — test/debug only; the
+        serving path reads the packed table directly."""
+        if not isinstance(self.items, QTensor):
+            return self.items
+        return core_dequantize(self.items).astype(jnp.float32)
+
+    def memory_report(self) -> dict:
+        """Bytes ledger: packed payload + scale/zero overhead vs fp32."""
+        def table_bytes(t):
+            if isinstance(t, QTensor):
+                payload = t.packed.size * t.packed.dtype.itemsize
+                overhead = (t.scale.size + t.zero.size) * 4
+                rows = t.packed.shape[0]
+            else:
+                payload = t.size * jnp.dtype(jnp.float32).itemsize
+                overhead = 0
+                rows = t.shape[0]
+            return payload, overhead, rows
+
+        up, uo, u_rows = table_bytes(self.users)
+        ip, io_, i_rows = table_bytes(self.items)
+        total = up + uo + ip + io_
+        fp32 = (u_rows + i_rows) * self.dim * 4
+        return {
+            "bits": self.bits, "dim": self.dim,
+            "n_users": u_rows, "n_items": i_rows,
+            "packed_bytes": up + ip,
+            "scale_zero_bytes": uo + io_,
+            "total_bytes": total,
+            "fp32_bytes": fp32,
+            "compression_ratio": fp32 / total,
+        }
+
+
+def build_kgnn_store(params: dict, g, cfg, n_items: int, *,
+                     bits: int | None = 8, stochastic: bool = False,
+                     seed: int = 0) -> QuantizedEmbeddingStore:
+    """Offline rollout: one fp32 ``propagate`` pass -> packed store.
+
+    The CKG node space is [users | items | attrs] (data/synthetic.py);
+    only users and items are served — attribute entities exist to shape
+    the representations during propagation, not to be recommended.
+    """
+    from repro.models import kgnn
+
+    reps = kgnn.propagate(params, g, cfg)   # fp32: no ambient ACT context
+    users = reps[:cfg.n_users]
+    items = reps[cfg.n_users:cfg.n_users + n_items]
+    return QuantizedEmbeddingStore.from_arrays(
+        users, items, bits=bits, stochastic=stochastic, seed=seed)
+
+
+def padded_pos_lists(pos: np.ndarray, n_users: int, *,
+                     pad: int = -1, min_width: int = 1) -> np.ndarray:
+    """(n, 2) [user, item] pairs -> (U, P) per-user padded index lists.
+
+    P = max positives per user (>= ``min_width`` so the array is never
+    zero-width); pad value -1 never matches a real item id, so the lists
+    drop straight into the scorer's exclusion input or the evaluator's
+    membership test.
+    """
+    counts = np.zeros(n_users, np.int64)
+    np.add.at(counts, pos[:, 0], 1)
+    width = max(int(counts.max(initial=0)), min_width)
+    out = np.full((n_users, width), pad, np.int32)
+    cursor = np.zeros(n_users, np.int64)
+    for u, i in pos:
+        out[u, cursor[u]] = i
+        cursor[u] += 1
+    return out

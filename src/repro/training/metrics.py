@@ -37,11 +37,31 @@ def recall_ndcg_at_k(scores: jax.Array, test_pos: jax.Array,
 
 
 def auc(logits: jax.Array, labels: jax.Array) -> jax.Array:
-    """Rank-based AUC for binary CTR labels (recsys eval)."""
+    """Rank-based AUC for binary CTR labels (recsys eval).
+
+    Ties get AVERAGE ranks (the Mann-Whitney convention): a tied
+    pos/neg pair then contributes exactly 1/2, so the estimate is
+    deterministic and unbiased no matter how ``argsort`` happens to
+    order equal logits. (The old raw-argsort ranks made AUC depend on
+    the in-memory order of tied examples — e.g. all-equal logits could
+    score anywhere in [0, 1] instead of 0.5.)
+    """
+    n = logits.shape[0]
     order = jnp.argsort(logits)
-    ranks = jnp.empty_like(order).at[order].set(jnp.arange(logits.shape[0]))
+    sorted_x = logits[order]
+    # tie groups over the sorted array: average the 0-based positions
+    # within each run of equal values
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_x[1:] != sorted_x[:-1]])
+    group = jnp.cumsum(is_start) - 1                       # (n,) group ids
+    pos_in_sort = jnp.arange(n, dtype=logits.dtype)
+    g_sum = jax.ops.segment_sum(pos_in_sort, group, num_segments=n)
+    g_cnt = jax.ops.segment_sum(jnp.ones_like(pos_in_sort), group,
+                                num_segments=n)
+    avg_rank_sorted = g_sum[group] / jnp.maximum(g_cnt[group], 1)
+    ranks = jnp.zeros_like(avg_rank_sorted).at[order].set(avg_rank_sorted)
     n_pos = jnp.sum(labels)
-    n_neg = labels.shape[0] - n_pos
+    n_neg = n - n_pos
     pos_rank_sum = jnp.sum(jnp.where(labels > 0, ranks, 0))
     return (pos_rank_sum - n_pos * (n_pos - 1) / 2) / jnp.maximum(
         n_pos * n_neg, 1)

@@ -1,0 +1,335 @@
+"""Serving subsystem: store round-trip/ledger, chunked top-K exactness
+(incl. chunk-boundary ties), fused-vs-fallback bit parity, exclusion
+semantics, streaming-vs-dense eval, and the micro-batching engine."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import gen_kg_dataset
+from repro.kernels.ops import TRACE_COUNTS
+from repro.models import kgnn
+from repro.serving import (
+    QuantizedEmbeddingStore,
+    ServingEngine,
+    build_kgnn_store,
+    merge_topk,
+    padded_pos_lists,
+    streaming_eval_dataset,
+    streaming_recall_ndcg,
+    topk_scores,
+)
+from repro.training.metrics import recall_ndcg_at_k
+
+RNG = np.random.default_rng(7)
+U, I, D, K = 16, 257, 64, 20     # I deliberately not a block multiple
+USERS = RNG.normal(size=(U, D)).astype(np.float32)
+ITEMS = RNG.normal(size=(I, D)).astype(np.float32)
+
+
+def _assert_matches_dense(v, ix, dv, di):
+    """Vs the dense reference: indices exactly, values to fp32 matmul
+    tolerance — XLA may accumulate the dense matmul in a different order
+    than the per-chunk dot, so VALUES can differ in ulps even though the
+    chunked merge itself is exact (the integer-valued tie tests below
+    are bit-for-bit)."""
+    np.testing.assert_array_equal(np.asarray(ix), np.asarray(di))
+    np.testing.assert_allclose(np.asarray(v), np.asarray(dv),
+                               rtol=1e-6, atol=1e-6)
+
+
+def _dense_topk(store, k, exclude=None):
+    """Reference: dense masked score matrix + lax.top_k."""
+    scores = store.user_vectors(jnp.arange(store.n_users)) \
+        @ store.item_matrix().T
+    if exclude is not None:
+        mask = np.zeros((store.n_users, store.n_items), bool)
+        for u, row in enumerate(np.asarray(exclude)):
+            for i in row[row >= 0]:
+                mask[u, i] = True
+        scores = jnp.where(jnp.asarray(mask), -jnp.inf, scores)
+    return jax.lax.top_k(scores, k)
+
+
+# --- store ------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits,bound_codes", [(8, 255), (4, 15)])
+def test_store_roundtrip_bound(bits, bound_codes):
+    """Nearest rounding: |x - x_hat| <= scale/2 per element."""
+    st = QuantizedEmbeddingStore.from_arrays(USERS, ITEMS, bits=bits)
+    xhat = np.asarray(st.item_matrix())
+    err = np.abs(xhat - ITEMS)
+    scale = np.asarray(st.items.scale)          # (I, 1)
+    assert (err <= scale / 2 + 1e-6).all()
+    # and the quantizer actually used the full code range per row
+    assert st.items.bits == bits
+
+
+def test_store_memory_report_ratios():
+    st8 = QuantizedEmbeddingStore.from_arrays(USERS, ITEMS, bits=8)
+    st4 = QuantizedEmbeddingStore.from_arrays(USERS, ITEMS, bits=4)
+    stf = QuantizedEmbeddingStore.from_arrays(USERS, ITEMS, bits=None)
+    m8, m4, mf = (s.memory_report() for s in (st8, st4, stf))
+    assert mf["compression_ratio"] == 1.0
+    assert m8["compression_ratio"] >= 3.5       # acceptance bar (d=64)
+    assert m4["compression_ratio"] >= 6.0
+    # ledger adds up and the fp32 column is the real array size
+    for m in (m8, m4):
+        assert m["packed_bytes"] + m["scale_zero_bytes"] == m["total_bytes"]
+    assert mf["total_bytes"] == (U + I) * D * 4
+
+
+def test_store_fp32_users_packed_items():
+    """quantize_users=False: query tower stays exact, items packed."""
+    from repro.core.quant import QTensor
+    st = QuantizedEmbeddingStore.from_arrays(USERS, ITEMS, bits=8,
+                                             quantize_users=False)
+    assert not isinstance(st.users, QTensor)
+    assert isinstance(st.items, QTensor)
+    np.testing.assert_array_equal(
+        np.asarray(st.user_vectors(jnp.arange(U))), USERS)
+    v, ix = topk_scores(st.user_vectors(jnp.arange(U)), st.items, K,
+                        backend="pallas", block_i=64)
+    dv, di = _dense_topk(st, K)
+    _assert_matches_dense(v, ix, dv, di)
+
+
+def test_store_pytree_roundtrip():
+    st = QuantizedEmbeddingStore.from_arrays(USERS, ITEMS, bits=8)
+    leaves, treedef = jax.tree_util.tree_flatten(st)
+    st2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert st2.bits == 8 and st2.n_items == I
+    np.testing.assert_array_equal(np.asarray(st.items.packed),
+                                  np.asarray(st2.items.packed))
+
+
+# --- chunked top-K ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("block_i", [20, 33, 64, 300])
+def test_chunked_topk_equals_global_fp32(block_i):
+    st = QuantizedEmbeddingStore.from_arrays(USERS, ITEMS, bits=None)
+    v, ix = topk_scores(st.users, st.items, K, block_i=block_i)
+    dv, di = _dense_topk(st, K)
+    _assert_matches_dense(v, ix, dv, di)
+
+
+def test_chunked_topk_boundary_ties():
+    """Duplicated scores straddling chunk boundaries must keep the
+    global lowest-index-first tie order."""
+    q = np.eye(3, 8, dtype=np.float32)
+    items = np.zeros((100, 8), np.float32)
+    items[::2, :3] = 1.0      # every even item ties at score 1 for all rows
+    st = QuantizedEmbeddingStore.from_arrays(q, items, bits=None)
+    for block_i in (16, 25, 50):     # boundaries land on tied items
+        v, ix = topk_scores(jnp.asarray(q), st.items, 40, block_i=block_i)
+        dv, di = jax.lax.top_k(jnp.asarray(q) @ jnp.asarray(items).T, 40)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(dv))
+        np.testing.assert_array_equal(np.asarray(ix), np.asarray(di))
+
+
+def test_chunked_topk_ties_property():
+    """Property sweep: tiny value alphabet -> massive tie mass; every
+    (block size, k) must reproduce global lax.top_k exactly."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st_
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st_.integers(0, 2**31 - 1), block_i=st_.integers(4, 40),
+           k=st_.integers(1, 30), n_items=st_.integers(30, 90))
+    def prop(seed, block_i, k, n_items):
+        rng = np.random.default_rng(seed)
+        q = rng.integers(-2, 3, (3, 4)).astype(np.float32)
+        items = rng.integers(-2, 3, (n_items, 4)).astype(np.float32)
+        k = min(k, n_items)
+        v, ix = topk_scores(jnp.asarray(q), jnp.asarray(items), k,
+                            block_i=block_i)
+        dv, di = jax.lax.top_k(jnp.asarray(q) @ jnp.asarray(items).T, k)
+        assert np.array_equal(np.asarray(v), np.asarray(dv))
+        assert np.array_equal(np.asarray(ix), np.asarray(di))
+
+    prop()
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("block_i", [40, 257])
+def test_fused_vs_jnp_parity(bits, block_i):
+    """The Pallas kernel and the jnp fallback run the same op schedule —
+    interpret mode must agree to zero ulps, indices included."""
+    st = QuantizedEmbeddingStore.from_arrays(USERS, ITEMS, bits=bits)
+    q = st.user_vectors(jnp.arange(U))
+    excl = jnp.asarray(RNG.integers(0, I, (U, 5)), jnp.int32)
+    vf, xf = topk_scores(q, st.items, K, exclude=excl, backend="pallas",
+                         block_i=block_i)
+    vj, xj = topk_scores(q, st.items, K, exclude=excl, backend="jnp",
+                         block_i=block_i)
+    np.testing.assert_array_equal(np.asarray(vf), np.asarray(vj))
+    np.testing.assert_array_equal(np.asarray(xf), np.asarray(xj))
+
+
+def test_fused_matches_dense_reference():
+    st = QuantizedEmbeddingStore.from_arrays(USERS, ITEMS, bits=8)
+    q = st.user_vectors(jnp.arange(U))
+    v, ix = topk_scores(q, st.items, K, backend="pallas", block_i=64)
+    dv, di = _dense_topk(st, K)
+    _assert_matches_dense(v, ix, dv, di)
+
+
+def test_exclusion_matches_dense_mask():
+    st = QuantizedEmbeddingStore.from_arrays(USERS, ITEMS, bits=8)
+    q = st.user_vectors(jnp.arange(U))
+    excl = RNG.integers(0, I, (U, 9)).astype(np.int32)
+    excl[:, -2:] = -1                                  # padding entries
+    v, ix = topk_scores(q, st.items, K, exclude=jnp.asarray(excl),
+                        backend="pallas", block_i=50)
+    dv, di = _dense_topk(st, K, exclude=excl)
+    _assert_matches_dense(v, ix, dv, di)
+
+
+def test_merge_topk_shards_equal_global():
+    st = QuantizedEmbeddingStore.from_arrays(USERS, ITEMS, bits=None)
+    bounds = [0, 57, 130, 201, I]                      # uneven shards
+    parts_v, parts_i = [], []
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        kk = min(K, b - a)
+        v, ix = topk_scores(st.users, st.items[a:b], kk, block_i=31)
+        parts_v.append(np.asarray(v))
+        parts_i.append(np.asarray(ix) + a)
+    mv, mi = merge_topk(parts_v, parts_i, K)
+    dv, di = _dense_topk(st, K)
+    _assert_matches_dense(mv, mi, dv, di)
+
+
+# --- streaming eval ---------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def kg_setup():
+    ds = gen_kg_dataset(n_users=60, n_items=90, n_attrs=40, n_relations=4,
+                        n_triples=500, inter_per_user=10, seed=11)
+    cfg = kgnn.KGNNConfig(model="kgat", n_users=ds.n_users,
+                          n_entities=ds.n_entities,
+                          n_relations=ds.n_relations, dim=16, n_layers=2,
+                          readout="concat")
+    params = kgnn.init_params(jax.random.PRNGKey(3), cfg)
+    g = jax.tree_util.tree_map(jnp.asarray, ds.graph)
+    return ds, cfg, params, g
+
+
+def test_streaming_eval_matches_dense(kg_setup):
+    """fp32 store: streaming evaluator == dense recall_ndcg_at_k <= 1e-6."""
+    ds, cfg, params, g = kg_setup
+    store = build_kgnn_store(params, g, cfg, ds.n_items, bits=None)
+    r_s, n_s = streaming_eval_dataset(store, ds, k=20, user_chunk=23,
+                                      backend="jnp", block_i=32)
+    reps = kgnn.propagate(params, g, cfg)
+    scores = reps[:ds.n_users] @ reps[ds.n_users:ds.n_users + ds.n_items].T
+    tr, te = ds.interaction_matrices()
+    r_d, n_d = recall_ndcg_at_k(scores, jnp.asarray(te), jnp.asarray(tr),
+                                k=20)
+    assert abs(r_s - float(r_d)) <= 1e-6
+    assert abs(n_s - float(n_d)) <= 1e-6
+
+
+def test_streaming_eval_quantized_matches_dense_on_dequant(kg_setup):
+    """INT8 store: streaming eval == dense reference applied to the
+    SAME dequantized tables (the store is the model being measured)."""
+    ds, cfg, params, g = kg_setup
+    store = build_kgnn_store(params, g, cfg, ds.n_items, bits=8)
+    r_s, n_s = streaming_eval_dataset(store, ds, k=20, backend="pallas",
+                                      block_i=40)
+    scores = store.user_vectors(jnp.arange(ds.n_users)) \
+        @ store.item_matrix().T
+    tr, te = ds.interaction_matrices()
+    r_d, n_d = recall_ndcg_at_k(scores, jnp.asarray(te), jnp.asarray(tr),
+                                k=20)
+    assert abs(r_s - float(r_d)) <= 1e-6
+    assert abs(n_s - float(n_d)) <= 1e-6
+
+
+def test_streaming_eval_excludes_train_positives():
+    """A train positive must never be recommended, even at rank k."""
+    users = np.eye(4, 8, dtype=np.float32)
+    items = np.tile(np.eye(4, 8, dtype=np.float32), (3, 1))  # 12 items
+    store = QuantizedEmbeddingStore.from_arrays(users, items, bits=None)
+    train = np.array([[u, u] for u in range(4)])   # item u is train pos
+    test = np.array([[u, u + 4] for u in range(4)])
+    excl = padded_pos_lists(train, 4)
+    _, idx = topk_scores(jnp.asarray(users), store.items, 5,
+                         exclude=jnp.asarray(excl), block_i=5)
+    for u in range(4):
+        assert u not in np.asarray(idx)[u]
+    r, n = streaming_recall_ndcg(store, train, test, k=5, block_i=5)
+    assert r == 1.0                                # test item promoted
+
+
+# --- engine -----------------------------------------------------------------
+
+
+def test_engine_bucketed_padding_never_retraces():
+    st = QuantizedEmbeddingStore.from_arrays(USERS, ITEMS, bits=8)
+    excl = padded_pos_lists(
+        np.stack([np.arange(U), RNG.integers(0, I, U)], 1), U)
+    with ServingEngine(st, k=K, exclude=excl, backend="pallas",
+                       buckets=(1, 4, 8), block_i=64) as eng:
+        eng.warmup()                  # traces each bucket shape once
+        traced = TRACE_COUNTS["topk_fused"]
+        futs = [eng.submit(int(u)) for u in RNG.integers(0, U, 40)]
+        for f in futs:
+            f.result(timeout=120)
+    # arbitrary arrival batch sizes all padded onto warm bucket shapes
+    assert TRACE_COUNTS["topk_fused"] == traced
+    st_stats = eng.stats()
+    assert st_stats.n_requests == 40
+    assert st_stats.p99_ms >= st_stats.p50_ms >= 0.0
+    assert st_stats.qps > 0
+
+
+def test_engine_responses_exact():
+    st = QuantizedEmbeddingStore.from_arrays(USERS, ITEMS, bits=8)
+    excl = padded_pos_lists(
+        np.stack([np.arange(U), np.arange(U) % I], 1), U)
+    q = st.user_vectors(jnp.arange(U))
+    dv, di = topk_scores(q, st.items, K, exclude=jnp.asarray(excl),
+                         backend="pallas", block_i=64)
+    dv, di = np.asarray(dv), np.asarray(di)
+    uids = RNG.integers(0, U, 30)
+    with ServingEngine(st, k=K, exclude=excl, backend="pallas",
+                       buckets=(1, 4, 8), block_i=64) as eng:
+        futs = [(int(u), eng.submit(int(u))) for u in uids]
+        for u, fut in futs:
+            vals, idx = fut.result(timeout=120)
+            np.testing.assert_array_equal(vals, dv[u])
+            np.testing.assert_array_equal(idx, di[u])
+
+
+def test_engine_exit_resolves_or_cancels_every_future():
+    """Shutdown must never strand a future: after __exit__ every submit
+    is either served or cancelled (regression: requests queued behind
+    the stop sentinel used to hang their callers)."""
+    st = QuantizedEmbeddingStore.from_arrays(USERS, ITEMS, bits=8)
+    with ServingEngine(st, k=K, backend="pallas", buckets=(4,),
+                       block_i=64) as eng:
+        futs = [eng.submit(int(u)) for u in RNG.integers(0, U, 25)]
+        # exit immediately: the sentinel races the worker mid-drain
+    assert all(f.done() for f in futs)
+    served = sum(1 for f in futs if not f.cancelled())
+    for f in futs:
+        if not f.cancelled():
+            vals, idx = f.result(timeout=1)
+            assert vals.shape == (K,) and idx.shape == (K,)
+    assert served >= 1          # the worker was actively serving
+
+
+def test_engine_item_shards_exact():
+    st = QuantizedEmbeddingStore.from_arrays(USERS, ITEMS, bits=8)
+    with ServingEngine(st, k=K, backend="pallas", buckets=(4,),
+                       item_shards=3, block_i=50) as eng:
+        fut = eng.submit(2)
+        vals, idx = fut.result(timeout=120)
+    dv, di = _dense_topk(st, K)
+    _assert_matches_dense(vals[None], idx[None],
+                          np.asarray(dv)[2][None], np.asarray(di)[2][None])

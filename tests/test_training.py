@@ -99,6 +99,36 @@ def test_auc_random_is_half():
     assert abs(float(auc(logits, labels)) - 0.5) < 0.05
 
 
+def test_auc_ties_average_ranks():
+    """Regression: tied logits used to inherit argsort's arbitrary order;
+    average ranks make a tied pos/neg pair count exactly 1/2."""
+    # all logits equal -> exactly 0.5, whatever the label arrangement
+    for labels in ([1, 0, 1, 0, 1, 0], [1, 1, 1, 0, 0, 0],
+                   [0, 0, 0, 1, 1, 1]):
+        got = float(auc(jnp.zeros(6), jnp.asarray(labels, jnp.float32)))
+        assert got == pytest.approx(0.5, abs=1e-7)
+    # duplicated logits vs the exact pairwise Mann-Whitney statistic
+    rng = np.random.default_rng(5)
+    x = rng.integers(0, 4, 120).astype(np.float32)      # heavy ties
+    y = (rng.random(120) < 0.4).astype(np.float32)
+    pos, neg = x[y > 0], x[y == 0]
+    ref = float(np.mean([(p > n) + 0.5 * (p == n)
+                         for p in pos for n in neg]))
+    assert float(auc(jnp.asarray(x), jnp.asarray(y))) == \
+        pytest.approx(ref, abs=1e-5)
+
+
+def test_auc_deterministic_under_permutation_of_ties():
+    rng = np.random.default_rng(9)
+    x = rng.integers(0, 3, 200).astype(np.float32)
+    y = (rng.random(200) < 0.5).astype(np.float32)
+    base = float(auc(jnp.asarray(x), jnp.asarray(y)))
+    for _ in range(3):
+        perm = rng.permutation(200)
+        assert float(auc(jnp.asarray(x[perm]), jnp.asarray(y[perm]))) == \
+            pytest.approx(base, abs=1e-6)
+
+
 # --- checkpoint ------------------------------------------------------------
 
 
