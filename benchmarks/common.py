@@ -15,14 +15,13 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import act_context, step_key, traced_activation_report
 from repro.core.policy import as_schedule, policy_for_bits
-from repro.data.csr import maybe_attach_layout
-from repro.data.synthetic import KGDataset, bpr_batches, gen_kg_dataset
+from repro.data.synthetic import KGDataset, gen_kg_dataset
 from repro.models import kgnn
+from repro.models.registry import build_step
 from repro.serving import QuantizedEmbeddingStore, streaming_eval_dataset
 from repro.training.optimizer import adam
 
@@ -80,9 +79,12 @@ def train_kgnn(model: str, *, bits: int | None, stochastic: bool = True,
     if schedule is None:
         schedule = policy_for_bits(bits, stochastic=stochastic, kernel=kernel)
     schedule = as_schedule(schedule)
-    g = jax.tree_util.tree_map(jnp.asarray, ds.graph)
-    g = maybe_attach_layout(g, schedule, model=model)
-    params = kgnn.init_params(jax.random.PRNGKey(seed), cfg)
+    # one step definition per arch, from the registry (DESIGN.md §9) —
+    # the same loss/init the launcher and the DP wrapper trace
+    mstep = build_step(model, schedule=schedule, ds=ds, cfg=cfg,
+                       batch_size=batch, data_seed=seed)
+    g = mstep.data["graph"]
+    params = mstep.init(jax.random.PRNGKey(seed))
     opt = adam(lr)
     opt_state = opt.init(params)
     root = jax.random.PRNGKey(1000 + seed)
@@ -90,19 +92,18 @@ def train_kgnn(model: str, *, bits: int | None, stochastic: bool = True,
     @jax.jit
     def train_step(params, opt_state, batch_, key):
         def loss_fn(p):
-            with act_context(schedule, key):
-                return kgnn.bpr_loss(p, g, batch_, cfg)
+            return mstep.loss(p, batch_, ctx=act_context(schedule, key))
 
         loss, grads = jax.value_and_grad(loss_fn)(params)
         params, opt_state = opt.update(grads, opt_state, params)
         return params, opt_state, loss
 
-    it = bpr_batches(ds, batch, seed=seed)
+    it = mstep.batches()  # the registry step's own stream (batch, seed)
     losses, curve = [], []
     t_total = 0.0
     b0 = None
     for step in range(steps):
-        b = jax.tree_util.tree_map(jnp.asarray, next(it))
+        b = next(it)
         b0 = b if b0 is None else b0
         t0 = time.perf_counter()
         params, opt_state, loss = train_step(params, opt_state, b,
@@ -115,9 +116,11 @@ def train_kgnn(model: str, *, bits: int | None, stochastic: bool = True,
             r, n = evaluate(params, g, cfg, ds)
             curve.append({"step": step + 1, "recall": r, "ndcg": n})
     recall, ndcg = evaluate(params, g, cfg, ds)
-    # activation memory from the residual trace (shape-only eval_shape pass)
+    # activation memory from the residual trace (shape-only eval_shape
+    # pass); step.loss with ctx=None resolves from the ambient recording
+    # context the report enters
     mem = traced_activation_report(
-        lambda p: kgnn.bpr_loss(p, g, b0, cfg), params, schedule=schedule)
+        lambda p: mstep.loss(p, b0), params, schedule=schedule)
     return {
         # a per-site schedule is not a uniform bit-width — don't label it
         # as one in persisted results

@@ -13,9 +13,11 @@ without materializing the (U, I) score matrix.
 
 from __future__ import annotations
 
+from repro.models.registry import kg_archs
+
 from .common import train_kgnn
 
-MODELS = ("kgat", "kgcn", "kgin")
+MODELS = kg_archs()  # the registered KG archs: kgat / kgcn / kgin
 BITS = (None, 8, 4, 2, 1)
 
 

@@ -1,6 +1,7 @@
 """End-to-end driver: train a ~100M-parameter KGIN for a few hundred steps
-with the full production stack — fault-tolerant Trainer, async
-checkpointing, SR-keyed replay, Recall/NDCG eval.
+with the full production stack — model-step registry, fault-tolerant
+Trainer, async checkpointing with run-identity metadata, SR-keyed
+replay, Recall/NDCG eval.
 
 The ~100M parameters come from the entity/relation embedding tables
 (the realistic KGNN regime: params ∝ N·d): 600k entities × d=160 ≈ 96M,
@@ -15,16 +16,15 @@ import sys
 import tempfile
 
 import jax
-import jax.numpy as jnp
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from repro.core import act_context  # noqa: E402
-from repro.core.policy import schedule_from_cli  # noqa: E402
-from repro.data.csr import maybe_attach_layout  # noqa: E402
-from repro.data.synthetic import bpr_batches, gen_kg_dataset  # noqa: E402
+from repro.core.policy import schedule_from_cli, schedule_label  # noqa: E402
+from repro.data.synthetic import gen_kg_dataset  # noqa: E402
 from repro.models import kgnn  # noqa: E402
+from repro.models.registry import build_step  # noqa: E402
 from repro.training.optimizer import adam, cosine_warmup  # noqa: E402
+from repro.training.step import make_train_step, step_metadata  # noqa: E402
 from repro.training.trainer import Trainer, TrainerConfig  # noqa: E402
 
 from benchmarks.common import evaluate  # noqa: E402
@@ -57,43 +57,34 @@ def main() -> None:
         n_relations=ds.n_relations, dim=args.dim, n_layers=3, readout="sum")
     schedule = schedule_from_cli(args.schedule, args.bits,
                                  kernel=args.kernel)
-    g = jax.tree_util.tree_map(jnp.asarray, ds.graph)
-    g = maybe_attach_layout(g, schedule, model=cfg.model)
+    schedule_spec = schedule_label(args.schedule, args.bits)
 
-    params = kgnn.init_params(jax.random.PRNGKey(0), cfg)
+    # one step definition, from the registry — the same object the
+    # launcher and the DP wrapper consume (DESIGN.md §9)
+    step = build_step("kgin", schedule=schedule, ds=ds, cfg=cfg,
+                      batch_size=4096, data_seed=1)
+    params = step.init(jax.random.PRNGKey(0))
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
     print(f"model: kgin dim={args.dim} | {n_params/1e6:.1f}M params | "
-          f"{len(ds.graph.src)/1e6:.2f}M edges | policy bits={args.bits}")
+          f"{step.data_spec['n_edges']/1e6:.2f}M edges | "
+          f"policy bits={args.bits}")
 
     opt = adam(cosine_warmup(3e-3, warmup=50, total=args.steps),
                clip_norm=1.0)
-    root = jax.random.PRNGKey(7)
-
-    @jax.jit
-    def train_step(state, batch, step):
-        params, opt_state = state
-
-        def loss_fn(p):
-            with act_context(schedule, root, step=step):
-                return kgnn.bpr_loss(p, g, batch, cfg)
-
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        params, opt_state = opt.update(grads, opt_state, params)
-        return (params, opt_state), {"loss": loss}
-
-    def batches():
-        for b in bpr_batches(ds, 4096, seed=1):
-            yield jax.tree_util.tree_map(jnp.asarray, b)
+    train_step = make_train_step(step, opt, schedule=schedule,
+                                 root_key=jax.random.PRNGKey(7))
 
     tcfg = TrainerConfig(
         total_steps=args.steps,
         ckpt_dir=args.ckpt or tempfile.mkdtemp(prefix="kgin_ckpt_"),
         ckpt_every=100, log_every=25)
-    trainer = Trainer(train_step, (params, opt.init(params)), batches(),
-                      tcfg).restore_if_available()
+    trainer = Trainer(train_step, (params, opt.init(params)),
+                      step.batches(), tcfg,
+                      ckpt_meta=step_metadata(step, schedule_spec)
+                      ).restore_if_available()
     state = trainer.run()
 
-    recall, ndcg = evaluate(state[0], g, cfg, ds)
+    recall, ndcg = evaluate(state[0], step.data["graph"], cfg, ds)
     print(f"final: recall@20={recall:.4f} ndcg@20={ndcg:.4f} "
           f"(ckpts in {tcfg.ckpt_dir})")
 

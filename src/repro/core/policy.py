@@ -229,6 +229,13 @@ def parse_schedule(spec: str, *, stochastic: bool = True,
     return PolicySchedule(rules=tuple(rules), default=default)
 
 
+def schedule_label(spec: str | None, bits: int | None) -> str:
+    """The canonical CLI-level schedule string — logs AND checkpoint
+    identity (``check_meta`` compares it on restore, so every entry
+    point must derive it the same way)."""
+    return spec or ("fp32" if not bits else f"int{bits}")
+
+
 def schedule_from_cli(spec: str | None, bits: int | None, *,
                       stochastic: bool = True,
                       kernel: str = "jnp") -> PolicySchedule:

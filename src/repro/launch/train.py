@@ -1,14 +1,17 @@
 """Training launcher: ``--arch <id>`` + shape -> fault-tolerant train loop.
 
-On real hardware the mesh comes from ``make_production_mesh``; on this CPU
-host it builds a 1x1 mesh and runs the reduced config end-to-end (the full
-configs are exercised via dryrun.py).
+Every arch resolves through the model-step registry
+(``repro.models.registry.build_step``, DESIGN.md §9) to ONE ``ModelStep``
+— there is no per-family job wiring here anymore. On real hardware the
+mesh comes from ``make_production_mesh``; on this CPU host it builds a
+1x1 mesh and runs the reduced config end-to-end (the full configs are
+exercised via dryrun.py).
 
   PYTHONPATH=src python -m repro.launch.train --arch kgat --steps 100
   PYTHONPATH=src python -m repro.launch.train --arch fm --steps 50 --bits 4
   PYTHONPATH=src python -m repro.launch.train --arch kgat \
       --schedule first_layer_int8_rest_int2
-  PYTHONPATH=src python -m repro.launch.train --arch kgat --mesh data=8
+  PYTHONPATH=src python -m repro.launch.train --arch kgin --mesh data=8
 
 ``--schedule`` takes a ``PolicySchedule`` spec (preset name, uniform
 bit-width, or ordered ``[kind:]glob=bits`` rules — see
@@ -17,12 +20,19 @@ bit-width, or ordered ``[kind:]glob=bits`` rules — see
 stochastic-rounding key (scope-hashed, replay-exact). ``--bits`` remains
 the uniform fast path.
 
-``--mesh data=N`` (KGAT only) runs the data-parallel shard_map path
-(DESIGN.md §7): edges dst-partitioned over N shards, per-shard ACT-
-compressed propagation, gradients all-reduced through the INT8
-compressed psum (``--allreduce fp32`` for the exact baseline). On a CPU
-host the N simulated devices are forced automatically — provided no jax
-call has initialized the backend first.
+``--mesh data=N`` runs the data-parallel shard_map path (DESIGN.md §7)
+for EVERY arch whose step registers a ``DPSpec`` — all KG archs (kgat,
+kgcn, kgin): edges dst-partitioned over N shards, per-shard ACT-
+compressed propagation through the same ``propagate_view`` layer math
+as the single-device step, gradients all-reduced through the INT8
+compressed psum (``--allreduce fp32`` for the exact baseline). Archs
+without a DPSpec (lm / recsys / gcn) fail fast with the reason. On a
+CPU host the N simulated devices are forced automatically — provided no
+jax call has initialized the backend first.
+
+Checkpoints carry the run identity (arch id + schedule spec):
+restoring from a directory written by a different arch or schedule is
+refused instead of silently resuming the wrong run.
 """
 
 from __future__ import annotations
@@ -32,14 +42,11 @@ import os
 import tempfile
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCHS, get
-from repro.configs.smoke import reduced
-from repro.core import act_context
-from repro.core.policy import PolicySchedule, schedule_from_cli
+from repro.core.policy import schedule_from_cli, schedule_label
 from repro.training.optimizer import adam
+from repro.training.step import make_train_step, step_metadata
 from repro.training.trainer import Trainer, TrainerConfig
 
 
@@ -62,168 +69,21 @@ def _force_host_devices(n: int) -> None:
             (cur + f" --xla_force_host_platform_device_count={n}").strip()
 
 
-def _kgat_dp_job(arch, schedule: PolicySchedule, args):
-    """--mesh data=N: the shard_map data-parallel path (DESIGN.md §7)."""
-    from repro.data.synthetic import bpr_batches, gen_kg_dataset
-    from repro.models import kgnn
+def _dp_train_step(step, args, opt, root_key, schedule):
+    """--mesh data=N: the generic shard_map data-parallel path."""
     from repro.sharding.compat import make_sim_mesh
     from repro.training import data_parallel as dp
 
     axis, n = _parse_mesh(args.mesh)
     mesh = make_sim_mesh(n, (axis,))
-    ds = gen_kg_dataset(n_users=120, n_items=200, n_attrs=80, seed=0)
-    cfg = kgnn.KGNNConfig(
-        model="kgat", n_users=ds.n_users, n_entities=ds.n_entities,
-        n_relations=ds.n_relations, dim=32, n_layers=3, readout="concat")
-    g = jax.tree_util.tree_map(jnp.asarray, ds.graph)
-    part = dp.partition_graph(g, mesh, axis=axis)
-    params = kgnn.init_params(jax.random.PRNGKey(0), cfg)
-    opt = adam(3e-3)
-    train_step = dp.make_kgat_dp_step(
-        cfg, part, mesh, opt, schedule=schedule,
-        root_key=jax.random.PRNGKey(1), axis=axis,
-        compress_grads=args.allreduce == "int8")
-
-    def data():
-        for b in bpr_batches(ds, 512, seed=2):
-            yield jax.tree_util.tree_map(jnp.asarray, b)
-
-    print(f"[train] data-parallel kgat: mesh {axis}={n}, "
+    part = dp.partition_graph(step.dp_spec.graph, mesh, axis=axis)
+    train_step = dp.make_dp_step(
+        step, part, mesh, opt, schedule=schedule, root_key=root_key,
+        axis=axis, compress_grads=args.allreduce == "int8")
+    print(f"[train] data-parallel {step.arch}: mesh {axis}={n}, "
           f"allreduce={args.allreduce}, "
           f"edges/shard≤{part.e_cap}, halo/shard≤{part.h_cap}")
-    return train_step, (params, opt.init(params)), data()
-
-
-def _kgnn_job(arch, schedule: PolicySchedule, args):
-    from repro.data.csr import maybe_attach_layout
-    from repro.data.synthetic import bpr_batches, gen_kg_dataset
-    from repro.models import kgnn
-    if args.mesh:
-        if arch.model_cfg.model != "kgat":
-            raise SystemExit("--mesh is implemented for --arch kgat")
-        return _kgat_dp_job(arch, schedule, args)
-    ds = gen_kg_dataset(n_users=120, n_items=200, n_attrs=80, seed=0)
-    cfg = kgnn.KGNNConfig(
-        model=arch.model_cfg.model, n_users=ds.n_users,
-        n_entities=ds.n_entities, n_relations=ds.n_relations,
-        dim=32, n_layers=3,
-        readout="concat" if arch.model_cfg.model == "kgat" else "sum")
-    g = jax.tree_util.tree_map(jnp.asarray, ds.graph)
-    g = maybe_attach_layout(g, schedule, model=cfg.model)
-    params = kgnn.init_params(jax.random.PRNGKey(0), cfg)
-    opt = adam(3e-3)
-    root = jax.random.PRNGKey(1)
-
-    @jax.jit
-    def train_step(state, batch, step):
-        params, opt_state = state
-
-        def loss_fn(p):
-            with act_context(schedule, root, step=step):
-                return kgnn.bpr_loss(p, g, batch, cfg)
-
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        params, opt_state = opt.update(grads, opt_state, params)
-        return (params, opt_state), {"loss": loss}
-
-    def data():
-        for b in bpr_batches(ds, 512, seed=2):
-            yield jax.tree_util.tree_map(jnp.asarray, b)
-
-    return train_step, (params, opt.init(params)), data()
-
-
-def _lm_job(arch, schedule: PolicySchedule, args):
-    from repro.data.synthetic import lm_batches
-    from repro.models import transformer as tf
-    cfg = reduced(arch).model_cfg
-    params = tf.init_params(jax.random.PRNGKey(0), cfg)
-    opt = adam(1e-3)
-    root = jax.random.PRNGKey(1)
-
-    @jax.jit
-    def train_step(state, batch, step):
-        params, opt_state = state
-
-        def loss_fn(p):
-            with act_context(schedule, root, step=step):
-                return tf.lm_loss(p, batch, cfg=cfg)
-
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        params, opt_state = opt.update(grads, opt_state, params)
-        return (params, opt_state), {"loss": loss}
-
-    def data():
-        for b in lm_batches(vocab=cfg.vocab, batch=8, seq=64, seed=0):
-            yield {"tokens": jnp.asarray(b["tokens"])}
-
-    return train_step, (params, opt.init(params)), data()
-
-
-def _recsys_job(arch, schedule: PolicySchedule, args):
-    from repro.data.synthetic import criteo_batches
-    from repro.models import recsys
-    cfg = reduced(arch).model_cfg
-    params = recsys.init_params(jax.random.PRNGKey(0), cfg)
-    opt = adam(1e-3)
-    root = jax.random.PRNGKey(1)
-
-    @jax.jit
-    def train_step(state, batch, step):
-        params, opt_state = state
-
-        def loss_fn(p):
-            with act_context(schedule, root, step=step):
-                logits = recsys.forward(p, batch, cfg)
-            lab = batch["label"]
-            return -jnp.mean(lab * jax.nn.log_sigmoid(logits)
-                             + (1 - lab) * jax.nn.log_sigmoid(-logits))
-
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        params, opt_state = opt.update(grads, opt_state, params)
-        return (params, opt_state), {"loss": loss}
-
-    def data():
-        for b in criteo_batches(batch=256, n_dense=max(cfg.n_dense, 1),
-                                vocab_sizes=cfg.vocab_sizes, seed=3):
-            yield jax.tree_util.tree_map(jnp.asarray, b)
-
-    return train_step, (params, opt.init(params)), data()
-
-
-def _gnn_job(arch, schedule: PolicySchedule, args):
-    from repro.data.csr import build_spmm_layout
-    from repro.data.synthetic import cora_like
-    from repro.models import gnn
-    cfg = reduced(arch).model_cfg
-    feats, src, dst, labels = cora_like(n_nodes=300, d_feat=cfg.d_in)
-    x, s, d, y = map(jnp.asarray, (feats, src, dst, labels))
-    layout = build_spmm_layout(src, dst, n_dst=300) \
-        if schedule.kernel == "pallas" else None
-    params = gnn.init_params(jax.random.PRNGKey(0), cfg)
-    opt = adam(1e-2)
-    root = jax.random.PRNGKey(1)
-
-    @jax.jit
-    def train_step(state, batch, step):
-        params, opt_state = state
-
-        def loss_fn(p):
-            with act_context(schedule, root, step=step):
-                logits = gnn.gcn_forward(p, x, s, d, n_nodes=300, cfg=cfg,
-                                         layout=layout)
-            oh = jax.nn.one_hot(y, cfg.n_classes)
-            return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
-
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        params, opt_state = opt.update(grads, opt_state, params)
-        return (params, opt_state), {"loss": loss}
-
-    def data():
-        while True:
-            yield {}
-
-    return train_step, (params, opt.init(params)), data()
+    return train_step
 
 
 def main() -> None:
@@ -238,7 +98,8 @@ def main() -> None:
                     help="ACT backend: jnp reference or fused Pallas kernels")
     ap.add_argument("--mesh", default=None,
                     help="AXIS=N, e.g. data=8: shard_map data-parallel "
-                         "training on a simulated N-device mesh (kgat)")
+                         "training on a simulated N-device mesh (any arch "
+                         "with a registered DPSpec — kgat, kgcn, kgin)")
     ap.add_argument("--allreduce", default="int8", choices=["int8", "fp32"],
                     help="gradient all-reduce wire format on the --mesh "
                          "path (int8 = compressed SR psum)")
@@ -248,24 +109,36 @@ def main() -> None:
         # must precede every jax call: the device count locks at first init
         _force_host_devices(_parse_mesh(args.mesh)[1])
     arch = get(args.arch)
-    if args.mesh and arch.family != "kgnn":
-        raise SystemExit("--mesh (shard_map data parallelism) is "
-                         "implemented for the kgnn family (--arch kgat)")
     schedule = schedule_from_cli(args.schedule, args.bits, kernel=args.kernel)
+    schedule_spec = schedule_label(args.schedule, args.bits)
 
-    job = {
-        "kgnn": _kgnn_job, "lm": _lm_job, "moe_lm": _lm_job,
-        "recsys": _recsys_job, "gnn": _gnn_job,
-    }[arch.family]
-    train_step, state, data = job(arch, schedule, args)
-    n = sum(x.size for x in jax.tree_util.tree_leaves(state[0]))
+    from repro.models.registry import build_step
+
+    step = build_step(arch, schedule=schedule)
+    opt = adam(step.lr)
+    root = jax.random.PRNGKey(1)
+    if args.mesh:
+        if step.dp_spec is None:
+            raise SystemExit(
+                f"--mesh: data parallelism is not implemented for --arch "
+                f"{args.arch} ({arch.family}): {step.dp_unsupported}")
+        train_step = _dp_train_step(step, args, opt, root, schedule)
+    else:
+        train_step = make_train_step(step, opt, schedule=schedule,
+                                     root_key=root)
+    params = step.init(jax.random.PRNGKey(0))
+    state = (params, opt.init(params))
+
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
     print(f"[train] {args.arch} ({arch.family}) {n/1e6:.2f}M params "
-          f"schedule={args.schedule or ('fp32' if not args.bits else f'int{args.bits}')}")
+          f"schedule={schedule_spec}")
     cfg = TrainerConfig(
         total_steps=args.steps,
         ckpt_dir=args.ckpt or tempfile.mkdtemp(prefix="repro_ckpt_"),
         ckpt_every=max(args.steps // 4, 10), log_every=max(args.steps // 8, 5))
-    trainer = Trainer(train_step, state, data, cfg).restore_if_available()
+    trainer = Trainer(train_step, state, step.batches(), cfg,
+                      ckpt_meta=step_metadata(step, schedule_spec)
+                      ).restore_if_available()
     trainer.run()
     losses = [h["loss"] for h in trainer.history]
     print(f"[train] done; loss {losses[0]:.4f} -> {losses[-1]:.4f}"

@@ -20,13 +20,22 @@ memory analysis.
 
 Every op site carries a named scope (``"kgat/layer2/spmm"``): the ambient
 ``ActContext`` resolves its per-site policy from a ``PolicySchedule`` and
-derives its stochastic-rounding key from the scope hash (DESIGN.md §6),
-and the residual trace replaces the old hand-maintained
-``activation_shapes`` tables for memory accounting.
+derives its stochastic-rounding key from the scope hash (DESIGN.md §6).
+
+**One step definition per arch** (DESIGN.md §9): every model's layer math
+is written ONCE against a ``GraphView`` — ``FullGraphView`` for the
+single-device COO path, ``ShardGraphView`` for the dst-partitioned
+``shard_map`` path (``repro.training.data_parallel``). The view supplies
+the gatherable source-side table (identity vs all-gather + halo shrink),
+pad-edge masking (identity vs mask), and local destination rows; the
+layer functions (``_kgat_layer`` …) and edge-weight functions are shared
+verbatim, so the DP parity contracts rest on both paths running THIS
+code rather than a hand-inlined copy.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 
@@ -47,6 +56,8 @@ from .layers import glorot, normal_init
 __all__ = [
     "KGNNConfig", "CKG", "segment_softmax", "kgat_bi_interaction",
     "init_params", "propagate", "score_pairs", "bpr_loss",
+    "FullGraphView", "ShardGraphView", "model_sites",
+    "propagate_view", "kg_shard_loss", "readout",
 ]
 
 
@@ -111,6 +122,134 @@ def segment_softmax(logits: jax.Array, seg: jax.Array, num_segments: int):
 
 
 # ---------------------------------------------------------------------------
+# graph views: one set of layer functions, two execution layouts
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FullGraphView:
+    """The whole COO graph on one device — every hook is the identity.
+
+    ``src`` indexes the table returned by ``table`` (== the node table
+    itself), ``dst`` indexes local rows (== all rows), no pad edges.
+    """
+
+    g: CKG
+
+    @property
+    def src(self):
+        return self.g.src
+
+    @property
+    def dst(self):
+        return self.g.dst
+
+    @property
+    def rel(self):
+        return self.g.rel
+
+    @property
+    def num_rows(self) -> int:
+        return self.g.n_nodes
+
+    @property
+    def layout(self):
+        return self.g.layout
+
+    def local_rows(self, table):
+        return table
+
+    def table(self, x, axis: int = 0):
+        return x
+
+    def unshard(self, x, axis: int = 0):
+        return x
+
+    def mask_logits(self, logits):
+        return logits
+
+    def mask_weights(self, w):
+        return w
+
+    def mask_messages(self, m):
+        return m
+
+    def edge_ones(self, dtype):
+        return jnp.ones_like(self.g.dst, dtype=dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardGraphView:
+    """One shard of a dst-partitioned graph, inside a ``shard_map`` body.
+
+    Built from one row of ``repro.data.csr.EdgePartition``: ``src`` is
+    halo-LOCAL (indexes the ``(h_cap, d)`` table ``table`` returns after
+    the all-gather + halo shrink), ``dst`` is shard-local, pad edges
+    carry ``mask == 0``. ``local_rows`` slices this shard's rows out of
+    a replicated node table (pad-extended to ``n_nodes_padded``).
+    """
+
+    src: jax.Array        # (Ec,) halo-local source index
+    dst: jax.Array        # (Ec,) local dst row
+    rel: jax.Array        # (Ec,)
+    mask: jax.Array       # (Ec,) 1=real edge, 0=pad
+    halo: jax.Array       # (Hc,) unique global src ids for this shard
+    axis: str             # mesh axis name
+    num_rows: int         # rows per shard
+    n_nodes_padded: int   # num_rows * n_shards
+    layout = None         # blocked-CSR stays single-device (DESIGN.md §7.4)
+
+    @classmethod
+    def from_shard(cls, sh: dict, *, axis: str, num_rows: int,
+                   n_nodes_padded: int) -> "ShardGraphView":
+        return cls(src=sh["src_h"], dst=sh["dst_l"], rel=sh["rel"],
+                   mask=sh["mask"], halo=sh["halo"], axis=axis,
+                   num_rows=num_rows, n_nodes_padded=n_nodes_padded)
+
+    def local_rows(self, table):
+        pad = jnp.pad(table, ((0, self.n_nodes_padded - table.shape[0]),
+                              (0, 0)))
+        i = jax.lax.axis_index(self.axis)
+        return jax.lax.dynamic_slice_in_dim(pad, i * self.num_rows,
+                                            self.num_rows)
+
+    def table(self, x, axis: int = 0):
+        full = jax.lax.all_gather(x, self.axis, axis=axis, tiled=True)
+        return jnp.take(full, self.halo, axis=axis)
+
+    def unshard(self, x, axis: int = 0):
+        return jax.lax.all_gather(x, self.axis, axis=axis, tiled=True)
+
+    def mask_logits(self, logits):
+        return jnp.where(self.mask > 0, logits, -1e30)
+
+    def mask_weights(self, w):
+        return w * self.mask
+
+    def mask_messages(self, m):
+        return m * self.mask[:, None]
+
+    def edge_ones(self, dtype):
+        return self.mask.astype(dtype)
+
+
+def model_sites(cfg: KGNNConfig) -> tuple[tuple[str, str], ...]:
+    """Per-layer ``(site_name, op_kind)`` table for a model — the ACT
+    sites a data-parallel step must pre-resolve outside ``shard_map``."""
+    if cfg.model == "kgat":
+        return (("spmm", "spmm"), ("w1", "matmul"), ("w2", "matmul"),
+                ("act1", "nonlin"), ("act2", "nonlin"))
+    if cfg.model == "kgcn":
+        return (("spmm", "spmm"), ("dense", "matmul"), ("act", "nonlin"))
+    if cfg.model == "kgin":
+        return (("act", "nonlin"),)
+    if cfg.model == "rgcn":
+        return tuple((f"basis{b}", "matmul") for b in range(cfg.n_bases)) \
+            + (("self", "matmul"), ("act", "nonlin"))
+    raise ValueError(cfg.model)
+
+
+# ---------------------------------------------------------------------------
 # params
 # ---------------------------------------------------------------------------
 
@@ -149,7 +288,7 @@ def init_params(key: jax.Array, cfg: KGNNConfig) -> dict:
 
 
 # ---------------------------------------------------------------------------
-# propagation (paper Eq. 1/2)
+# propagation (paper Eq. 1/2) — layer math written once, against a view
 # ---------------------------------------------------------------------------
 
 
@@ -178,69 +317,175 @@ def kgat_bi_interaction(p, layer: int, e: jax.Array, e_n: jax.Array, *,
     return add + mul
 
 
-def _kgat_layer(p, layer: int, e: jax.Array, g: CKG,
-                att: jax.Array) -> jax.Array:
-    """One KGAT layer; policies/keys resolve from the ambient ActContext
-    at the scoped sites (``.../spmm``, ``.../w1`` ...)."""
-    e_n = act_spmm(e, g.src, g.dst, att, num_nodes=g.n_nodes,
-                   scope="spmm", layout=g.layout)
-    return kgat_bi_interaction(p, layer, e, e_n)
-
-
-def _kgat_attention(p, e: jax.Array, g: CKG) -> jax.Array:
+def _kgat_attention(p, e: jax.Array, view) -> jax.Array:
     """π(h,r,t) = (W_r e_t)ᵀ tanh(W_r e_h + e_r), softmaxed over dst.
 
     W_r = Σ_b a_rb V_b: basis-projected node tables (B, N, d) are computed
     once, then mixed per edge — O(B·N·d² + E·B·d) instead of O(E·d²).
+    On a shard view the projection runs on local rows, the source side
+    reads the all-gathered + halo-shrunk table, pad edges are masked out
+    of the softmax normalization.
     """
-    proj = jnp.einsum("nd,bdk->bnk", e, p["att_basis"])  # (B, N, d)
-    coef = p["att_coef"][g.rel]                          # (E, B)
-    eh = jnp.einsum("eb,bed->ed", coef, proj[:, g.src])  # (E, d)
-    et = jnp.einsum("eb,bed->ed", coef, proj[:, g.dst])
-    logits = jnp.sum(et * jnp.tanh(eh + p["relation"][g.rel]), axis=-1)
-    return segment_softmax(logits, g.dst, g.n_nodes)
+    proj = jnp.einsum("nd,bdk->bnk", e, p["att_basis"])   # (B, rows, d)
+    proj_t = view.table(proj, axis=1)                     # (B, H, d)
+    coef = p["att_coef"][view.rel]                        # (E, B)
+    eh = jnp.einsum("eb,bed->ed", coef, proj_t[:, view.src])
+    et = jnp.einsum("eb,bed->ed", coef, proj[:, view.dst])
+    logits = jnp.sum(et * jnp.tanh(eh + p["relation"][view.rel]), axis=-1)
+    logits = view.mask_logits(logits)
+    return view.mask_weights(
+        segment_softmax(logits, view.dst, view.num_rows))
 
 
-def _kgcn_layer(p, layer: int, e: jax.Array, g: CKG,
-                ew: jax.Array) -> jax.Array:
+def _kgat_layer(p, layer: int, e: jax.Array, view, att: jax.Array, *,
+                keys: dict | None = None,
+                policies: dict | None = None) -> jax.Array:
+    """One KGAT layer; keys/policies omitted resolve from the ambient
+    ActContext at the scoped sites (``.../spmm``, ``.../w1`` ...)."""
+    k = keys or {}
+    po = policies or {}
+    e_n = act_spmm(view.table(e), view.src, view.dst, att,
+                   num_nodes=view.num_rows, scope="spmm",
+                   layout=view.layout, key=k.get("spmm"),
+                   policy=po.get("spmm"))
+    return kgat_bi_interaction(p, layer, e, e_n, keys=keys,
+                               policies=policies)
+
+
+def _kgcn_layer(p, layer: int, e: jax.Array, view, ew: jax.Array, *,
+                keys: dict | None = None,
+                policies: dict | None = None) -> jax.Array:
     """KGNN-LS graph convolution: σ((Â E)Θ + b) with relation-scored Â."""
-    h = act_spmm(e, g.src, g.dst, ew, num_nodes=g.n_nodes,
-                 scope="spmm", layout=g.layout)
-    j = act_matmul(h + e, p["w"][layer], scope="dense")
+    k = keys or {}
+    po = policies or {}
+    h = act_spmm(view.table(e), view.src, view.dst, ew,
+                 num_nodes=view.num_rows, scope="spmm", layout=view.layout,
+                 key=k.get("spmm"), policy=po.get("spmm"))
+    j = act_matmul(h + e, p["w"][layer], scope="dense",
+                   key=k.get("dense"), policy=po.get("dense"))
     j = j + p["b"][layer]
     return act_nonlin(j, scope="act",
-                      fn="tanh" if layer == len(p["w"]) - 1 else "sigmoid")
+                      fn="tanh" if layer == len(p["w"]) - 1 else "sigmoid",
+                      key=k.get("act"), policy=po.get("act"))
 
 
-def _kgin_layer(p, e: jax.Array, r_emb: jax.Array, g: CKG) -> jax.Array:
+def _kgin_layer(p, e: jax.Array, r_emb: jax.Array, view, *,
+                keys: dict | None = None,
+                policies: dict | None = None) -> jax.Array:
     """Relational path aggregation: e_h' = Σ_{(r,t)} e_r ⊙ e_t (KGIN eq. 8)."""
-    msgs_src = e * 1.0  # (N, d)
+    k = keys or {}
+    po = policies or {}
     # modulate by relation embedding per edge: gather-then-scale is O(E d);
     # act_spmm with per-edge weights handles the scalar part, the vector
     # modulation composes as two spmm passes over (e ⊙ e_r)-projected feats.
-    gathered = msgs_src[g.src] * r_emb[g.rel]     # (E, d)
-    deg = jax.ops.segment_sum(jnp.ones_like(g.dst, dtype=e.dtype), g.dst,
-                              num_segments=g.n_nodes)
-    agg = jax.ops.segment_sum(gathered, g.dst, num_segments=g.n_nodes)
+    gathered = view.table(e)[view.src] * r_emb[view.rel]      # (E, d)
+    gathered = view.mask_messages(gathered)
+    deg = jax.ops.segment_sum(view.edge_ones(e.dtype), view.dst,
+                              num_segments=view.num_rows)
+    agg = jax.ops.segment_sum(gathered, view.dst,
+                              num_segments=view.num_rows)
     agg = agg / jnp.maximum(deg, 1.0)[:, None]
-    return act_nonlin(agg, fn="leaky_relu", scope="act")
+    return act_nonlin(agg, fn="leaky_relu", scope="act",
+                      key=k.get("act"), policy=po.get("act"))
 
 
-def _rgcn_layer(p, layer: int, e: jax.Array, g: CKG) -> jax.Array:
+def _rgcn_layer(p, layer: int, e: jax.Array, view, *,
+                keys: dict | None = None,
+                policies: dict | None = None) -> jax.Array:
     """Basis-decomposed R-GCN: W_r = Σ_b a_rb V_b (basis-first projection)."""
-    # project once per basis: (N, B, d)
+    k = keys or {}
+    po = policies or {}
+    # project once per basis: (rows, B, d)
     proj = jnp.stack([
-        act_matmul(e, p["basis"][b], scope=f"basis{b}")
+        act_matmul(e, p["basis"][b], scope=f"basis{b}",
+                   key=k.get(f"basis{b}"), policy=po.get(f"basis{b}"))
         for b in range(p["basis"].shape[0])
     ], axis=1)
-    coef_e = p["coef"][g.rel]                     # (E, B)
-    msgs = jnp.einsum("eb,ebd->ed", coef_e, proj[g.src])
-    deg = jax.ops.segment_sum(jnp.ones_like(g.dst, dtype=e.dtype), g.dst,
-                              num_segments=g.n_nodes)
-    agg = jax.ops.segment_sum(msgs, g.dst, num_segments=g.n_nodes)
+    coef_e = p["coef"][view.rel]                     # (E, B)
+    msgs = jnp.einsum("eb,ebd->ed", coef_e, view.table(proj)[view.src])
+    msgs = view.mask_messages(msgs)
+    deg = jax.ops.segment_sum(view.edge_ones(e.dtype), view.dst,
+                              num_segments=view.num_rows)
+    agg = jax.ops.segment_sum(msgs, view.dst, num_segments=view.num_rows)
     agg = agg / jnp.maximum(deg, 1.0)[:, None]
-    self_t = act_matmul(e, p["w_self"][layer], scope="self")
-    return act_nonlin(agg + self_t, fn="leaky_relu", scope="act")
+    self_t = act_matmul(e, p["w_self"][layer], scope="self",
+                        key=k.get("self"), policy=po.get("self"))
+    return act_nonlin(agg + self_t, fn="leaky_relu", scope="act",
+                      key=k.get("act"), policy=po.get("act"))
+
+
+def _edge_weights(params: dict, e0: jax.Array, view, cfg: KGNNConfig):
+    """Per-edge weighting data, computed ONCE from the layer-0 embeddings.
+
+    kgat: attention probabilities (E,); kgcn: relation-scored adjacency
+    (E,); kgin: the intent-weighted relation table (R, d) its per-layer
+    modulation reads; rgcn: nothing (coefficients are per-layer params).
+    """
+    if cfg.model == "kgat":
+        return _kgat_attention(params, e0, view)
+    if cfg.model == "kgcn":
+        # relation scores are user-agnostic at graph level (KGNN-LS's
+        # label-smoothed global graph); per-edge weight = softmax over
+        # dst of r·mean
+        logits = jnp.sum(params["relation"][view.rel]
+                         * view.table(e0)[view.src], axis=-1)
+        logits = view.mask_logits(logits)
+        return view.mask_weights(
+            segment_softmax(logits, view.dst, view.num_rows))
+    if cfg.model == "kgin":
+        # intent-weighted relation embeddings
+        alpha = jax.nn.softmax(params["intent"], axis=-1)   # (P, R)
+        r_int = alpha @ params["relation"]                  # (P, d)
+        return params["relation"] + jnp.mean(r_int, 0)      # broadcast
+    if cfg.model == "rgcn":
+        return None
+    raise ValueError(cfg.model)
+
+
+def propagate_view(params: dict, view, cfg: KGNNConfig, *, ctx=None,
+                   site_keys=None, site_policies=None) -> list:
+    """L layers of message passing against a view; returns per-layer outs.
+
+    Exactly one of two resolution modes:
+      * ``ctx`` (an entered ``ActContext``) — ambient per-site resolution
+        under ``layer<l>`` scopes, the single-device path;
+      * ``site_keys``/``site_policies`` — per-layer ``{site: ...}`` dicts
+        pre-derived OUTSIDE a ``shard_map`` body (closed-over tracers are
+        off-limits inside one), the data-parallel path.
+    """
+    e = view.local_rows(params["entity"])
+    outs = [e]
+    weights = _edge_weights(params, e, view, cfg)
+    for l in range(cfg.n_layers):
+        keys = site_keys[l] if site_keys is not None else None
+        pols = site_policies[l] if site_policies is not None else None
+        scope = ctx.scope(f"layer{l}") if ctx is not None \
+            else contextlib.nullcontext()
+        with scope:
+            if cfg.model == "kgat":
+                e = _kgat_layer(params, l, e, view, weights,
+                                keys=keys, policies=pols)
+            elif cfg.model == "kgcn":
+                e = _kgcn_layer(params, l, e, view, weights,
+                                keys=keys, policies=pols)
+            elif cfg.model == "kgin":
+                e = _kgin_layer(params, e, weights, view,
+                                keys=keys, policies=pols)
+            elif cfg.model == "rgcn":
+                e = _rgcn_layer(params, l, e, view,
+                                keys=keys, policies=pols)
+            else:
+                raise ValueError(cfg.model)
+        outs.append(e)
+    return outs
+
+
+def readout(outs: list, cfg: KGNNConfig) -> jax.Array:
+    if cfg.readout == "concat":
+        return jnp.concatenate(outs, axis=-1)
+    if cfg.readout == "sum":
+        return sum(outs)
+    return outs[-1]
 
 
 def propagate(params: dict, g: CKG, cfg: KGNNConfig, *,
@@ -257,48 +502,10 @@ def propagate(params: dict, g: CKG, cfg: KGNNConfig, *,
     """
     ctx = model_context(policy, key)
     ctx.check_key(f"propagate({cfg.model})")
-    e = params["entity"]
-    outs = [e]
-
+    view = FullGraphView(g)
     with ctx, ctx.scope(cfg.model):
-        if cfg.model == "kgat":
-            att = _kgat_attention(params, e, g)
-            for l in range(cfg.n_layers):
-                with ctx.scope(f"layer{l}"):
-                    e = _kgat_layer(params, l, e, g, att)
-                outs.append(e)
-        elif cfg.model == "kgcn":
-            # relation scores are user-agnostic at graph level (KGNN-LS's
-            # label-smoothed global graph); per-edge weight = softmax over
-            # dst of r·mean
-            logits = jnp.sum(params["relation"][g.rel] * e[g.src], axis=-1)
-            ew = segment_softmax(logits, g.dst, g.n_nodes)
-            for l in range(cfg.n_layers):
-                with ctx.scope(f"layer{l}"):
-                    e = _kgcn_layer(params, l, e, g, ew)
-                outs.append(e)
-        elif cfg.model == "kgin":
-            # intent-weighted relation embeddings
-            alpha = jax.nn.softmax(params["intent"], axis=-1)   # (P, R)
-            r_int = alpha @ params["relation"]                  # (P, d)
-            r_emb = params["relation"] + jnp.mean(r_int, 0)     # broadcast
-            for l in range(cfg.n_layers):
-                with ctx.scope(f"layer{l}"):
-                    e = _kgin_layer(params, e, r_emb, g)
-                outs.append(e)
-        elif cfg.model == "rgcn":
-            for l in range(cfg.n_layers):
-                with ctx.scope(f"layer{l}"):
-                    e = _rgcn_layer(params, l, e, g)
-                outs.append(e)
-        else:
-            raise ValueError(cfg.model)
-
-    if cfg.readout == "concat":
-        return jnp.concatenate(outs, axis=-1)
-    if cfg.readout == "sum":
-        return sum(outs)
-    return outs[-1]
+        outs = propagate_view(params, view, cfg, ctx=ctx)
+    return readout(outs, cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -313,10 +520,14 @@ def propagate_spmd(params: dict, g: CKG, cfg: KGNNConfig, *, mesh, axes,
 
     Layout (same scheme as gnn.gcn_forward_spmd, §Perf hillclimb #3):
     entity rows sharded over ``axes``; edges partitioned BY DESTINATION
-    shard (``g.src`` global ids, ``g.dst`` LOCAL row ids). Per layer: one
-    tiled all-gather of the (N, d) entity matrix; edge attention, edge
-    softmax and the weighted scatter all run shard-local. The layer
-    transforms stay GSPMD (row-sharded matmuls).
+    shard (``g.src`` global ids, ``g.dst`` LOCAL row ids). Attention is
+    computed ONCE from the layer-0 embeddings — the same semantics as
+    single-device ``propagate`` and the generic DP step (it used to be
+    recomputed per layer from the evolving embeddings, a silent semantic
+    fork; tests/test_distributed.py pins the aligned behavior against
+    ``propagate``). Per layer: one tiled all-gather of the (N, d) entity
+    matrix; the weighted scatter runs shard-local. The layer transforms
+    stay GSPMD (row-sharded matmuls).
 
     Keys/policies resolve per scoped site like ``propagate``; the SPMM key
     is derived OUTSIDE shard_map (``ctx.scope_path`` + ``key_for``) and
@@ -324,6 +535,10 @@ def propagate_spmd(params: dict, g: CKG, cfg: KGNNConfig, *, mesh, axes,
     shard_map body. The in-body ``act_spmm`` still records its residual
     under the same site name: what each device buffers is Quant(e_full),
     the all-gathered table, which is exactly the recorded shape.
+
+    For end-to-end data-parallel *training* prefer
+    ``repro.training.data_parallel.make_dp_step`` (halo-shrunk gathers,
+    compressed gradient all-reduce, any registered KG arch).
     """
     from repro.sharding.compat import P, shard_map
 
@@ -332,18 +547,27 @@ def propagate_spmd(params: dict, g: CKG, cfg: KGNNConfig, *, mesh, axes,
     ctx.check_key("propagate_spmd(kgat)")
     e = params["entity"]
 
-    def layer_local(e_loc, basis, src_g, dst_l, rel, coef, r_emb, att_key,
-                    *, spmm_policy):
+    def att_local(e_loc, basis, src_g, dst_l, rel, coef, r_emb):
         # e_loc (N/D, d) local entity rows; src_g GLOBAL ids, dst_l LOCAL
         # dst rows (edges pre-partitioned by destination shard)
         proj_loc = jnp.einsum("nd,bdk->bnk", e_loc, basis)  # (B, N/D, d)
         proj_full = jax.lax.all_gather(proj_loc, axes, axis=1, tiled=True)
-        e_full = jax.lax.all_gather(e_loc, axes, axis=0, tiled=True)
         eh = jnp.einsum("eb,bed->ed", coef[rel], proj_full[:, src_g])
         et = jnp.einsum("eb,bed->ed", coef[rel], proj_loc[:, dst_l])
         logits = jnp.sum(et * jnp.tanh(eh + r_emb[rel]), axis=-1)
-        att = segment_softmax(logits, dst_l, e_loc.shape[0])
-        return act_spmm(e_full, src_g, dst_l, att,
+        return segment_softmax(logits, dst_l, e_loc.shape[0])
+
+    att_fn = shard_map(
+        att_local, mesh=mesh,
+        in_specs=(P(axes, None), P(None, None, None), P(axes), P(axes),
+                  P(axes), P(None, None), P(None, None)),
+        out_specs=P(axes))
+    att = att_fn(e, params["att_basis"], g.src, g.dst, g.rel,
+                 params["att_coef"], params["relation"])
+
+    def layer_local(e_loc, src_g, dst_l, att_e, att_key, *, spmm_policy):
+        e_full = jax.lax.all_gather(e_loc, axes, axis=0, tiled=True)
+        return act_spmm(e_full, src_g, dst_l, att_e,
                         num_nodes=e_loc.shape[0], key=att_key,
                         policy=spmm_policy)
 
@@ -357,12 +581,9 @@ def propagate_spmd(params: dict, g: CKG, cfg: KGNNConfig, *, mesh, axes,
                 spmd_layer = shard_map(
                     functools.partial(layer_local, spmm_policy=pol or FP32),
                     mesh=mesh,
-                    in_specs=(P(axes, None), P(None, None, None), P(axes),
-                              P(axes), P(axes), P(None, None), P(None, None),
-                              P()),
+                    in_specs=(P(axes, None), P(axes), P(axes), P(axes), P()),
                     out_specs=P(axes, None))
-                e_n = spmd_layer(e, params["att_basis"], g.src, g.dst, g.rel,
-                                 params["att_coef"], params["relation"],
+                e_n = spmd_layer(e, g.src, g.dst, att,
                                  k_spmm if k_spmm is not None
                                  else jax.random.PRNGKey(0))
                 e = kgat_bi_interaction(params, l, e, e_n)
@@ -387,6 +608,33 @@ def bpr_loss(params: dict, g: CKG, batch: dict, cfg: KGNNConfig, *,
     loss = -jnp.mean(jax.nn.log_sigmoid(pos - neg))
     reg = sum(jnp.sum(x ** 2) for x in jax.tree_util.tree_leaves(params))
     return loss + cfg.l2 * reg
+
+
+def kg_shard_loss(params: dict, view, batch: dict, cfg: KGNNConfig, *,
+                  site_keys=None, site_policies=None):
+    """One shard's slice of the global BPR objective (plus full L2 reg).
+
+    Runs the SAME ``propagate_view`` layer math as single-device
+    ``propagate`` — there is no hand-inlined DP forward. Returns
+    ``(local_batch_mean_bpr + reg, local_batch_mean_bpr)``; with the
+    batch sharded evenly and params replicated, the shard-mean of the
+    first element is exactly the global objective.
+    """
+    outs = propagate_view(params, view, cfg, site_keys=site_keys,
+                          site_policies=site_policies)
+    reps = view.unshard(readout(outs, cfg))
+    pos = score_pairs(reps, batch["user"], batch["pos"], cfg.n_users)
+    neg = score_pairs(reps, batch["user"], batch["neg"], cfg.n_users)
+    loss_loc = -jnp.mean(jax.nn.log_sigmoid(pos - neg))
+    reg = sum(jnp.sum(x ** 2) for x in jax.tree_util.tree_leaves(params))
+    return loss_loc + cfg.l2 * reg, loss_loc
+
+
+def kg_shard_reps(params: dict, view, cfg: KGNNConfig, *,
+                  site_keys=None, site_policies=None) -> jax.Array:
+    """This shard's rows of the readout representations (parity tests)."""
+    return readout(propagate_view(params, view, cfg, site_keys=site_keys,
+                                  site_policies=site_policies), cfg)
 
 
 # Memory accounting (paper Table 5) is derived from the residual trace —

@@ -1,0 +1,248 @@
+"""Model-step registry: ``--arch <id>`` -> one ``ModelStep`` (DESIGN.md §9).
+
+One builder per family turns an ``ArchSpec`` (plus optional data
+overrides) into the single step definition everything consumes — the
+launcher's generic driver, ``make_train_step``, the data-parallel
+wrapper, the examples and the paper-table benchmarks. The builders are
+thin: they bind the EXISTING layer functions (``models.kgnn``,
+``models.gnn``, ``models.transformer``, ``models.recsys``) to a dataset
+and a config; no model math lives here.
+
+KG steps carry a ``DPSpec`` (edges dst-sharded, params replicated,
+``kg_shard_loss`` as the in-``shard_map`` objective), so kgat, kgcn and
+kgin all get compressed-gradient data parallelism through the same
+``make_dp_step``. Non-graph families carry an honest
+``dp_unsupported`` reason instead.
+
+    step = build_step("kgcn", schedule=schedule)
+    train_step = make_train_step(step, adam(step.lr), schedule=schedule,
+                                 root_key=root)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get
+from repro.configs.base import ArchSpec
+from repro.training.step import DPSpec, ModelStep, enter_or_null
+
+__all__ = ["build_step", "register_family", "kg_dp_spec", "kg_archs",
+           "FAMILY_BUILDERS"]
+
+FAMILY_BUILDERS: dict[str, Callable] = {}
+
+
+def register_family(*families: str):
+    def deco(fn):
+        for f in families:
+            FAMILY_BUILDERS[f] = fn
+        return fn
+    return deco
+
+
+def build_step(arch: str | ArchSpec, *, schedule=None, **overrides) -> ModelStep:
+    """Resolve an arch id (or spec) to its registered ``ModelStep``.
+
+    ``schedule`` is the run's policy schedule — builders that need it at
+    data-build time (blocked-CSR layout attachment) look at its
+    ``kernel``; per-step policy resolution still happens inside the
+    ``ActContext`` at trace time. ``overrides`` are family-specific
+    (e.g. ``ds=``/``cfg=``/``batch_size=`` for KG steps) so examples and
+    benchmarks can bring their own sizes while reusing the same wiring.
+    """
+    spec = get(arch) if isinstance(arch, str) else arch
+    if spec.family not in FAMILY_BUILDERS:
+        raise KeyError(f"no step builder registered for family "
+                       f"{spec.family!r} (arch {spec.name!r}); have "
+                       f"{sorted(FAMILY_BUILDERS)}")
+    return FAMILY_BUILDERS[spec.family](spec, schedule=schedule, **overrides)
+
+
+def kg_archs() -> tuple[str, ...]:
+    """Registered KG arch ids (the paper's models), registry order."""
+    return tuple(n for n, a in ARCHS.items() if a.family == "kgnn")
+
+
+# ---------------------------------------------------------------------------
+# kgnn family: kgat / kgcn / kgin — BPR over a collaborative KG
+# ---------------------------------------------------------------------------
+
+
+def kg_dp_spec(cfg, graph=None) -> DPSpec:
+    """The KG data-parallel contract: edges dst-sharded, params
+    replicated, batch sharded; the in-shard objective is
+    ``kgnn.kg_shard_loss`` running the same ``propagate_view`` layer
+    math as the single-device step."""
+    from repro.models import kgnn
+
+    return DPSpec(
+        graph=graph, scope=cfg.model, sites=kgnn.model_sites(cfg),
+        n_layers=cfg.n_layers,
+        shard_loss=functools.partial(kgnn.kg_shard_loss, cfg=cfg),
+        shard_reps=functools.partial(kgnn.kg_shard_reps, cfg=cfg))
+
+
+@register_family("kgnn")
+def _kgnn_step(arch: ArchSpec, *, schedule=None, ds=None, cfg=None,
+               batch_size: int = 512, data_seed: int = 2,
+               lr: float = 3e-3, dim: int = 32,
+               n_layers: int = 3) -> ModelStep:
+    from repro.data.csr import maybe_attach_layout
+    from repro.data.synthetic import bpr_batches, gen_kg_dataset
+    from repro.models import kgnn
+
+    if ds is None:
+        ds = gen_kg_dataset(n_users=120, n_items=200, n_attrs=80, seed=0)
+    model = arch.model_cfg.model
+    if cfg is None:
+        cfg = kgnn.KGNNConfig(
+            model=model, n_users=ds.n_users, n_entities=ds.n_entities,
+            n_relations=ds.n_relations, dim=dim, n_layers=n_layers,
+            readout="concat" if model == "kgat" else "sum")
+    g = jax.tree_util.tree_map(jnp.asarray, ds.graph)
+    g = maybe_attach_layout(g, schedule, model=cfg.model)
+
+    def init(key, data_spec=None):
+        return kgnn.init_params(key, cfg)
+
+    def loss(params, batch, *, ctx=None):
+        with enter_or_null(ctx):
+            return kgnn.bpr_loss(params, g, batch, cfg)
+
+    def batches():
+        for b in bpr_batches(ds, batch_size, seed=data_seed):
+            yield jax.tree_util.tree_map(jnp.asarray, b)
+
+    return ModelStep(
+        arch=arch.name, family="kgnn", cfg=cfg, init=init, loss=loss,
+        batches=batches, lr=lr, dp_spec=kg_dp_spec(cfg, g),
+        data={"graph": g, "dataset": ds},
+        data_spec={"n_users": ds.n_users, "n_entities": ds.n_entities,
+                   "n_relations": ds.n_relations,
+                   "n_edges": int(g.src.shape[0])})
+
+
+# ---------------------------------------------------------------------------
+# gnn family: gcn-cora — full-graph node classification
+# ---------------------------------------------------------------------------
+
+
+@register_family("gnn")
+def _gnn_step(arch: ArchSpec, *, schedule=None, n_nodes: int = 300,
+              lr: float = 1e-2) -> ModelStep:
+    from repro.configs.smoke import reduced
+    from repro.data.csr import build_spmm_layout
+    from repro.data.synthetic import cora_like
+    from repro.models import gnn
+
+    cfg = reduced(arch).model_cfg
+    feats, src, dst, labels = cora_like(n_nodes=n_nodes, d_feat=cfg.d_in)
+    x, s, d, y = map(jnp.asarray, (feats, src, dst, labels))
+    layout = build_spmm_layout(src, dst, n_dst=n_nodes) \
+        if getattr(schedule, "kernel", "jnp") == "pallas" else None
+
+    def init(key, data_spec=None):
+        return gnn.init_params(key, cfg)
+
+    def loss(params, batch, *, ctx=None):
+        with enter_or_null(ctx):
+            logits = gnn.gcn_forward(params, x, s, d, n_nodes=n_nodes,
+                                     cfg=cfg, layout=layout)
+        oh = jax.nn.one_hot(y, cfg.n_classes)
+        return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
+
+    def batches():
+        while True:
+            yield {}
+
+    return ModelStep(
+        arch=arch.name, family="gnn", cfg=cfg, init=init, loss=loss,
+        batches=batches, lr=lr, dp_spec=None,
+        dp_unsupported=(
+            "gcn-cora trains full-graph from dense node features; the "
+            "edge-sharded DP path covers the KG entity-embedding steps "
+            "(sharded GCN lives in gnn.gcn_forward_spmd via "
+            "launch.partition)"),
+        data={"features": x, "labels": y},
+        data_spec={"n_nodes": n_nodes, "d_in": cfg.d_in})
+
+
+# ---------------------------------------------------------------------------
+# lm / moe_lm families: next-token CE on synthetic streams
+# ---------------------------------------------------------------------------
+
+
+@register_family("lm", "moe_lm")
+def _lm_step(arch: ArchSpec, *, schedule=None, batch: int = 8,
+             seq: int = 64, lr: float = 1e-3) -> ModelStep:
+    from repro.configs.smoke import reduced
+    from repro.data.synthetic import lm_batches
+    from repro.models import transformer as tf
+
+    cfg = reduced(arch).model_cfg
+
+    def init(key, data_spec=None):
+        return tf.init_params(key, cfg)
+
+    def loss(params, batch_, *, ctx=None):
+        with enter_or_null(ctx):
+            return tf.lm_loss(params, batch_, cfg=cfg)
+
+    def batches():
+        for b in lm_batches(vocab=cfg.vocab, batch=batch, seq=seq, seed=0):
+            yield {"tokens": jnp.asarray(b["tokens"])}
+
+    return ModelStep(
+        arch=arch.name, family=arch.family, cfg=cfg, init=init, loss=loss,
+        batches=batches, lr=lr, dp_spec=None,
+        dp_unsupported=(
+            "the transformer step shards by batch/sequence, not by graph "
+            "edges; LM data parallelism needs batch-sharded loss plus "
+            "replicated-optimizer wiring the edge-sharded SPMD path does "
+            "not provide (use launch.partition's GSPMD cells)"),
+        data_spec={"vocab": cfg.vocab, "batch": batch, "seq": seq})
+
+
+# ---------------------------------------------------------------------------
+# recsys family: fm / wide&deep / dlrm / xdeepfm — CTR logistic loss
+# ---------------------------------------------------------------------------
+
+
+@register_family("recsys")
+def _recsys_step(arch: ArchSpec, *, schedule=None, batch: int = 256,
+                 lr: float = 1e-3) -> ModelStep:
+    from repro.configs.smoke import reduced
+    from repro.data.synthetic import criteo_batches
+    from repro.models import recsys
+
+    cfg = reduced(arch).model_cfg
+
+    def init(key, data_spec=None):
+        return recsys.init_params(key, cfg)
+
+    def loss(params, batch_, *, ctx=None):
+        with enter_or_null(ctx):
+            logits = recsys.forward(params, batch_, cfg)
+        lab = batch_["label"]
+        return -jnp.mean(lab * jax.nn.log_sigmoid(logits)
+                         + (1 - lab) * jax.nn.log_sigmoid(-logits))
+
+    def batches():
+        for b in criteo_batches(batch=batch, n_dense=max(cfg.n_dense, 1),
+                                vocab_sizes=cfg.vocab_sizes, seed=3):
+            yield jax.tree_util.tree_map(jnp.asarray, b)
+
+    return ModelStep(
+        arch=arch.name, family="recsys", cfg=cfg, init=init, loss=loss,
+        batches=batches, lr=lr, dp_spec=None,
+        dp_unsupported=(
+            "recsys steps have no graph to edge-shard; DLRM-scale "
+            "parallelism is embedding-table model parallelism (a "
+            "different axis — see launch.partition), not this "
+            "edge-sharded DP path"),
+        data_spec={"batch": batch, "n_sparse": cfg.n_sparse})

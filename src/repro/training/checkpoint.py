@@ -23,15 +23,22 @@ import jax
 import numpy as np
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "CheckpointManager"]
+           "check_meta", "CheckpointManager"]
 
 
 def _step_dir(base: str, step: int) -> str:
     return os.path.join(base, f"step_{step:010d}")
 
 
-def save_checkpoint(base: str, step: int, tree, *, keep: int = 3) -> str:
-    """Synchronous atomic save. Returns the checkpoint directory."""
+def save_checkpoint(base: str, step: int, tree, *, keep: int = 3,
+                    meta: dict | None = None) -> str:
+    """Synchronous atomic save. Returns the checkpoint directory.
+
+    ``meta`` is an arbitrary JSON-serializable identity dict (arch id,
+    schedule spec, ... — see ``repro.training.step.step_metadata``)
+    stored in the manifest; ``restore_checkpoint`` refuses checkpoints
+    whose stored identity contradicts the expected one.
+    """
     os.makedirs(base, exist_ok=True)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     final = _step_dir(base, step)
@@ -48,6 +55,8 @@ def save_checkpoint(base: str, step: int, tree, *, keep: int = 3) -> str:
         "shapes": [list(np.shape(x)) for x in leaves],
         "dtypes": [str(np.asarray(x).dtype) for x in leaves],
     }
+    if meta is not None:
+        manifest["meta"] = meta
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -79,16 +88,44 @@ def latest_step(base: str) -> int | None:
     return max(steps) if steps else None
 
 
-def restore_checkpoint(base: str, template, *, step: int | None = None):
+def check_meta(stored: dict | None, expected: dict | None,
+               where: str = "") -> None:
+    """Refuse a checkpoint whose stored identity contradicts the run's.
+
+    Only keys present in BOTH dicts are compared (legacy checkpoints
+    without metadata restore as before; extra keys on either side are
+    informational, not contractual).
+    """
+    if not stored or not expected:
+        return
+    bad = {k: (stored[k], expected[k]) for k in stored
+           if k in expected and stored[k] != expected[k]}
+    if bad:
+        detail = ", ".join(f"{k}: checkpoint={s!r} run={e!r}"
+                           for k, (s, e) in sorted(bad.items()))
+        raise ValueError(
+            f"checkpoint{' at ' + where if where else ''} was written for "
+            f"a different run ({detail}); refusing a silent mismatch — "
+            "point --ckpt at a fresh directory or match the original "
+            "arch/schedule")
+
+
+def restore_checkpoint(base: str, template, *, step: int | None = None,
+                       expect_meta: dict | None = None):
     """Restore onto ``template``'s structure/dtypes/shardings.
 
     Returns (step, tree) or (None, template) when no checkpoint exists.
+    ``expect_meta`` (arch id, schedule spec, ...) is validated against
+    the manifest's stored metadata via ``check_meta``.
     """
     if step is None:
         step = latest_step(base)
     if step is None:
         return None, template
     d = _step_dir(base, step)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    check_meta(manifest.get("meta"), expect_meta, where=d)
     with np.load(os.path.join(d, "arrays.npz")) as z:
         leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
     t_leaves, treedef = jax.tree_util.tree_flatten(template)
@@ -105,12 +142,19 @@ def restore_checkpoint(base: str, template, *, step: int | None = None):
 
 
 class CheckpointManager:
-    """Async keep-k checkpointing with a single background writer thread."""
+    """Async keep-k checkpointing with a single background writer thread.
 
-    def __init__(self, base: str, *, keep: int = 3, asynchronous: bool = True):
+    ``meta`` (e.g. ``step_metadata(step, schedule_spec)``) is stamped
+    into every save and enforced on every restore, so a checkpoint
+    written for one arch/schedule can't silently resume another.
+    """
+
+    def __init__(self, base: str, *, keep: int = 3,
+                 asynchronous: bool = True, meta: dict | None = None):
         self.base = base
         self.keep = keep
         self.asynchronous = asynchronous
+        self.meta = meta
         self._thread: threading.Thread | None = None
 
     def save(self, step: int, tree) -> None:
@@ -121,10 +165,11 @@ class CheckpointManager:
         if self.asynchronous:
             self._thread = threading.Thread(
                 target=save_checkpoint, args=(self.base, step, host_tree),
-                kwargs={"keep": self.keep}, daemon=True)
+                kwargs={"keep": self.keep, "meta": self.meta}, daemon=True)
             self._thread.start()
         else:
-            save_checkpoint(self.base, step, host_tree, keep=self.keep)
+            save_checkpoint(self.base, step, host_tree, keep=self.keep,
+                            meta=self.meta)
 
     def wait(self) -> None:
         if self._thread is not None:
@@ -133,4 +178,5 @@ class CheckpointManager:
 
     def restore(self, template, *, step: int | None = None):
         self.wait()
-        return restore_checkpoint(self.base, template, step=step)
+        return restore_checkpoint(self.base, template, step=step,
+                                  expect_meta=self.meta)

@@ -1,16 +1,24 @@
-"""Compressed-gradient data-parallel KGAT training (DESIGN.md §7).
+"""Compressed-gradient data parallelism for ANY registered KG step
+(DESIGN.md §7 + §9).
 
-The end-to-end story the compat layer unlocks: edges dst-partitioned by
-``repro.data.csr.partition_edges``, the full KGAT step (attention, edge
+The end-to-end story: edges dst-partitioned by
+``repro.data.csr.partition_edges``, the full step (edge weights, edge
 softmax, ACT-compressed SPMM + transforms, BPR loss, backward) runs
 per-shard inside one ``shard_map``, and gradients of the replicated
 params all-reduce through the INT8 stochastic-rounding ``psum`` of
 ``repro.training.compress``.
 
-Semantics are pinned to the single-device ``kgnn.propagate``/``bpr_loss``
-pair, not to ``propagate_spmd`` (which recomputes attention per layer):
+There is no per-model DP forward here anymore: the ``shard_map`` body
+builds a ``kgnn.ShardGraphView`` and runs the step's own
+``DPSpec.shard_loss`` — the SAME ``propagate_view`` layer functions the
+single-device step traces — so kgat, kgcn and kgin (and any future
+registered KG arch) share one wrapper. ``propagate_spmd`` now matches
+these semantics too (attention once, from the layer-0 embeddings); the
+old per-layer-recomputed-attention fork is gone.
 
-  * attention is computed ONCE from the layer-0 embeddings;
+Exactness contract (pinned by tests/test_data_parallel.py per arch):
+
+  * edge weights are computed ONCE from the layer-0 embeddings;
   * within a shard, edges keep their original relative order, so each
     destination row accumulates in the same order as the unsharded
     ``segment_sum`` — with exact compression and ``compress_grads=False``
@@ -21,9 +29,10 @@ pair, not to ``propagate_spmd`` (which recomputes attention per layer):
     INT8 gradient all-reduce) — the multi-seed mean test pins this.
 
 Per-site ACT policies and stochastic-rounding keys resolve through the
-ordinary ``ActContext`` machinery (same ``kgat/layer<l>/<site>`` scopes
-as ``propagate``) but are derived OUTSIDE the shard_map body and ride in
-as replicated args: closed-over tracers are off-limits inside a body.
+ordinary ``ActContext`` machinery (same ``<arch>/layer<l>/<site>``
+scopes as ``propagate``, with the site table supplied by
+``DPSpec.sites``) but are derived OUTSIDE the shard_map body and ride
+in as replicated args: closed-over tracers are off-limits inside a body.
 
 Each shard's SPMM gathers only its halo rows (the unique remote sources
 ``partition_edges`` precomputed) out of the all-gathered table, so the
@@ -35,29 +44,20 @@ its jnp backend here; the blocked-CSR Pallas path stays single-device
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
-from repro.core import FP32, act_spmm
+from repro.core import FP32
 from repro.core.context import ActContext
 from repro.core.policy import as_schedule
 from repro.core.rng import scope_key
 from repro.data.csr import EdgePartition, partition_edges
-from repro.models.kgnn import (
-    KGNNConfig,
-    kgat_bi_interaction,
-    score_pairs,
-    segment_softmax,
-)
+from repro.models.kgnn import ShardGraphView
 from repro.sharding.compat import P, shard_map
-from repro.training.compress import all_reduce_grads
+from repro.training.step import DPSpec, ModelStep
 
-__all__ = ["partition_graph", "dp_bpr_loss_and_grads", "make_kgat_dp_step"]
-
-_SITES = (("spmm", "spmm"), ("w1", "matmul"), ("w2", "matmul"),
-          ("act1", "nonlin"), ("act2", "nonlin"))
+__all__ = ["partition_graph", "dp_loss_and_grads", "make_dp_step",
+           "dp_forward_reps", "dp_bpr_loss_and_grads", "make_kgat_dp_step"]
 
 
 def partition_graph(g, mesh, *, axis: str = "data") -> EdgePartition:
@@ -69,149 +69,201 @@ def partition_graph(g, mesh, *, axis: str = "data") -> EdgePartition:
         n_nodes=g.n_nodes, n_shards=int(mesh.shape[axis]))
 
 
-def _site_policies(schedule, n_layers: int) -> list[dict]:
+def _as_dp_spec(step: ModelStep | DPSpec) -> DPSpec:
+    if isinstance(step, DPSpec):
+        return step
+    if getattr(step, "dp_spec", None) is None:
+        arch = getattr(step, "arch", "<unknown>")
+        why = getattr(step, "dp_unsupported", None) or \
+            "the step registered no DPSpec"
+        raise NotImplementedError(
+            f"data parallelism is not implemented for arch {arch!r}: {why}")
+    return step.dp_spec
+
+
+def _site_policies(schedule, spec: DPSpec) -> list[dict]:
     """Per-layer {site: ACTPolicy} via the normal scope-glob resolution."""
     sched = as_schedule(schedule) if schedule is not None else None
     ctx = ActContext(sched)
     out = []
-    with ctx, ctx.scope("kgat"):
-        for l in range(n_layers):
+    with ctx, ctx.scope(spec.scope):
+        for l in range(spec.n_layers):
             with ctx.scope(f"layer{l}"):
                 out.append({
                     site: (ctx.policy_for(kind, ctx.scope_path(site))
                            or FP32)
-                    for site, kind in _SITES})
+                    for site, kind in spec.sites})
     return out
 
 
-def _site_keys(root: jax.Array, step, n_layers: int) -> list[dict]:
+def _site_keys(root: jax.Array | None, step_idx, spec: DPSpec) -> list[dict]:
     """Per-layer {site: key}, identical derivation to the ambient context
     (``fold_in(fold_in(root, crc32(scope)), step)``) so a DP step replays
-    the same rounding noise as a single-device step at the same scope."""
-    ctx = ActContext(None, root, step=step)
+    the same rounding noise as a single-device step at the same scope.
+    With no root key (exact-compression runs) every site key is None."""
+    if root is None:
+        return [{site: None for site, _ in spec.sites}
+                for _ in range(spec.n_layers)]
+    ctx = ActContext(None, root, step=step_idx)
     out = []
-    with ctx, ctx.scope("kgat"):
-        for l in range(n_layers):
+    with ctx, ctx.scope(spec.scope):
+        for l in range(spec.n_layers):
             with ctx.scope(f"layer{l}"):
                 out.append({site: ctx.key_for(ctx.scope_path(site))
-                            for site, _ in _SITES})
+                            for site, _ in spec.sites})
     return out
 
 
-def _local_loss(params, sh: dict, batch, *, cfg: KGNNConfig, axis: str,
-                rows: int, n_pad: int, site_keys, policies):
-    """One shard's slice of the global BPR loss (plus full L2 reg).
-
-    ``sh`` holds this shard's edge arrays (squeezed); returns
-    ``(local_batch_mean_bpr + reg, local_batch_mean_bpr)`` so the mean
-    over shards is exactly the global objective.
-    """
-    e_tab = params["entity"]
-    e_pad = jnp.pad(e_tab, ((0, n_pad - e_tab.shape[0]), (0, 0)))
-    i = jax.lax.axis_index(axis)
-    e_loc = jax.lax.dynamic_slice_in_dim(e_pad, i * rows, rows)
-
-    # attention once, from layer-0 embeddings (matches propagate):
-    # basis-projected tables all-gather tiled, then shrink to the halo
-    proj_loc = jnp.einsum("nd,bdk->bnk", e_loc, params["att_basis"])
-    proj_full = jax.lax.all_gather(proj_loc, axis, axis=1, tiled=True)
-    proj_halo = proj_full[:, sh["halo"]]                     # (B, Hc, d)
-    coef = params["att_coef"][sh["rel"]]                     # (Ec, B)
-    eh = jnp.einsum("eb,bed->ed", coef, proj_halo[:, sh["src_h"]])
-    et = jnp.einsum("eb,bed->ed", coef, proj_loc[:, sh["dst_l"]])
-    logits = jnp.sum(et * jnp.tanh(eh + params["relation"][sh["rel"]]), -1)
-    logits = jnp.where(sh["mask"] > 0, logits, -1e30)        # pad edges out
-    att = segment_softmax(logits, sh["dst_l"], rows) * sh["mask"]
-
-    outs = [e_loc]
-    e = e_loc
-    for l in range(cfg.n_layers):
-        keys, pols = site_keys[l], policies[l]
-        e_full = jax.lax.all_gather(e, axis, axis=0, tiled=True)
-        e_halo = e_full[sh["halo"]]                          # (Hc, d_l)
-        e_n = act_spmm(e_halo, sh["src_h"], sh["dst_l"], att,
-                       num_nodes=rows, key=keys["spmm"], policy=pols["spmm"])
-        e = kgat_bi_interaction(params, l, e, e_n, keys=keys, policies=pols)
-        outs.append(e)
-
-    reps_loc = jnp.concatenate(outs, axis=-1) if cfg.readout == "concat" \
-        else sum(outs)
-    reps = jax.lax.all_gather(reps_loc, axis, axis=0, tiled=True)
-    pos = score_pairs(reps, batch["user"], batch["pos"], cfg.n_users)
-    neg = score_pairs(reps, batch["user"], batch["neg"], cfg.n_users)
-    loss_loc = -jnp.mean(jax.nn.log_sigmoid(pos - neg))
-    reg = sum(jnp.sum(x ** 2) for x in jax.tree_util.tree_leaves(params))
-    return loss_loc + cfg.l2 * reg, loss_loc
-
-
-def dp_bpr_loss_and_grads(params, part: EdgePartition, batch, *,
-                          cfg: KGNNConfig, mesh, axis: str = "data",
-                          schedule=None, root_key: jax.Array | None = None,
-                          step=0, compress_grads: bool = True):
-    """Sharded KGAT BPR step core: ``(loss, grads)``, grads all-reduced.
-
-    ``params`` replicated; ``part`` dst-sharded over ``axis``; ``batch``
-    (user/pos/neg, each divisible by the shard count) sharded over
-    ``axis``. ``grads`` come back replicated — already mean-reduced
-    through the compressed (or exact) psum — so the optimizer update
-    stays a plain replicated computation.
-    """
+def _check_contract(part: EdgePartition, mesh, axis: str, batch,
+                    root_key, *, need_key: bool) -> None:
     n_shards = int(mesh.shape[axis])
     if part.n_shards != n_shards:
         raise ValueError(
             f"partition built for {part.n_shards} shards, mesh axis "
             f"{axis!r} has {n_shards}")
-    b = batch["user"].shape[0]
-    if b % n_shards:
-        raise ValueError(f"batch {b} not divisible by {n_shards} shards")
-    if root_key is None:
+    if batch is not None:
+        b = batch["user"].shape[0]
+        if b % n_shards:
+            raise ValueError(
+                f"batch {b} not divisible by {n_shards} shards")
+    if need_key and root_key is None:
         raise ValueError("dp step needs a root key (per-step SR + psum "
                          "compression keys derive from it)")
-    policies = _site_policies(schedule, cfg.n_layers)
-    site_keys = _site_keys(root_key, step, cfg.n_layers)
-    psum_key = scope_key(root_key, "kgat/dp_psum", step)
+
+
+def _part_leaves(part: EdgePartition) -> dict:
+    return {"src_h": part.src_h, "dst_l": part.dst_l,
+            "rel": part.rel, "mask": part.mask, "halo": part.halo}
+
+
+def dp_loss_and_grads(step: ModelStep | DPSpec, params,
+                      part: EdgePartition, batch, *, mesh,
+                      axis: str = "data", schedule=None,
+                      root_key: jax.Array | None = None, step_idx=0,
+                      compress_grads: bool = True):
+    """Sharded step core for any registered KG arch: ``(loss, grads)``.
+
+    ``params`` replicated; ``part`` dst-sharded over ``axis``; ``batch``
+    (user/pos/neg, each divisible by the shard count) sharded over
+    ``axis``. ``grads`` come back replicated — already mean-reduced
+    through the compressed (or exact) psum — so the optimizer update
+    stays a plain replicated computation. ``loss`` is the shard-mean of
+    the local objectives (local batch BPR + full L2), i.e. the global
+    objective.
+    """
+    from repro.training.compress import all_reduce_grads
+
+    spec = _as_dp_spec(step)
+    _check_contract(part, mesh, axis, batch, root_key, need_key=True)
+    policies = _site_policies(schedule, spec)
+    site_keys = _site_keys(root_key, step_idx, spec)
+    psum_key = scope_key(root_key, f"{spec.scope}/dp_psum", step_idx)
 
     def body(params_, part_leaves, batch_, site_keys_, psum_key_):
         sh = {k: v[0] for k, v in part_leaves.items()}  # (1, …) -> (…)
-        loss_fn = functools.partial(
-            _local_loss, sh=sh, batch=batch_, cfg=cfg, axis=axis,
-            rows=part.rows_per_shard, n_pad=part.n_nodes_padded,
-            site_keys=site_keys_, policies=policies)
-        (_, loss_loc), grads = jax.value_and_grad(
+        view = ShardGraphView.from_shard(
+            sh, axis=axis, num_rows=part.rows_per_shard,
+            n_nodes_padded=part.n_nodes_padded)
+
+        def loss_fn(p):
+            return spec.shard_loss(p, view, batch_, site_keys=site_keys_,
+                                   site_policies=policies)
+
+        (total, _), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params_)
         grads = all_reduce_grads(grads, axis, key=psum_key_,
                                  compressed=compress_grads)
-        loss = jax.lax.pmean(loss_loc, axis)
+        loss = jax.lax.pmean(total, axis)
         return loss, grads
 
-    part_leaves = {"src_h": part.src_h, "dst_l": part.dst_l,
-                   "rel": part.rel, "mask": part.mask, "halo": part.halo}
     mapped = shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(axis), P(axis), P(), P()),
         out_specs=(P(), P()))
-    loss, grads = mapped(params, part_leaves, batch, site_keys, psum_key)
-    reg = sum(jnp.sum(x ** 2) for x in jax.tree_util.tree_leaves(params))
-    return loss + cfg.l2 * reg, grads
+    return mapped(params, _part_leaves(part), batch, site_keys, psum_key)
 
 
-def make_kgat_dp_step(cfg: KGNNConfig, part: EdgePartition, mesh, opt, *,
-                      schedule=None, root_key: jax.Array,
-                      axis: str = "data", compress_grads: bool = True):
-    """Jitted ``train_step(state, batch, step)`` for ``Trainer``.
+def dp_forward_reps(step: ModelStep | DPSpec, params,
+                    part: EdgePartition, *, mesh, axis: str = "data",
+                    schedule=None, root_key: jax.Array | None = None,
+                    step_idx=0) -> jax.Array:
+    """Readout representations from the sharded forward (parity tests).
+
+    Returns the (n_nodes, D) table — rows beyond ``part.n_nodes`` (node-
+    space padding) are dropped. With exact compression this is
+    bit-comparable against single-device ``propagate``.
+    """
+    spec = _as_dp_spec(step)
+    if spec.shard_reps is None:
+        raise NotImplementedError(f"{spec.scope}: DPSpec has no shard_reps")
+    _check_contract(part, mesh, axis, None, root_key, need_key=False)
+    policies = _site_policies(schedule, spec)
+    site_keys = _site_keys(root_key, step_idx, spec)
+
+    def body(params_, part_leaves, site_keys_):
+        sh = {k: v[0] for k, v in part_leaves.items()}
+        view = ShardGraphView.from_shard(
+            sh, axis=axis, num_rows=part.rows_per_shard,
+            n_nodes_padded=part.n_nodes_padded)
+        return spec.shard_reps(params_, view, site_keys=site_keys_,
+                               site_policies=policies)
+
+    mapped = shard_map(body, mesh=mesh, in_specs=(P(), P(axis), P()),
+                       out_specs=P(axis, None))
+    reps = mapped(params, _part_leaves(part), site_keys)
+    return reps[:part.n_nodes]
+
+
+def make_dp_step(step: ModelStep | DPSpec, part: EdgePartition, mesh, opt,
+                 *, schedule=None, root_key: jax.Array,
+                 axis: str = "data", compress_grads: bool = True):
+    """Jitted ``train_step(state, batch, step)`` for ``Trainer``, for any
+    KG arch with a ``DPSpec``.
 
     One ``shard_map`` spans loss, backward, and the compressed gradient
     all-reduce; the (replicated) optimizer update runs outside it.
+    Raises ``NotImplementedError`` (naming the arch and why) for steps
+    without a ``DPSpec``.
     """
+    spec = _as_dp_spec(step)
 
     @jax.jit
-    def train_step(state, batch, step):
+    def train_step(state, batch, step_idx):
         params, opt_state = state
-        loss, grads = dp_bpr_loss_and_grads(
-            params, part, batch, cfg=cfg, mesh=mesh, axis=axis,
-            schedule=schedule, root_key=root_key, step=step,
+        loss, grads = dp_loss_and_grads(
+            spec, params, part, batch, mesh=mesh, axis=axis,
+            schedule=schedule, root_key=root_key, step_idx=step_idx,
             compress_grads=compress_grads)
         params, opt_state = opt.update(grads, opt_state, params)
         return (params, opt_state), {"loss": loss}
 
     return train_step
+
+
+# ---------------------------------------------------------------------------
+# legacy KGAT-shaped entry points (thin wrappers over the generic path)
+# ---------------------------------------------------------------------------
+
+
+def dp_bpr_loss_and_grads(params, part: EdgePartition, batch, *, cfg,
+                          mesh, axis: str = "data", schedule=None,
+                          root_key: jax.Array | None = None, step=0,
+                          compress_grads: bool = True):
+    """Config-shaped wrapper around ``dp_loss_and_grads`` (any KG model)."""
+    from repro.models.registry import kg_dp_spec
+
+    return dp_loss_and_grads(
+        kg_dp_spec(cfg), params, part, batch, mesh=mesh, axis=axis,
+        schedule=schedule, root_key=root_key, step_idx=step,
+        compress_grads=compress_grads)
+
+
+def make_kgat_dp_step(cfg, part: EdgePartition, mesh, opt, *,
+                      schedule=None, root_key: jax.Array,
+                      axis: str = "data", compress_grads: bool = True):
+    """Config-shaped wrapper around ``make_dp_step`` (any KG model)."""
+    from repro.models.registry import kg_dp_spec
+
+    return make_dp_step(
+        kg_dp_spec(cfg), part, mesh, opt, schedule=schedule,
+        root_key=root_key, axis=axis, compress_grads=compress_grads)

@@ -1,0 +1,148 @@
+"""The model-step registry's step type: ONE step definition per arch.
+
+TinyKG's claim is framework-level — *any* KGNN trains with compressed
+activations — and scaling work (Data Tiering, Min et al. 2022) assumes
+the training step is a reusable unit. ``ModelStep`` is that unit
+(DESIGN.md §9): the launcher, the ``Trainer``, the data-parallel wrapper
+(``repro.training.data_parallel.make_dp_step``), the examples and the
+benchmarks all consume the same object instead of re-deriving a step per
+model.
+
+Protocol (structural — ``repro.models.registry`` builds concrete
+instances from the existing layer functions):
+
+  * ``init(key, data_spec=None) -> params`` — parameter pytree;
+  * ``loss(params, batch, *, ctx=None) -> scalar`` — the training
+    objective, with every ACT site resolved through the ordinary
+    ``ActContext`` scopes. ``ctx`` is entered by the step (pass a fresh
+    ``act_context(schedule, root, step=i)`` per trace); ``ctx=None``
+    leaves ambient resolution to the caller (e.g. a recording context
+    for ``traced_activation_report``);
+  * ``dp_spec`` — what is replicated vs edge-sharded (``DPSpec``), or
+    ``None`` with ``dp_unsupported`` naming why data parallelism does
+    not apply;
+  * ``batches() -> iterator`` — the step's default data stream (the
+    launcher's; examples/benchmarks bring their own sizes).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, Iterator, Protocol, runtime_checkable
+
+import jax
+
+from repro.core import act_context
+
+__all__ = ["DPSpec", "ModelStep", "ModelStepProtocol", "make_train_step",
+           "step_metadata"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DPSpec:
+    """What a step shards vs replicates under data parallelism.
+
+    Params stay replicated (gradients all-reduce through the compressed
+    psum); ``graph`` is the COO edge structure to dst-partition
+    (``repro.data.csr.partition_edges``); the batch shards evenly over
+    the mesh axis. ``sites`` lists the per-layer ACT sites
+    ``(name, op_kind)`` whose policies/keys must be pre-resolved OUTSIDE
+    the ``shard_map`` body, under ``<scope>/layer<l>/<site>`` scopes —
+    the same paths the single-device step uses, so a DP step replays the
+    same rounding noise at the same sites.
+    """
+
+    graph: Any                     # CKG to dst-partition
+    scope: str                     # root scope name (e.g. "kgat")
+    sites: tuple                   # ((site_name, op_kind), ...) per layer
+    n_layers: int
+    # (params, view, batch, *, site_keys, site_policies)
+    #   -> (local objective incl. reg, local batch loss)
+    shard_loss: Callable = None
+    # (params, view, *, site_keys, site_policies) -> local readout rows;
+    # optional, used by the forward-parity tests
+    shard_reps: Callable | None = None
+
+
+@runtime_checkable
+class ModelStepProtocol(Protocol):
+    arch: str
+    dp_spec: DPSpec | None
+
+    def init(self, key, data_spec=None): ...
+
+    def loss(self, params, batch, *, ctx=None): ...
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelStep:
+    """Concrete step record the registry builds (see module docstring).
+
+    ``init``/``loss``/``batches`` are plain callables bound over the
+    step's config and data, so the dataclass satisfies
+    ``ModelStepProtocol`` by attribute access.
+    """
+
+    arch: str                      # registry id ("kgat", "fm", ...)
+    family: str                    # kgnn | gnn | recsys | lm | moe_lm
+    cfg: Any                       # model config dataclass
+    init: Callable                 # init(key, data_spec=None) -> params
+    loss: Callable                 # loss(params, batch, *, ctx=None)
+    batches: Callable[[], Iterator]
+    lr: float = 1e-3               # launcher default learning rate
+    dp_spec: DPSpec | None = None
+    dp_unsupported: str | None = None   # why dp_spec is None, for errors
+    data: dict = dataclasses.field(default_factory=dict)  # bound data refs
+    data_spec: dict = dataclasses.field(default_factory=dict)  # shapes/sizes
+
+    def metadata(self) -> dict:
+        """Checkpoint-facing identity (see ``step_metadata``)."""
+        return {"arch": self.arch, "family": self.family,
+                "model": getattr(self.cfg, "model", self.family)}
+
+
+def step_metadata(step: ModelStep, schedule_spec: str | None = None) -> dict:
+    """Identity a checkpoint carries so restore can't silently mismatch.
+
+    ``schedule_spec`` is the CLI-level policy string (``"int8"``,
+    ``"first_layer_int8_rest_int2"``, ...): restoring a run under a
+    different arch or schedule is almost always a mistake — the
+    ``CheckpointManager`` refuses it instead of producing silently-wrong
+    training.
+    """
+    meta = step.metadata()
+    if schedule_spec is not None:
+        meta["schedule"] = str(schedule_spec)
+    return meta
+
+
+def make_train_step(step: ModelStep, opt, *, schedule=None,
+                    root_key: jax.Array | None = None):
+    """Jitted single-device ``train_step(state, batch, i)`` for ``Trainer``.
+
+    Each trace enters a fresh ``act_context(schedule, root_key, step=i)``
+    so every ACT site resolves its per-site policy and scope-hashed,
+    replay-exact stochastic-rounding key — identical wiring for every
+    registered arch.
+    """
+
+    @jax.jit
+    def train_step(state, batch, i):
+        params, opt_state = state
+
+        def loss_fn(p):
+            ctx = act_context(schedule, root_key, step=i)
+            return step.loss(p, batch, ctx=ctx)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return (params, opt_state), {"loss": loss}
+
+    return train_step
+
+
+def enter_or_null(ctx) -> contextlib.AbstractContextManager:
+    """``with enter_or_null(ctx):`` — ambient entry when a context is
+    given, no-op otherwise (the ``loss(..., ctx=None)`` contract)."""
+    return ctx if ctx is not None else contextlib.nullcontext()

@@ -105,12 +105,16 @@ class Trainer:
 
     def __init__(self, train_step: Callable, state, data_iter: Iterator,
                  cfg: TrainerConfig, *, eval_fn: Callable | None = None,
-                 log_fn: Callable = print):
+                 log_fn: Callable = print, ckpt_meta: dict | None = None):
         self.train_step = train_step
         self.state = state
         self.cfg = cfg
         self.data = PrefetchIterator(data_iter, timeout_s=cfg.fetch_timeout_s)
-        self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
+        # ckpt_meta (arch id + schedule spec, see step_metadata) rides in
+        # every manifest and is enforced on restore — a checkpoint from a
+        # different arch/schedule fails loudly instead of resuming wrong
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep,
+                                      meta=ckpt_meta)
         self.eval_fn = eval_fn
         self.log = log_fn
         self.step = 0

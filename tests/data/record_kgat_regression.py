@@ -1,0 +1,79 @@
+"""Record the single-device KGAT step pin values (tests/test_model_step.py).
+
+Run from the repo root against a known-good tree (it was first run against
+the pre-registry code, so the recorded values pin the refactor to the
+original numerics):
+
+    PYTHONPATH=src python tests/data/record_kgat_regression.py
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core import act_context
+from repro.core.policy import parse_schedule
+from repro.models import kgnn
+from repro.training.optimizer import adam
+
+
+def build_case():
+    rng = np.random.default_rng(0)
+    cfg = kgnn.KGNNConfig(model="kgat", n_users=16, n_entities=48,
+                          n_relations=5, dim=8, n_layers=2, n_bases=2,
+                          readout="concat")
+    N, E, B = cfg.n_nodes, 200, 32
+    g = kgnn.CKG(src=jnp.asarray(rng.integers(0, N, E), jnp.int32),
+                 dst=jnp.asarray(rng.integers(0, N, E), jnp.int32),
+                 rel=jnp.asarray(rng.integers(0, 5, E), jnp.int32),
+                 n_nodes=N, n_relations=5)
+    params = kgnn.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {
+        "user": jnp.asarray(rng.integers(0, cfg.n_users, B), jnp.int32),
+        "pos": jnp.asarray(rng.integers(0, cfg.n_entities, B), jnp.int32),
+        "neg": jnp.asarray(rng.integers(0, cfg.n_entities, B), jnp.int32)}
+    return cfg, g, params, batch
+
+
+def run_case():
+    cfg, g, params, batch = build_case()
+    schedule = parse_schedule("int8")
+    root = jax.random.PRNGKey(11)
+
+    reps = kgnn.propagate(params, g, cfg)
+
+    def loss_fn(p):
+        with act_context(schedule, root, step=3):
+            return kgnn.bpr_loss(p, g, batch, cfg)
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    opt = adam(1e-2)
+    new_params, _ = opt.update(grads, opt.init(params), params)
+    flat_g, _ = ravel_pytree(grads)
+    flat_p, _ = ravel_pytree(new_params)
+    flat_r = reps.reshape(-1)
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "loss": float(loss),
+        "reps_sample": [float(x) for x in np.asarray(flat_r[::173])],
+        "reps_abs_sum": float(jnp.abs(flat_r).sum()),
+        "grads_sample": [float(x) for x in np.asarray(flat_g[::173])],
+        "grads_abs_sum": float(jnp.abs(flat_g).sum()),
+        "params_after_sample": [float(x) for x in np.asarray(flat_p[::173])],
+        "params_after_abs_sum": float(jnp.abs(flat_p).sum()),
+    }
+
+
+if __name__ == "__main__":
+    out = run_case()
+    path = os.path.join(os.path.dirname(__file__), "kgat_step_regression.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"recorded -> {path}")
+    print(json.dumps({k: v for k, v in out.items()
+                      if not isinstance(v, list)}, indent=1))

@@ -1,0 +1,234 @@
+"""The model-step registry (DESIGN.md §9): one step definition per arch.
+
+Covers: registry construction for every --arch id, the ModelStep
+protocol surface, DPSpec presence/absence with honest reasons, the
+generic train-step wiring, checkpoint run-identity metadata, and the
+bit-identical regression pin for the single-device KGAT step (recorded
+against the pre-registry code — the refactor must not move a single
+bit on the pinned toolchain).
+"""
+
+import importlib.util
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get
+from repro.models.registry import build_step, kg_archs, kg_dp_spec
+from repro.training.step import (DPSpec, ModelStep, ModelStepProtocol,
+                                 make_train_step, step_metadata)
+
+_DATA = os.path.join(os.path.dirname(__file__), "data")
+
+FAST_ARCHS = ("kgat", "kgcn", "kgin", "gcn-cora", "fm")
+
+
+def _finite(tree) -> bool:
+    return all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# registry construction + protocol surface
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", FAST_ARCHS)
+def test_registry_step_trains_one_loss(arch):
+    """build_step + init + one loss/grad evaluation for the cheap archs."""
+    step = build_step(arch)
+    assert isinstance(step, ModelStep)
+    assert isinstance(step, ModelStepProtocol)
+    assert step.arch == arch
+    params = step.init(jax.random.PRNGKey(0))
+    batch = next(iter(step.batches()))
+    loss, grads = jax.value_and_grad(
+        lambda p: step.loss(p, batch))(params)
+    assert np.isfinite(float(loss))
+    assert _finite(grads)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", sorted(set(ARCHS) - set(FAST_ARCHS)))
+def test_registry_step_builds_every_arch(arch):
+    """Every remaining --arch id resolves to a constructible step."""
+    step = build_step(arch)
+    assert isinstance(step, ModelStepProtocol)
+    params = step.init(jax.random.PRNGKey(0))
+    assert _finite(params)
+    batch = next(iter(step.batches()))
+    assert np.isfinite(float(step.loss(params, batch)))
+
+
+def test_dp_spec_for_every_kg_arch_only():
+    """KG archs carry a DPSpec (graph + sites + shard_loss); non-graph
+    families carry an honest reason instead."""
+    assert set(kg_archs()) == {"kgat", "kgcn", "kgin"}
+    for arch in kg_archs():
+        spec = build_step(arch).dp_spec
+        assert isinstance(spec, DPSpec)
+        assert spec.graph is not None and spec.shard_loss is not None
+        assert spec.n_layers >= 1 and len(spec.sites) >= 1
+        assert spec.scope == get(arch).model_cfg.model
+    for arch in ("fm", "gcn-cora"):
+        step = build_step(arch)
+        assert step.dp_spec is None
+        assert step.dp_unsupported  # names why, not just "no"
+
+
+def test_make_dp_step_refuses_without_spec_naming_arch():
+    from repro.training.data_parallel import make_dp_step
+
+    step = build_step("fm")
+    with pytest.raises(NotImplementedError) as ei:
+        make_dp_step(step, None, None, None, root_key=jax.random.PRNGKey(0))
+    msg = str(ei.value)
+    assert "'fm'" in msg and "edge-shard" in msg
+
+
+def test_model_sites_tables():
+    from repro.models import kgnn
+
+    cfg = lambda m: kgnn.KGNNConfig(model=m, n_bases=2)  # noqa: E731
+    assert [s for s, _ in kgnn.model_sites(cfg("kgat"))] == \
+        ["spmm", "w1", "w2", "act1", "act2"]
+    assert [s for s, _ in kgnn.model_sites(cfg("kgcn"))] == \
+        ["spmm", "dense", "act"]
+    assert [s for s, _ in kgnn.model_sites(cfg("kgin"))] == ["act"]
+    assert [s for s, _ in kgnn.model_sites(cfg("rgcn"))] == \
+        ["basis0", "basis1", "self", "act"]
+    assert kg_dp_spec(cfg("kgat")).sites == kgnn.model_sites(cfg("kgat"))
+
+
+# ---------------------------------------------------------------------------
+# generic train step + schedules
+# ---------------------------------------------------------------------------
+
+
+def test_make_train_step_runs_and_replays():
+    """Two steps run; re-running step 0 from the same state is
+    bit-deterministic (scope-hashed SR keys fold in the step index)."""
+    from repro.core.policy import parse_schedule
+    from repro.training.optimizer import adam
+
+    step = build_step("kgat")
+    opt = adam(1e-3)
+    train_step = make_train_step(step, opt, schedule=parse_schedule("int2"),
+                                 root_key=jax.random.PRNGKey(5))
+    params = step.init(jax.random.PRNGKey(0))
+    state = (params, opt.init(params))
+    it = step.batches()
+    b0 = next(it)
+    s1, m1 = train_step(state, b0, 0)
+    s2, m2 = train_step(s1, next(it), 1)
+    assert np.isfinite(float(m1["loss"])) and np.isfinite(float(m2["loss"]))
+    s1b, m1b = train_step(state, b0, 0)
+    assert float(m1["loss"]) == float(m1b["loss"])
+    for a, b in zip(jax.tree_util.tree_leaves(s1),
+                    jax.tree_util.tree_leaves(s1b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint run-identity metadata
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_meta_roundtrip_and_mismatch():
+    from repro.training.checkpoint import CheckpointManager
+
+    step = build_step("kgat")
+    meta = step_metadata(step, "int8")
+    assert meta["arch"] == "kgat" and meta["schedule"] == "int8"
+    tree = {"w": np.arange(4.0)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, asynchronous=False, meta=meta)
+        mgr.save(7, tree)
+        got_step, got = mgr.restore(tree)
+        assert got_step == 7
+        np.testing.assert_array_equal(np.asarray(got["w"]), tree["w"])
+        # a different arch refuses to resume
+        wrong = CheckpointManager(d, asynchronous=False,
+                                  meta=step_metadata(build_step("kgcn"),
+                                                     "int8"))
+        with pytest.raises(ValueError, match="different run.*arch"):
+            wrong.restore(tree)
+        # a different schedule refuses too
+        wrong_sched = CheckpointManager(d, asynchronous=False,
+                                        meta=step_metadata(step, "int2"))
+        with pytest.raises(ValueError, match="schedule"):
+            wrong_sched.restore(tree)
+        # a metadata-free reader (legacy) still restores
+        legacy = CheckpointManager(d, asynchronous=False)
+        assert legacy.restore(tree)[0] == 7
+
+
+def test_checkpoint_without_meta_restores_under_expectation():
+    """Legacy checkpoints (no stored meta) restore under any expected
+    meta — only contradictions fail, absence doesn't."""
+    from repro.training.checkpoint import CheckpointManager
+
+    tree = {"w": np.ones(3)}
+    with tempfile.TemporaryDirectory() as d:
+        CheckpointManager(d, asynchronous=False).save(1, tree)
+        mgr = CheckpointManager(d, asynchronous=False,
+                                meta={"arch": "kgat"})
+        assert mgr.restore(tree)[0] == 1
+
+
+def test_trainer_threads_ckpt_meta():
+    from repro.training.trainer import Trainer, TrainerConfig
+
+    step = build_step("kgat")
+    with tempfile.TemporaryDirectory() as d:
+        cfg = TrainerConfig(total_steps=1, ckpt_dir=d, ckpt_every=1,
+                            log_every=1)
+        tr = Trainer(lambda s, b, i: (s, {"loss": jnp.float32(0)}),
+                     {"w": np.zeros(2)}, iter([{}]), cfg,
+                     ckpt_meta=step_metadata(step, "int2"))
+        tr.run()
+        assert tr.ckpt.meta["arch"] == "kgat"
+        other = Trainer(lambda s, b, i: (s, {"loss": jnp.float32(0)}),
+                        {"w": np.zeros(2)}, iter([{}]), cfg,
+                        ckpt_meta=step_metadata(build_step("kgin"), "int2"))
+        with pytest.raises(ValueError, match="different run"):
+            other.restore_if_available()
+
+
+# ---------------------------------------------------------------------------
+# bit-identical regression pin (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_kgat_single_device_step_pinned():
+    """The refactored single-device KGAT step reproduces the recorded
+    pre-refactor values: bit-identical on the recorded toolchain
+    (jax version + backend match), <=2e-5 relative anywhere else
+    (different BLAS/fma contraction only)."""
+    spec = importlib.util.spec_from_file_location(
+        "kgat_regression_case",
+        os.path.join(_DATA, "record_kgat_regression.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    with open(os.path.join(_DATA, "kgat_step_regression.json")) as f:
+        want = json.load(f)
+    got = mod.run_case()
+    exact = (got["jax_version"] == want["jax_version"]
+             and got["backend"] == want["backend"])
+    for k, v in want.items():
+        if k in ("jax_version", "backend"):
+            continue
+        g = np.asarray(got[k], dtype=np.float64)
+        w = np.asarray(v, dtype=np.float64)
+        if exact:
+            np.testing.assert_array_equal(
+                g, w, err_msg=f"{k} moved — the step is no longer "
+                f"bit-identical to the pre-registry code")
+        else:
+            np.testing.assert_allclose(g, w, rtol=2e-5, atol=1e-7,
+                                       err_msg=k)

@@ -138,8 +138,8 @@ def test_kgat_attention_normalized():
         rel=jax.random.randint(jax.random.fold_in(KEY, 2), (E,), 0, 4),
         n_nodes=30, n_relations=4)
     p = kgnn.init_params(KEY, cfg)
-    from repro.models.kgnn import _kgat_attention
-    att = _kgat_attention(p, p["entity"], g)
+    from repro.models.kgnn import FullGraphView, _kgat_attention
+    att = _kgat_attention(p, p["entity"], FullGraphView(g))
     sums = jax.ops.segment_sum(att, g.dst, num_segments=30)
     has_in = jax.ops.segment_sum(jnp.ones(E), g.dst, num_segments=30) > 0
     np.testing.assert_allclose(np.asarray(sums[has_in]), 1.0, rtol=1e-4)
