@@ -22,6 +22,7 @@ import numpy as np
 from repro.core.quant import dequantize as core_deq
 from repro.core.quant import quantize as core_q
 from repro.data.csr import build_spmm_layout
+from repro.kernels import backend as kbackend
 from repro.kernels import ops as kops
 from repro.kernels import spmm as ksp
 
@@ -32,6 +33,13 @@ def _time(fn, *args, reps=5):
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def _mode_fields(op: str) -> dict:
+    """Normalized schema: every record states what actually executed."""
+    info = kbackend.probe_backend()
+    return {"op": op, "mode": kbackend.resolve_mode("auto", op=op),
+            "backend": info.platform}
 
 
 def run_spmm(*, n_nodes=2048, n_edges=16384, dim=128, bits=4) -> list[dict]:
@@ -73,7 +81,8 @@ def run_spmm(*, n_nodes=2048, n_edges=16384, dim=128, bits=4) -> list[dict]:
     unfused_dew = packed_bytes + 2 * n_d + 3 * e_d + n_edges * 4
     fused_dew = packed_bytes + n_d + n_edges * 4
     row = {
-        "op": "spmm", "n_nodes": n_nodes, "n_edges": n_edges, "dim": dim,
+        **_mode_fields("spmm"),
+        "n_nodes": n_nodes, "n_edges": n_edges, "dim": dim,
         "bits": bits,
         "fwd_jnp_us": round(jnp_fwd, 1),
         "fwd_pallas_interp_us": round(pal_fwd, 1),
@@ -108,7 +117,8 @@ def run(*, rows=4096, dim=256) -> list[dict]:
         fused_traffic = fp32_bytes + packed            # read x, write packed
         unfused_traffic = fp32_bytes * 3 + packed      # + codes roundtrip
         out.append({
-            "bits": bits,
+            **_mode_fields("quant_pack"),
+            "bits": bits, "dim": dim,
             "quant_jnp_us": round(jnp_q, 1),
             "quant_pallas_interp_us": round(pal_q, 1),
             "dequant_jnp_us": round(jnp_d, 1),

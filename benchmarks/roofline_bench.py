@@ -1,0 +1,221 @@
+"""Measured kernel roofline: achieved bytes/s and FLOP/s vs modeled peaks.
+
+``launch/roofline.py`` models roofline terms from compiled HLO; this
+module closes the loop by RUNNING the fused kernels and dividing the
+analytic per-call byte/FLOP counts (same accounting as the modeled
+terms) by measured wall-clock, yielding attainment percentages against
+a hardware profile (``HW_PROFILES``) matched to the runtime:
+
+    tpu  -> tpu-v5e      gpu -> a100      cpu -> host
+
+Every row is honest about its execution mode (``mode`` field, from
+``kernels.backend.resolve_mode``):
+
+  * ``compiled`` — native Mosaic/Triton lowering; wall-clock and
+    attainment are real kernel performance. These are the ONLY rows the
+    nightly ``--strict-timing`` gate blocks on.
+  * ``interpret`` — Pallas interpreter (CPU CI). Interpreter wall-clock
+    says nothing about kernel quality, so attainment is computed from
+    the best honest executable path (usually the unfused jnp/XLA
+    reference) and ``why_not`` records, with measured numbers, why the
+    fused kernel did not beat jnp wall-clock on this runner — the
+    per-op explanation the acceptance criteria ask for when no compiled
+    backend exists.
+
+Run directly (``python -m benchmarks.roofline_bench``) or via
+``python -m benchmarks.run --only roofline``; rows land in
+``BENCH_kernels.json`` keyed with ``bench="roofline"`` so they never
+collide with the kernel microbenchmark rows for the same op.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import dequantize as core_deq
+from repro.core.quant import quantize as core_q
+from repro.data.csr import build_spmm_layout
+from repro.kernels import backend as kbackend
+from repro.kernels import ops as kops
+from repro.kernels import spmm as ksp
+from repro.kernels import topk_score as ktk
+from repro.launch.roofline import HW_PROFILES
+
+_PLATFORM_HW = {"tpu": "tpu-v5e", "gpu": "a100", "cuda": "a100",
+                "rocm": "a100", "cpu": "host"}
+
+
+def _median_us(fn, *args, reps: int = 5) -> float:
+    jax.block_until_ready(fn(*args))  # compile outside timing
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def _row(op: str, *, pallas_fn, jnp_fn, model_bytes: float,
+         model_flops: float, hw_name: str, reps: int, **dims) -> dict:
+    """Measure one op and fill the normalized roofline record."""
+    info = kbackend.probe_backend()
+    mode = kbackend.resolve_mode("auto", op=op)
+    impl = (f"pallas-{info.lowering}" if mode == "compiled"
+            else "pallas-interpret")
+    hw = HW_PROFILES[hw_name]
+
+    pallas_us = _median_us(pallas_fn, reps=reps)
+    jnp_us = _median_us(jnp_fn, reps=reps)
+
+    # attainment is only meaningful for a path that actually executes
+    # natively: the compiled kernel when available, else the fastest
+    # honest executable (XLA's unfused jnp lowering)
+    if mode == "compiled":
+        att_us, att_impl = pallas_us, impl
+    else:
+        att_us, att_impl = ((pallas_us, impl) if pallas_us < jnp_us
+                            else (jnp_us, "xla-jnp"))
+    att_s = att_us * 1e-6
+    achieved_bw = model_bytes / att_s
+    achieved_fl = model_flops / att_s
+
+    row = {
+        "bench": "roofline", "op": op, **dims,
+        "mode": mode, "backend": info.platform, "impl": impl,
+        "hw_profile": hw_name,
+        "pallas_us": round(pallas_us, 1),
+        "jnp_us": round(jnp_us, 1),
+        "speedup_vs_jnp": round(jnp_us / pallas_us, 3),
+        "model_bytes": int(model_bytes),
+        "model_flops": int(model_flops),
+        "attainment_impl": att_impl,
+        "achieved_gbs": round(achieved_bw / 1e9, 3),
+        "achieved_gflops": round(achieved_fl / 1e9, 3),
+        "hbm_attainment_pct": round(100 * achieved_bw / hw["hbm_bw"], 2),
+        "flops_attainment_pct": round(100 * achieved_fl
+                                      / hw["peak_flops"], 3),
+    }
+    if mode != "compiled" and pallas_us >= jnp_us:
+        row["why_not"] = (
+            f"no compiled Pallas lowering on backend={info.platform} "
+            f"(interpret mode executes the kernel op-by-op in Python): "
+            f"fused interpret {pallas_us:.0f}us vs unfused jnp "
+            f"{jnp_us:.0f}us; attainment measured on {att_impl}")
+    return row
+
+
+def run(*, reps: int = 5, quick: bool = False) -> list[dict]:
+    info = kbackend.probe_backend()
+    hw_name = _PLATFORM_HW.get(info.platform, "host")
+    scale = 2 if quick else 1
+    rows_n = 4096 // scale
+    dim = 256
+    n_nodes = 2048 // scale
+    n_edges = 16384 // scale
+    bits = 4
+    key = jax.random.PRNGKey(0)
+
+    out = []
+
+    # --- quant / dequant -------------------------------------------------
+    x = jax.random.normal(key, (rows_n, dim))
+    dp = dim * bits // 8
+    out.append(_row(
+        "quant_pack",
+        pallas_fn=lambda: kops.quantize(x, key, bits=bits),
+        jnp_fn=lambda: core_q(x, key, bits=bits),
+        model_bytes=rows_n * dim * 4 + rows_n * dp + 8 * rows_n,
+        model_flops=4.0 * rows_n * dim,
+        hw_name=hw_name, reps=reps, bits=bits, dim=dim, rows=rows_n))
+    q = kops.quantize(x, key, bits=bits)
+    out.append(_row(
+        "dequant_unpack",
+        pallas_fn=lambda: kops.dequantize(q),
+        jnp_fn=lambda: core_deq(q),
+        model_bytes=rows_n * dp + 8 * rows_n + rows_n * dim * 4,
+        model_flops=2.0 * rows_n * dim,
+        hw_name=hw_name, reps=reps, bits=bits, dim=dim, rows=rows_n))
+
+    # --- dequant matmul (∂W path) ---------------------------------------
+    n_cols = 64
+    g = jax.random.normal(key, (rows_n, n_cols))
+    out.append(_row(
+        "dequant_matmul",
+        pallas_fn=lambda: kops.dequant_matmul(q, g),
+        jnp_fn=lambda: core_deq(q).T @ g,
+        model_bytes=(rows_n * dp + 8 * rows_n + rows_n * n_cols * 4
+                     + dim * n_cols * 4),
+        model_flops=2.0 * rows_n * dim * n_cols + 2.0 * rows_n * dim,
+        hw_name=hw_name, reps=reps, bits=bits, dim=dim, rows=rows_n,
+        n=n_cols))
+
+    # --- SPMM forward + ∂ew ---------------------------------------------
+    rng = np.random.default_rng(0)
+    src = jnp.asarray(rng.integers(0, n_nodes, n_edges))
+    dst = jnp.asarray(rng.integers(0, n_nodes, n_edges))
+    d2 = 128
+    xs = jax.random.normal(jax.random.PRNGKey(1), (n_nodes, d2))
+    ew = jax.random.uniform(jax.random.PRNGKey(2), (n_edges,))
+    gs = jax.random.normal(jax.random.PRNGKey(3), (n_nodes, d2))
+    layout = build_spmm_layout(src, dst, n_dst=n_nodes)
+    out.append(_row(
+        "spmm",
+        pallas_fn=lambda: kops.spmm(xs, ew, layout),
+        jnp_fn=lambda: jax.ops.segment_sum(
+            xs[src] * ew[:, None], dst, num_segments=n_nodes),
+        model_bytes=(n_edges * d2 * 4 + n_nodes * d2 * 4
+                     + n_edges * 4 + 2 * n_edges * 4),
+        model_flops=2.0 * n_edges * d2,
+        hw_name=hw_name, reps=reps, dim=d2, n_edges=n_edges,
+        n_nodes=n_nodes))
+    qs = kops.quantize(xs, jax.random.PRNGKey(4), bits=bits)
+    dp2 = d2 * bits // 8
+    out.append(_row(
+        "dequant_sddmm",
+        pallas_fn=lambda: kops.spmm_grad_ew(qs, gs, layout),
+        jnp_fn=lambda: jnp.sum(core_deq(qs)[src] * gs[dst], -1),
+        model_bytes=(n_nodes * dp2 + 8 * n_nodes + n_nodes * d2 * 4
+                     + n_edges * 4 + 2 * n_edges * 4),
+        model_flops=2.0 * n_edges * d2 + 2.0 * n_nodes * d2,
+        hw_name=hw_name, reps=reps, bits=bits, dim=d2, n_edges=n_edges,
+        n_nodes=n_nodes))
+
+    # --- fused top-K retrieval ------------------------------------------
+    n_items, b, k = 4096 // scale, 64, 20
+    xi = jax.random.normal(jax.random.PRNGKey(5), (n_items, d2))
+    qi = kops.quantize(xi, jax.random.PRNGKey(6), bits=8)
+    qv = jax.random.normal(jax.random.PRNGKey(7), (b, d2))
+    excl = jnp.full((b, 8), -1, jnp.int32)
+    dpi = qi.packed.shape[-1]
+
+    def jnp_topk():
+        scores = qv @ core_deq(qi).T
+        return jax.lax.top_k(scores, k)
+
+    out.append(_row(
+        "topk_score",
+        pallas_fn=lambda: ktk.fused_topk_scores(
+            qv, qi.packed, qi.scale, qi.zero, excl, bits=8, dim=d2,
+            k=k, n_items=n_items, interpret=kops.INTERPRET),
+        jnp_fn=jnp_topk,
+        model_bytes=(n_items * dpi + 8 * n_items + b * d2 * 4
+                     + b * 8 * 4 + b * k * 8),
+        model_flops=2.0 * b * n_items * d2,
+        hw_name=hw_name, reps=reps, bits=8, dim=d2, k=k, rows=n_items))
+
+    for r in out:
+        note = f" ({r['why_not'][:40]}...)" if "why_not" in r else ""
+        print(f"[roofline] {r['op']}: mode={r['mode']} "
+              f"pallas {r['pallas_us']:.0f}us jnp {r['jnp_us']:.0f}us | "
+              f"{r['achieved_gbs']:.1f} GB/s = {r['hbm_attainment_pct']}% "
+              f"of {r['hw_profile']} HBM{note}", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -19,14 +19,16 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="fewer steps (CI-speed)")
     ap.add_argument("--only", default=None,
-                    help="table234|table5|table6|fig2|fig3|kernels|serve")
+                    help="table234|table5|table6|fig2|fig3|kernels|serve|"
+                         "roofline")
     ap.add_argument("--out", default="artifacts/bench")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
     steps = 60 if args.quick else 200
 
-    from . import (fig2_curves, fig3_ratio, kernel_bench, serve_bench,
-                   table5_memory_speed, table6_rounding, table234_accuracy)
+    from . import (fig2_curves, fig3_ratio, kernel_bench, roofline_bench,
+                   serve_bench, table5_memory_speed, table6_rounding,
+                   table234_accuracy)
 
     jobs = {
         "table234": lambda: table234_accuracy.run(steps=steps),
@@ -36,6 +38,7 @@ def main() -> None:
         "fig3": lambda: fig3_ratio.run(steps=max(steps * 3 // 4, 40)),
         "kernels": lambda: kernel_bench.run(),
         "serve": lambda: serve_bench.run(requests=60 if args.quick else 200),
+        "roofline": lambda: roofline_bench.run(quick=args.quick),
     }
     if args.only:
         jobs = {args.only: jobs[args.only]}
@@ -49,7 +52,7 @@ def main() -> None:
         summary[name] = rows
         with open(os.path.join(args.out, f"{name}.json"), "w") as f:
             json.dump(rows, f, indent=1)
-        if name in ("kernels", "serve"):
+        if name in ("kernels", "serve", "roofline"):
             gated_rows.extend(rows)
     if gated_rows:
         # perf trajectory tracked across PRs: committed at repo root.

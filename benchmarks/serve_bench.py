@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import backend as kbackend
 from repro.models import kgnn
 from repro.serving import (ServingEngine, build_kgnn_store,
                            padded_pos_lists, streaming_eval_dataset,
@@ -66,8 +67,13 @@ def run(*, requests: int = 200, seed: int = 0) -> list[dict]:
         q = store.user_vectors(jnp.asarray(uids))
         backend = "pallas" if bits is not None else "jnp"
 
+        info = kbackend.probe_backend()
         row = {
             "op": "serve_topk", "model": "kgat",
+            # fp32 stores score via plain jnp (no fused kernel involved)
+            "mode": ("jnp" if bits is None
+                     else kbackend.resolve_mode("auto", op="serve_topk")),
+            "backend": info.platform,
             "bits": bits or "fp32", "dim": mem["dim"], "k": K,
             "store_total_bytes": mem["total_bytes"],
             "store_fp32_bytes": mem["fp32_bytes"],

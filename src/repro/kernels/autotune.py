@@ -1,0 +1,179 @@
+"""Tile-size autotuner for the Pallas kernels, with an on-disk cache.
+
+The kernels used to hard-code their tile sizes (``_pick_block(dp, 512)``,
+``min(d, 512)``, ``block_r = 256`` …). Those are fine defaults for one
+shape on one backend and wrong everywhere else; on TPU the difference
+between a good and a bad ``block_e`` is a VMEM spill. This module makes
+tile selection measured:
+
+  * a **key** is ``(op, shape-bucket, bits, params-domain)`` — shapes are
+    bucketed to the next power of two so one sweep serves a family of
+    nearby shapes instead of re-timing every batch size;
+  * winners live in a JSON cache keyed by the **backend fingerprint**
+    (``backend.probe_backend().fingerprint``), so values tuned on CPU
+    interpret never leak onto a TPU and vice versa;
+  * ``pick()`` is pure-python over *static* shapes, so kernel wrappers
+    may call it while being traced under ``jax.jit`` — a cache hit (or
+    the heuristic default) resolves without running anything. Sweeps only
+    happen when explicitly enabled (``sweep=True`` / ``REPRO_AUTOTUNE=1``)
+    and the wrapper passes a ``measure`` callable, which requires
+    concrete inputs — the benchmarks and the nightly do this; unit tests
+    and jitted training steps ride the cache.
+
+Cache format (versioned, one file, atomic rewrite):
+
+    {"version": 1,
+     "<fingerprint>": {
+        "<key>": {"winner": {...params}, "us": {...per-candidate}}}}
+
+Determinism contract (tested): the same fingerprint + key never
+re-sweeps — a second process loading the file returns the stored winner
+with zero measurements.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Callable, Sequence
+
+from . import backend as _backend
+
+__all__ = ["Autotuner", "get", "reset", "shape_bucket", "DEFAULT_CACHE_PATH"]
+
+DEFAULT_CACHE_PATH = os.environ.get(
+    "REPRO_AUTOTUNE_CACHE",
+    os.path.join("artifacts", "autotune_cache.json"))
+
+_CACHE_VERSION = 1
+
+
+def shape_bucket(n: int) -> int:
+    """Next power of two >= n (1 for n <= 1) — the shape-family key."""
+    if n <= 1:
+        return 1
+    return 1 << (int(n - 1)).bit_length()
+
+
+def _sweep_enabled_default() -> bool:
+    return os.environ.get("REPRO_AUTOTUNE", "0") == "1"
+
+
+class Autotuner:
+    """Measured tile selection with an on-disk, fingerprint-keyed cache."""
+
+    def __init__(self, path: str | None = None, *,
+                 sweep: bool | None = None,
+                 fingerprint: str | None = None,
+                 reps: int = 3):
+        self.path = DEFAULT_CACHE_PATH if path is None else path
+        self.sweep = _sweep_enabled_default() if sweep is None else sweep
+        self.fingerprint = (fingerprint or
+                            _backend.probe_backend().fingerprint)
+        self.reps = reps
+        self.n_sweeps = 0          # measurements performed (test observable)
+        self._cache = self._load()
+
+    # -- persistence ------------------------------------------------------
+
+    def _load(self) -> dict:
+        if self.path and os.path.exists(self.path):
+            try:
+                with open(self.path) as f:
+                    data = json.load(f)
+                if data.get("version") == _CACHE_VERSION:
+                    return data
+            except (OSError, ValueError):
+                pass
+        return {"version": _CACHE_VERSION}
+
+    def _save(self) -> None:
+        if not self.path:
+            return
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(self.path) or ".",
+                                   suffix=".autotune")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._cache, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    # -- keys -------------------------------------------------------------
+
+    @staticmethod
+    def key(op: str, shapes: Sequence[int], *, bits: int | None = None,
+            extra: str = "") -> str:
+        dims = "x".join(str(shape_bucket(int(s))) for s in shapes)
+        parts = [op, dims]
+        if bits is not None:
+            parts.append(f"b{bits}")
+        if extra:
+            parts.append(extra)
+        return "|".join(parts)
+
+    # -- selection --------------------------------------------------------
+
+    def lookup(self, key: str) -> dict | None:
+        entry = self._cache.get(self.fingerprint, {}).get(key)
+        return dict(entry["winner"]) if entry else None
+
+    def pick(self, op: str, *, shapes: Sequence[int],
+             bits: int | None = None, extra: str = "",
+             candidates: Sequence[dict] = (),
+             measure: Callable[[dict], None] | None = None,
+             default: dict) -> dict:
+        """Cached winner for (op, shape-bucket, bits) or sweep/default.
+
+        ``measure(params)`` runs the op once with ``params`` (the caller
+        blocks on the result); it is only invoked when sweeping is
+        enabled AND candidates exist — otherwise ``default`` wins. Safe
+        to call under a jit trace (pure dict/cache work on a hit/miss).
+        """
+        key = self.key(op, shapes, bits=bits, extra=extra)
+        hit = self.lookup(key)
+        if hit is not None:
+            return hit
+        if not (self.sweep and measure is not None and candidates):
+            return dict(default)
+        timings: dict[str, float] = {}
+        best, best_us = dict(default), float("inf")
+        for params in candidates:
+            try:
+                measure(params)                      # compile / warm
+                t0 = time.perf_counter()
+                for _ in range(self.reps):
+                    measure(params)
+                us = (time.perf_counter() - t0) / self.reps * 1e6
+            except Exception:                        # candidate invalid on
+                continue                             # this backend/shape
+            self.n_sweeps += 1
+            timings[json.dumps(params, sort_keys=True)] = round(us, 1)
+            if us < best_us:
+                best, best_us = dict(params), us
+        self._cache.setdefault(self.fingerprint, {})[key] = {
+            "winner": best, "us": timings}
+        self._save()
+        return dict(best)
+
+
+_singleton: Autotuner | None = None
+
+
+def get() -> Autotuner:
+    """Process-wide autotuner over the default cache path."""
+    global _singleton
+    if _singleton is None:
+        _singleton = Autotuner()
+    return _singleton
+
+
+def reset(path: str | None = None, **kw) -> Autotuner:
+    """Swap the process-wide autotuner (tests, benchmarks)."""
+    global _singleton
+    _singleton = Autotuner(path, **kw) if (path or kw) else None
+    return get()

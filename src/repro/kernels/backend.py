@@ -1,0 +1,146 @@
+"""Backend probe + per-op execution-mode dispatch for the Pallas kernels.
+
+Before this module, every kernel took a bare ``interpret=`` flag and the
+module-level ``ops.INTERPRET`` guessed it from ``jax.default_backend()``.
+That conflated three different execution modes that the benchmarks (and
+the nightly regression gate) must keep apart:
+
+  ``compiled``   the Pallas kernel lowered to native code — Mosaic on
+                 TPU, Triton on GPU. The only mode whose wall-clock is a
+                 performance claim.
+  ``interpret``  the Pallas interpreter (kernel body emulated op-by-op
+                 inside XLA). Parity evidence only; timings are
+                 meaningless as perf numbers and must never gate.
+  ``jnp``        the unfused XLA reference path (no Pallas at all).
+
+``probe_backend()`` inspects the runtime once; ``resolve_mode()`` maps a
+requested mode onto what the runtime can actually deliver, warning ONCE
+per op when a compiled request degrades to interpret (CPU has no Pallas
+lowering: "Only interpret mode is supported on CPU backend").
+
+The probe's ``fingerprint`` keys the autotune cache (``autotune.py``) so
+tile sizes tuned on one backend are never replayed on another.
+
+``vmem_budget_bytes()`` is the single source of truth for "does this
+table fit in VMEM" decisions (the DMA-vs-VMEM SPMM dispatch in
+``ops.py``); override with ``REPRO_VMEM_BUDGET`` for tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import logging
+import os
+
+import jax
+
+__all__ = ["BackendInfo", "probe_backend", "resolve_mode", "interpret_flag",
+           "vmem_budget_bytes", "pick_block", "MODES", "reset_warnings"]
+
+logger = logging.getLogger("repro.kernels.backend")
+
+MODES = ("compiled", "interpret", "jnp")
+
+# platform -> (pallas compiled lowering available, lowering name)
+_LOWERINGS = {
+    "tpu": (True, "mosaic"),
+    "gpu": (True, "triton"),
+    "cuda": (True, "triton"),
+    "rocm": (True, "triton"),
+}
+
+# default VMEM budget: ~16 MB/core on TPU (see /opt guides); we apply the
+# same figure everywhere so interpret-mode CI exercises the same
+# DMA-vs-VMEM dispatch decisions a real TPU would take.
+_DEFAULT_VMEM_BYTES = 16 * 2**20
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendInfo:
+    """What the runtime can execute, probed once per process."""
+
+    platform: str             # cpu | gpu | tpu
+    device_kind: str          # e.g. "TPU v5e", "NVIDIA A100", "cpu"
+    compiled_available: bool  # Pallas native lowering exists here
+    lowering: str             # mosaic | triton | interpret
+    n_devices: int
+    fingerprint: str          # stable key for the autotune cache
+
+    @property
+    def default_mode(self) -> str:
+        return "compiled" if self.compiled_available else "interpret"
+
+
+@functools.lru_cache(maxsize=None)
+def probe_backend() -> BackendInfo:
+    platform = jax.default_backend()
+    compiled, lowering = _LOWERINGS.get(platform, (False, "interpret"))
+    devs = jax.devices()
+    kind = devs[0].device_kind if devs else platform
+    raw = f"{platform}|{kind}|jax{jax.__version__}|{lowering}"
+    fp = hashlib.sha1(raw.encode()).hexdigest()[:12]
+    return BackendInfo(platform=platform, device_kind=kind,
+                       compiled_available=compiled, lowering=lowering,
+                       n_devices=len(devs), fingerprint=f"{platform}-{fp}")
+
+
+_warned_ops: set[str] = set()
+
+
+def reset_warnings() -> None:
+    """Test hook: forget which ops already warned about degraded modes."""
+    _warned_ops.clear()
+
+
+def resolve_mode(requested: str = "auto", *, op: str = "kernel") -> str:
+    """Map a requested execution mode onto what this runtime delivers.
+
+    ``auto``      -> compiled where available, else interpret.
+    ``compiled``  -> compiled where available; else interpret, with a
+                     warning logged ONCE per op (benchmarks stay honest:
+                     the caller records the *resolved* mode).
+    ``interpret`` / ``jnp`` -> themselves (always available).
+    """
+    if requested not in ("auto",) + MODES:
+        raise ValueError(f"unknown mode {requested!r}; "
+                         f"expected one of {('auto',) + MODES}")
+    b = probe_backend()
+    if requested == "auto":
+        return b.default_mode
+    if requested == "compiled" and not b.compiled_available:
+        if op not in _warned_ops:
+            _warned_ops.add(op)
+            logger.warning(
+                "compiled Pallas requested for %s but backend=%s has no "
+                "native lowering (%s); delivering interpret mode — "
+                "timings from this path are parity evidence, not "
+                "performance", op, b.platform, b.device_kind)
+        return "interpret"
+    return requested
+
+
+def interpret_flag(mode: str) -> bool:
+    """The ``interpret=`` argument for ``pl.pallas_call`` under ``mode``."""
+    return mode != "compiled"
+
+
+def vmem_budget_bytes() -> int:
+    """Bytes of VMEM a single kernel may assume resident for its tables."""
+    env = os.environ.get("REPRO_VMEM_BUDGET")
+    if env:
+        return int(env)
+    return _DEFAULT_VMEM_BYTES
+
+
+def pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (legacy heuristic).
+
+    Shared by the kernels as the autotune-miss default; previously
+    duplicated in ``spmm.py`` and ``dequant_matmul.py``.
+    """
+    b = min(dim, target)
+    while dim % b:
+        b -= 1
+    return b

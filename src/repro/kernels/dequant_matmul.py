@@ -26,11 +26,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import autotune
+from .backend import pick_block
+
 __all__ = ["dequant_matmul"]
 
 
 def _dqmm_kernel(packed_ref, scale_ref, zero_ref, g_ref, out_ref, *,
-                 bits: int, dp: int, block_d: int):
+                 bits: int, dim: int, dp: int, block_d: int):
     di = pl.program_id(0)
     r = pl.program_id(2)
     mask = jnp.uint8(2**bits - 1)
@@ -39,6 +42,9 @@ def _dqmm_kernel(packed_ref, scale_ref, zero_ref, g_ref, out_ref, *,
     shift = (chunk * bits).astype(jnp.uint8)
     codes = ((packed_ref[...] >> shift) & mask).astype(jnp.float32)
     xhat = codes * scale_ref[...] + zero_ref[...]  # (block_r, block_d)
+    # pad features beyond the true dim (dp·cpb > dim packs) contribute 0
+    feat = di * block_d + jax.lax.broadcasted_iota(jnp.int32, xhat.shape, 1)
+    xhat = jnp.where(feat < dim, xhat, 0.0)
     acc = jax.lax.dot_general(
         xhat, g_ref[...].astype(jnp.float32),
         dimension_numbers=(((0,), (0,)), ((), ())),
@@ -54,42 +60,24 @@ def _dqmm_kernel(packed_ref, scale_ref, zero_ref, g_ref, out_ref, *,
         out_ref[...] += acc
 
 
-def _pick_block(dim: int, target: int) -> int:
-    """Largest divisor of ``dim`` that is <= target."""
-    b = min(dim, target)
-    while dim % b:
-        b -= 1
-    return b
-
-
 @functools.partial(jax.jit,
                    static_argnames=("bits", "dim", "block_r", "block_n",
                                     "block_d", "interpret"))
-def dequant_matmul(packed: jax.Array, scale: jax.Array, zero: jax.Array,
-                   g: jax.Array, *, bits: int, dim: int,
-                   block_r: int = 256, block_n: int = 256,
-                   block_d: int | None = None, interpret: bool = True):
-    """``dequant(packed, scale, zero)ᵀ @ g``.
-
-    packed : (R, dp) uint8 chunk-interleaved codes (dp = dim * bits / 8)
-    scale  : (R, 1) fp32, zero: (R, 1) fp32
-    g      : (R, N) float
-    returns: (dim, N) fp32
-    """
+def _dqmm_call(packed: jax.Array, scale: jax.Array, zero: jax.Array,
+               g: jax.Array, *, bits: int, dim: int,
+               block_r: int, block_n: int, block_d: int, interpret: bool):
     rows, dp = packed.shape
     _, n = g.shape
     cpb = 8 // bits
-    assert dp * cpb == dim, f"packed dim mismatch: {dp}*{cpb} != {dim}"
+    d_pad = dp * cpb                   # >= dim when the pack was padded
 
-    if block_d is None:
-        block_d = _pick_block(dp, 512)
     assert dp % block_d == 0, (dp, block_d)
     block_r = min(block_r, rows)
     block_n = min(block_n, n)
 
     grid_r = -(-rows // block_r)
     grid_n = -(-n // block_n)
-    grid_d = dim // block_d
+    grid_d = d_pad // block_d
     pad_r = grid_r * block_r - rows
     pad_n = grid_n * block_n - n
     if pad_r:
@@ -100,7 +88,7 @@ def dequant_matmul(packed: jax.Array, scale: jax.Array, zero: jax.Array,
     if pad_n:
         g = jnp.pad(g, ((0, 0), (0, pad_n)))
 
-    kernel = functools.partial(_dqmm_kernel, bits=bits, dp=dp,
+    kernel = functools.partial(_dqmm_kernel, bits=bits, dim=dim, dp=dp,
                                block_d=block_d)
     out = pl.pallas_call(
         kernel,
@@ -114,7 +102,57 @@ def dequant_matmul(packed: jax.Array, scale: jax.Array, zero: jax.Array,
         ],
         out_specs=pl.BlockSpec((block_d, block_n),
                                lambda di, ni, ri: (di, ni)),
-        out_shape=jax.ShapeDtypeStruct((dim, grid_n * block_n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((d_pad, grid_n * block_n),
+                                       jnp.float32),
         interpret=interpret,
     )(packed, scale, zero, g)
-    return out[:, :n] if pad_n else out
+    return out[:dim, :n]
+
+
+def dequant_matmul(packed: jax.Array, scale: jax.Array, zero: jax.Array,
+                   g: jax.Array, *, bits: int, dim: int,
+                   block_r: int | None = None, block_n: int | None = None,
+                   block_d: int | None = None, interpret: bool = True):
+    """``dequant(packed, scale, zero)ᵀ @ g``.
+
+    packed : (R, dp) uint8 chunk-interleaved codes, dp·(8/bits) >= dim
+             (pad features beyond ``dim`` are masked to zero in-kernel)
+    scale  : (R, 1) fp32, zero: (R, 1) fp32
+    g      : (R, N) float
+    returns: (dim, N) fp32
+
+    Tile sizes not passed explicitly come from the autotune cache
+    (measured winners per shape-bucket/bits/backend), defaulting to the
+    old ``_pick_block(dp, 512)`` / 256 heuristics on a miss.
+    """
+    rows, dp = packed.shape
+    _, n = g.shape
+    cpb = 8 // bits
+    assert dp * cpb >= dim, f"packed dim mismatch: {dp}*{cpb} < {dim}"
+
+    if block_r is None or block_n is None or block_d is None:
+        divisors = sorted({pick_block(dp, c) for c in (128, 256, 512)})
+        default = {"block_r": 256, "block_n": 256,
+                   "block_d": pick_block(dp, 512)}
+        tuner = autotune.get()
+        concrete = not any(isinstance(a, jax.core.Tracer)
+                           for a in (packed, g))
+        measure = None
+        if concrete and tuner.sweep:
+            def measure(params):
+                jax.block_until_ready(_dqmm_call(
+                    packed, scale, zero, g, bits=bits, dim=dim,
+                    interpret=interpret, **params))
+        picked = tuner.pick(
+            "dequant_matmul", shapes=(rows, dim, n), bits=bits,
+            candidates=[{"block_r": br, "block_n": bn, "block_d": bd}
+                        for br in (128, 256, 512)
+                        for bn in (128, 256)
+                        for bd in divisors],
+            measure=measure, default=default)
+        block_r = block_r if block_r is not None else picked["block_r"]
+        block_n = block_n if block_n is not None else picked["block_n"]
+        block_d = block_d if block_d is not None else picked["block_d"]
+    return _dqmm_call(packed, scale, zero, g, bits=bits, dim=dim,
+                      block_r=block_r, block_n=block_n, block_d=block_d,
+                      interpret=interpret)

@@ -3,10 +3,16 @@
 These adapt kernel I/O to the core ``QTensor`` container so the ACT ops in
 ``repro.core.act`` can switch backends with ``ACTPolicy(kernel="pallas")``.
 
-On this CPU container the kernels run in ``interpret=True`` mode (Pallas
-executes the kernel body in Python); on a real TPU set
-``repro.kernels.ops.INTERPRET = False`` (the launcher does this when
-``jax.default_backend() == "tpu"``).
+Execution mode comes from ``repro.kernels.backend``: compiled (Mosaic /
+Triton) where the runtime supports it, the Pallas interpreter elsewhere
+(CPU CI). ``INTERPRET`` remains the module-level knob the launcher and
+tests flip; it is initialized from the backend probe instead of a bare
+``default_backend() != "tpu"`` guess.
+
+Residency dispatch: the SPMM wrappers compare the gathered-from tables
+against ``backend.vmem_budget_bytes()`` and route to the double-buffered
+HBM-DMA kernels when a table can no longer be assumed VMEM-resident —
+same numerics, same layout, different data movement (DESIGN.md §10).
 """
 
 from __future__ import annotations
@@ -17,9 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quant import QTensor
-from repro.core.quant import dequantize as core_dequantize
-from repro.core.quant import quantize as core_quantize
 
+from . import backend as _backend
 from . import dequant_matmul as _dqmm
 from . import quant_pack as _qp
 from . import spmm as _spmm
@@ -28,24 +33,32 @@ from .hashrng import key_to_seed
 __all__ = ["quantize", "dequantize", "dequant_matmul", "spmm",
            "spmm_grad_ew", "INTERPRET", "TRACE_COUNTS"]
 
-INTERPRET = jax.default_backend() != "tpu"
+INTERPRET = _backend.interpret_flag(_backend.probe_backend().default_mode)
 
 # trace-time call counters per fused op — lets tests assert that a jitted
 # train step actually routed through the Pallas path (each counter bumps
 # once per trace, not per execution)
 TRACE_COUNTS: collections.Counter = collections.Counter()
 
+# fraction of the VMEM budget one resident table may claim (output tile,
+# slot blocks, and double-buffer scratch share the rest)
+_VMEM_TABLE_FRACTION = 0.5
+
+
+def _table_fits_vmem(nbytes: int) -> bool:
+    return nbytes <= _VMEM_TABLE_FRACTION * _backend.vmem_budget_bytes()
+
 
 def quantize(x: jax.Array, key: jax.Array, *, bits: int = 2,
              stochastic: bool = True) -> QTensor:
-    """Fused Pallas quantize+pack -> QTensor (same container as core)."""
+    """Fused Pallas quantize+pack -> QTensor (same container as core).
+
+    Any feature dim works: ``d % (8/bits) != 0`` pads the last pack chunk
+    in-kernel (masked minmax, zero pad codes — layout-identical to
+    ``core.quant.pack_bits``) instead of silently falling back to jnp.
+    """
     orig_shape = x.shape
     d = orig_shape[-1]
-    if d % (8 // bits):
-        # the fused kernel needs whole pack-chunks (d % (8/bits) == 0);
-        # odd feature dims take the jnp quantizer — same QTensor layout,
-        # different (jax.random) SR draws
-        return core_quantize(x, key, bits=bits, stochastic=stochastic)
     flat = x.reshape(-1, d)
     packed, scale, zero = _qp.quant_pack(
         flat, key_to_seed(key), bits=bits, stochastic=stochastic,
@@ -71,16 +84,13 @@ def dequantize(q: QTensor) -> jax.Array:
 
 
 def dequant_matmul(q: QTensor, g: jax.Array) -> jax.Array:
-    """Fused ``dequant(q)ᵀ @ g`` — the ACT weight-gradient hot path."""
+    """Fused ``dequant(q)ᵀ @ g`` — the ACT weight-gradient hot path.
+
+    Padded packs (odd feature dims) stay on the fused path: the kernel
+    masks the tail features to zero instead of dequantizing rows first.
+    """
     n = g.shape[-1]
     dp = q.packed.shape[-1]
-    if dp * (8 // q.bits) != q.dim:
-        # padded pack from the odd-feature-dim quantizer fallback: the
-        # fused kernel's tile indexing assumes whole chunks — dequantize
-        # rows and take the plain fp32 GEMM instead of crashing
-        xhat = core_dequantize(q).reshape(-1, q.dim)
-        return xhat.astype(jnp.float32).T @ g.reshape(-1, n).astype(
-            jnp.float32)
     return _dqmm.dequant_matmul(
         q.packed.reshape(-1, dp),
         q.scale.reshape(-1, 1), q.zero.reshape(-1, 1),
@@ -94,9 +104,14 @@ def spmm(x: jax.Array, ew: jax.Array | None, layout, *,
 
     Forward aggregation, or with ``transpose=True`` the ∇x scatter
     (``dx = Aᵀ(g · ew)``) — no ``(E, d)`` message tensor in HBM either way.
+    Node tables past the VMEM budget route to the double-buffered
+    HBM-DMA gather automatically.
     """
-    TRACE_COUNTS["spmm_t" if transpose else "spmm"] += 1
-    return _spmm.spmm(x, ew, layout, transpose=transpose,
+    rows, d = x.shape
+    dma = not _table_fits_vmem(rows * min(d, 512) * 4)
+    key = "spmm_t" if transpose else "spmm"
+    TRACE_COUNTS[key + "_dma" if dma else key] += 1
+    return _spmm.spmm(x, ew, layout, transpose=transpose, dma=dma,
                       interpret=INTERPRET)
 
 
@@ -106,16 +121,22 @@ def spmm_grad_ew(res, g: jax.Array, layout) -> jax.Array:
     ``res`` is the saved forward residual: a packed QTensor under an
     active policy (read directly, shift+mask in-kernel) or the raw fp32
     activation otherwise. Returns (E,) fp32 in original edge order.
+    Resident bytes (packed codes + scale/zero + the g table) past the
+    VMEM budget route to the double-buffered HBM-DMA variant.
     """
-    if isinstance(res, QTensor):
+    if isinstance(res, QTensor) and res.packed.ndim == 2:
         dp = res.packed.shape[-1]
-        if res.packed.ndim == 2 and dp * (8 // res.bits) == res.dim:
-            TRACE_COUNTS["dequant_sddmm"] += 1
-            return _spmm.dequant_sddmm_ew(
-                res.packed, res.scale, res.zero, g, layout,
-                bits=res.bits, dim=res.dim, interpret=INTERPRET)
-        # odd feature dim (padded pack): dequantize rows, fp32 SDDMM —
+        resident = (res.packed.shape[0] * (dp + 8)
+                    + g.shape[0] * g.shape[-1] * 4)
+        dma = not _table_fits_vmem(resident)
+        TRACE_COUNTS["dequant_sddmm_dma" if dma else "dequant_sddmm"] += 1
+        return _spmm.dequant_sddmm_ew(
+            res.packed, res.scale, res.zero, g, layout,
+            bits=res.bits, dim=res.dim, dma=dma, interpret=INTERPRET)
+    if isinstance(res, QTensor):
+        # leading-dim-structured residual: dequantize rows, fp32 SDDMM —
         # still no (E, d) intermediate
+        from repro.core.quant import dequantize as core_dequantize
         res = core_dequantize(res)
     TRACE_COUNTS["sddmm"] += 1
     return _spmm.sddmm_ew(res, g, layout, interpret=INTERPRET)

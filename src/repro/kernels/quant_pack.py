@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import autotune
 from .hashrng import hash_uniform
 
 __all__ = ["quant_pack_kernel", "quant_pack", "dequant_unpack"]
@@ -37,19 +38,34 @@ _EPS = 1e-12
 
 def _quant_kernel(seed_ref, x_ref, packed_ref, scale_ref, zero_ref, *,
                   bits: int, stochastic: bool, block_r: int, d: int,
-                  dp: int, cpb: int):
+                  d_pad: int, dp: int, cpb: int):
     i = pl.program_id(0)
-    x = x_ref[...].astype(jnp.float32)  # (block_r, d)
+    x = x_ref[...].astype(jnp.float32)  # (block_r, d_pad)
     bins = jnp.float32(2**bits - 1)
-    lo = jnp.min(x, axis=-1, keepdims=True)
-    hi = jnp.max(x, axis=-1, keepdims=True)
+    if d_pad == d:
+        valid = None
+        lo = jnp.min(x, axis=-1, keepdims=True)
+        hi = jnp.max(x, axis=-1, keepdims=True)
+    else:
+        # pad+mask path for d % cpb != 0: pad columns must not perturb the
+        # per-row minmax, and their codes pack as 0 (matching
+        # core.quant.pack_bits' zero-padded layout exactly)
+        col = jax.lax.broadcasted_iota(jnp.int32, (block_r, d_pad), 1)
+        valid = col < d
+        lo = jnp.min(jnp.where(valid, x, float("inf")), axis=-1,
+                     keepdims=True)
+        hi = jnp.max(jnp.where(valid, x, float("-inf")), axis=-1,
+                     keepdims=True)
     rng = hi - lo
     inv = bins / jnp.maximum(rng, _EPS)
-    normed = (x - lo) * inv  # in [0, bins]
+    normed = (x - lo) * inv  # in [0, bins] on valid columns
     if stochastic:
-        # global element index -> counter hash
-        row = jax.lax.broadcasted_iota(jnp.uint32, (block_r, d), 0)
-        col = jax.lax.broadcasted_iota(jnp.uint32, (block_r, d), 1)
+        # global element index -> counter hash, indexed over the TRUE
+        # width d so the stream matches ref_quant_pack bit-for-bit even
+        # when d needed padding (pad columns draw out-of-range hashes
+        # but their codes are masked to 0 below)
+        row = jax.lax.broadcasted_iota(jnp.uint32, (block_r, d_pad), 0)
+        col = jax.lax.broadcasted_iota(jnp.uint32, (block_r, d_pad), 1)
         gidx = (row + jnp.uint32(i * block_r)) * jnp.uint32(d) + col
         u = hash_uniform(gidx, seed_ref[0])
         floor = jnp.floor(normed)
@@ -57,6 +73,8 @@ def _quant_kernel(seed_ref, x_ref, packed_ref, scale_ref, zero_ref, *,
     else:
         codes_f = jnp.round(normed)
     codes = jnp.clip(codes_f, 0.0, bins).astype(jnp.uint8)
+    if valid is not None:
+        codes = jnp.where(valid, codes, jnp.uint8(0))
     # chunk-interleaved pack: byte j holds codes [k*dp + j], k = 0..cpb-1
     if cpb == 1:
         packed = codes
@@ -73,25 +91,19 @@ def _quant_kernel(seed_ref, x_ref, packed_ref, scale_ref, zero_ref, *,
 @functools.partial(jax.jit,
                    static_argnames=("bits", "stochastic", "block_r",
                                     "interpret"))
-def quant_pack(x: jax.Array, seed: jax.Array, *, bits: int = 2,
-               stochastic: bool = True, block_r: int = 256,
-               interpret: bool = True):
-    """Fused quantize+pack. Returns (packed, scale, zero).
-
-    x    : (rows, d) fp32/bf16 — callers flatten leading dims.
-    seed : uint32 scalar (see hashrng.key_to_seed).
-    """
+def _quant_pack_call(x: jax.Array, seed: jax.Array, *, bits: int,
+                     stochastic: bool, block_r: int, interpret: bool):
     rows, d = x.shape
     cpb = 8 // bits
     dp = -(-d // cpb)
-    if d % cpb:
-        # pad feature dim so chunks are exact; minmax must ignore the pad,
-        # so pad AFTER stats would be wrong — instead fall back to row pad
-        # via the caller. For simplicity we pad columns with the row min
-        # replicated (stats-neutral: min/max unchanged). Cheapest: require
-        # d % cpb == 0 for the fused kernel; callers meeting real model
-        # dims (multiples of 8) always satisfy this.
-        raise ValueError(f"quant_pack requires d % {cpb} == 0, got d={d}")
+    d_pad = dp * cpb
+    if d_pad != d:
+        # odd feature dim (d % cpb != 0): pad columns, mask them out of
+        # the in-kernel minmax, and pack their codes as 0 — the layout
+        # matches core.quant.pack_bits' zero-padded chunks, so every
+        # downstream consumer (dequant, fused dqmm/SDDMM with tail
+        # masking) reads it unchanged. No more silent jnp fallback.
+        x = jnp.pad(x, ((0, 0), (0, d_pad - d)))
     block_r = min(block_r, rows)
     grid_r = -(-rows // block_r)
     pad_r = grid_r * block_r - rows
@@ -99,12 +111,12 @@ def quant_pack(x: jax.Array, seed: jax.Array, *, bits: int = 2,
         x = jnp.pad(x, ((0, pad_r), (0, 0)))
     kernel = functools.partial(
         _quant_kernel, bits=bits, stochastic=stochastic, block_r=block_r,
-        d=d, dp=dp, cpb=cpb)
+        d=d, d_pad=d_pad, dp=dp, cpb=cpb)
     # seed rides in SMEM via scalar prefetch (TPU-idiomatic for scalars)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(grid_r,),
-        in_specs=[pl.BlockSpec((block_r, d), lambda i, s: (i, 0))],
+        in_specs=[pl.BlockSpec((block_r, d_pad), lambda i, s: (i, 0))],
         out_specs=[
             pl.BlockSpec((block_r, dp), lambda i, s: (i, 0)),
             pl.BlockSpec((block_r, 1), lambda i, s: (i, 0)),
@@ -126,6 +138,36 @@ def quant_pack(x: jax.Array, seed: jax.Array, *, bits: int = 2,
     return packed, scale, zero
 
 
+def quant_pack(x: jax.Array, seed: jax.Array, *, bits: int = 2,
+               stochastic: bool = True, block_r: int | None = None,
+               interpret: bool = True):
+    """Fused quantize+pack. Returns (packed, scale, zero).
+
+    x    : (rows, d) fp32/bf16 — callers flatten leading dims. Any d
+           works: ``d % (8/bits) != 0`` pads one partial chunk in-kernel
+           (masked minmax, zero pad codes) instead of falling back.
+    seed : uint32 scalar (see hashrng.key_to_seed).
+
+    ``block_r=None`` consults the autotune cache (measured winners per
+    shape-bucket/bits/backend), defaulting to the old fixed 256.
+    """
+    rows, d = x.shape
+    if block_r is None:
+        tuner = autotune.get()
+        measure = None
+        if tuner.sweep and not isinstance(x, jax.core.Tracer):
+            def measure(params):
+                jax.block_until_ready(_quant_pack_call(
+                    x, seed, bits=bits, stochastic=stochastic,
+                    interpret=interpret, **params))
+        block_r = tuner.pick(
+            "quant_pack", shapes=(rows, d), bits=bits,
+            candidates=[{"block_r": c} for c in (64, 128, 256, 512)],
+            measure=measure, default={"block_r": 256})["block_r"]
+    return _quant_pack_call(x, seed, bits=bits, stochastic=stochastic,
+                            block_r=block_r, interpret=interpret)
+
+
 def _dequant_kernel(packed_ref, scale_ref, zero_ref, out_ref, *,
                     bits: int, d: int, dp: int, cpb: int, out_dtype):
     packed = packed_ref[...]
@@ -141,10 +183,9 @@ def _dequant_kernel(packed_ref, scale_ref, zero_ref, out_ref, *,
 @functools.partial(jax.jit,
                    static_argnames=("bits", "dim", "block_r", "interpret",
                                     "out_dtype"))
-def dequant_unpack(packed: jax.Array, scale: jax.Array, zero: jax.Array, *,
-                   bits: int, dim: int, block_r: int = 256,
-                   out_dtype=jnp.float32, interpret: bool = True):
-    """Fused unpack+dequantize: (rows, dp) uint8 -> (rows, dim) float."""
+def _dequant_unpack_call(packed: jax.Array, scale: jax.Array,
+                         zero: jax.Array, *, bits: int, dim: int,
+                         block_r: int, out_dtype, interpret: bool):
     rows, dp = packed.shape
     cpb = 8 // bits
     block_r = min(block_r, rows)
@@ -169,6 +210,32 @@ def dequant_unpack(packed: jax.Array, scale: jax.Array, zero: jax.Array, *,
         interpret=interpret,
     )(packed, scale, zero)
     return out[:rows] if pad_r else out
+
+
+def dequant_unpack(packed: jax.Array, scale: jax.Array, zero: jax.Array, *,
+                   bits: int, dim: int, block_r: int | None = None,
+                   out_dtype=jnp.float32, interpret: bool = True):
+    """Fused unpack+dequantize: (rows, dp) uint8 -> (rows, dim) float.
+
+    Handles padded packs (dp·(8/bits) > dim) by slicing the tail.
+    ``block_r=None`` consults the autotune cache.
+    """
+    rows, dp = packed.shape
+    if block_r is None:
+        tuner = autotune.get()
+        measure = None
+        if tuner.sweep and not isinstance(packed, jax.core.Tracer):
+            def measure(params):
+                jax.block_until_ready(_dequant_unpack_call(
+                    packed, scale, zero, bits=bits, dim=dim,
+                    out_dtype=out_dtype, interpret=interpret, **params))
+        block_r = tuner.pick(
+            "dequant_unpack", shapes=(rows, dim), bits=bits,
+            candidates=[{"block_r": c} for c in (64, 128, 256, 512)],
+            measure=measure, default={"block_r": 256})["block_r"]
+    return _dequant_unpack_call(packed, scale, zero, bits=bits, dim=dim,
+                                block_r=block_r, out_dtype=out_dtype,
+                                interpret=interpret)
 
 
 quant_pack_kernel = _quant_kernel  # exported for tests/inspection

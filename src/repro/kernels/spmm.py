@@ -26,11 +26,26 @@ accumulated across a contiguous run of grid steps (init on the first
 block of each tile — the standard revisiting pattern, steered by the
 scalar-prefetched ``tile_of_blk`` array in SMEM).
 
-The node table rides in VMEM blocked over the feature dim only
-(``(N, block_d)``); in-kernel gathers are ``jnp.take`` over the sublane
-dim. For CKGs whose node table outgrows VMEM, the upgrade path is
-per-tile DMA gathers from HBM (see DESIGN.md §4) — the layout already
-carries everything that needs.
+Two residency strategies for the gathered-from tables, dispatched by
+``repro.kernels.ops`` against ``backend.vmem_budget_bytes()``:
+
+  * **VMEM-resident** (``dma=False``): the node table rides in VMEM
+    blocked over the feature dim only (``(N, block_d)``); in-kernel
+    gathers are ``jnp.take`` over the sublane dim. Fastest while the
+    table fits.
+  * **HBM + double-buffered DMA** (``dma=True``): the table stays in HBM
+    (``memory_space=ANY``); each grid step's ``block_e`` source rows are
+    gathered by per-row async copies into a two-slot VMEM scratch, with
+    block ``e+1``'s gather issued before block ``e`` is consumed — DMA
+    overlaps the one-hot matmul. The per-block source-id vector is
+    itself DMA'd into SMEM scratch first (DMA descriptors need scalar
+    addresses). This removes the whole-table-in-VMEM assumption
+    (DESIGN.md §4's upgrade path, now §10); grid, layout, and numerics
+    are identical to the VMEM path — the parity suite runs both.
+
+Tile sizes (``block_d``) come from ``repro.kernels.autotune`` when not
+passed explicitly — measured winners per (op, shape-bucket, backend),
+falling back to the old ``min(d, 512)`` heuristic on a cache miss.
 """
 
 from __future__ import annotations
@@ -42,19 +57,34 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import autotune as _autotune
+from .backend import pick_block as _pick_block
+
 __all__ = ["spmm", "sddmm_ew", "dequant_sddmm_ew"]
 
+_BLOCK_D_CANDIDATES = (128, 256, 512)
 
-def _pick_block(dim: int, target: int) -> int:
-    """Largest divisor of ``dim`` that is <= target."""
-    b = min(dim, target)
-    while dim % b:
-        b -= 1
-    return b
+
+def _is_concrete(*arrays) -> bool:
+    return not any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+def _tuned_block_d(op: str, *, shapes, bits=None, default: int,
+                   candidates, measure_factory=None) -> int:
+    """Consult the autotune cache (and sweep when enabled + concrete)."""
+    tuner = _autotune.get()
+    measure = None
+    if measure_factory is not None and tuner.sweep:
+        def measure(params):
+            jax.block_until_ready(measure_factory(params["block_d"]))
+    return tuner.pick(
+        op, shapes=shapes, bits=bits,
+        candidates=[{"block_d": c} for c in candidates],
+        measure=measure, default={"block_d": default})["block_d"]
 
 
 # ---------------------------------------------------------------------------
-# forward / transpose aggregation
+# forward / transpose aggregation — VMEM-resident node table
 # ---------------------------------------------------------------------------
 
 
@@ -85,38 +115,33 @@ def _spmm_kernel(tile_ref, src_ref, ldst_ref, ew_ref, x_ref, out_ref, *,
         out_ref[...] += acc
 
 
-@functools.partial(jax.jit, static_argnames=("transpose", "block_d",
-                                             "interpret"))
-def spmm(x: jax.Array, ew: jax.Array | None, layout, *,
-         transpose: bool = False, block_d: int | None = None,
-         interpret: bool = True) -> jax.Array:
-    """Fused gather + scale + segment-accumulate over a blocked-CSR layout.
-
-    x   : (n_src, d) float — the gathered-from table (activations
-          forward; output gradient for the transpose/∇x direction).
-    ew  : (E,) float edge weights in ORIGINAL edge order, or None for
-          unweighted aggregation (plain adjacency).
-    returns (n_out, d) in x.dtype, n_out = n_dst (fwd) / n_src (transpose).
-    """
+def _direction(layout, transpose: bool):
     m = layout.meta
     if transpose:
-        src_blk, ldst_blk = layout.t_src_blk, layout.t_ldst_blk
-        perm_blk, tile_of = layout.t_perm_blk, layout.t_tile_of_blk
-        nb, n_tiles, n_out = m.t_n_blocks, m.t_n_tiles, m.n_src
-    else:
-        src_blk, ldst_blk = layout.src_blk, layout.ldst_blk
-        perm_blk, tile_of = layout.perm_blk, layout.tile_of_blk
-        nb, n_tiles, n_out = m.n_blocks, m.n_tiles, m.n_dst
-    rows, d = x.shape
+        return (layout.t_src_blk, layout.t_ldst_blk, layout.t_perm_blk,
+                layout.t_tile_of_blk, m.t_n_blocks, m.t_n_tiles, m.n_src)
+    return (layout.src_blk, layout.ldst_blk, layout.perm_blk,
+            layout.tile_of_blk, m.n_blocks, m.n_tiles, m.n_dst)
 
+
+def _ew_slots(ew, perm_blk, n_edges: int):
     # one gather permutes ew into slot order AND zeroes pad lanes
     # (pad slots carry perm == n_edges, pointing at the appended zero)
-    w = jnp.ones((m.n_edges,), jnp.float32) if ew is None \
+    w = jnp.ones((n_edges,), jnp.float32) if ew is None \
         else ew.astype(jnp.float32)
-    ew_slots = jnp.concatenate([w, jnp.zeros((1,), jnp.float32)])[perm_blk]
+    return jnp.concatenate([w, jnp.zeros((1,), jnp.float32)])[perm_blk]
 
-    if block_d is None:
-        block_d = min(d, 512)
+
+@functools.partial(jax.jit, static_argnames=("transpose", "block_d",
+                                             "interpret"))
+def _spmm_vmem(x, ew, layout, *, transpose: bool, block_d: int,
+               interpret: bool):
+    m = layout.meta
+    src_blk, ldst_blk, perm_blk, tile_of, nb, n_tiles, n_out = \
+        _direction(layout, transpose)
+    rows, d = x.shape
+    ew_slots = _ew_slots(ew, perm_blk, m.n_edges)
+
     grid_d = -(-d // block_d)
     pad_d = grid_d * block_d - d
     xf = x.astype(jnp.float32)
@@ -148,6 +173,153 @@ def spmm(x: jax.Array, ew: jax.Array | None, layout, *,
 
 
 # ---------------------------------------------------------------------------
+# forward / transpose aggregation — HBM table, double-buffered DMA gather
+# ---------------------------------------------------------------------------
+
+
+def _spmm_dma_kernel(tile_ref, ldst_ref, ew_ref, src_hbm, x_hbm, out_ref,
+                     idx_smem, buf, idx_sem, dat_sem, *,
+                     block_rows: int, block_e: int, block_d: int, nb: int):
+    di = pl.program_id(0)
+    e = pl.program_id(1)
+    tile = tile_ref[e]
+    prev = tile_ref[jnp.maximum(e, 1) - 1]
+    first = jnp.logical_or(e == 0, tile != prev)
+
+    def idx_fetch(slot, blk):
+        # the per-block source-id vector, synchronously into SMEM: DMA
+        # descriptors below need scalar addresses. block_e·4 bytes — its
+        # latency hides behind the previous block's row gathers.
+        cp = pltpu.make_async_copy(src_hbm.at[pl.ds(blk, 1), :],
+                                   idx_smem.at[slot], idx_sem.at[slot])
+        cp.start()
+        cp.wait()
+
+    def row_copy(slot, i, di_):
+        return pltpu.make_async_copy(
+            x_hbm.at[pl.ds(idx_smem[slot, 0, i], 1),
+                     pl.ds(di_ * block_d, block_d)],
+            buf.at[slot, pl.ds(i, 1), :],
+            dat_sem.at[slot])
+
+    def rows_start(slot, di_):
+        def body(i, _):
+            row_copy(slot, i, di_).start()
+            return 0
+        jax.lax.fori_loop(0, block_e, body, 0)
+
+    def rows_wait(slot, di_):
+        def body(i, _):
+            row_copy(slot, i, di_).wait()
+            return 0
+        jax.lax.fori_loop(0, block_e, body, 0)
+
+    @pl.when(e == 0)
+    def _warmup():
+        idx_fetch(0, 0)
+        rows_start(0, di)
+
+    @pl.when(e + 1 < nb)
+    def _prefetch():                      # overlap next gather w/ compute
+        idx_fetch((e + 1) % 2, e + 1)
+        rows_start((e + 1) % 2, di)
+
+    slot = jax.lax.rem(e, 2)
+    rows_wait(slot, di)
+    msgs = buf[slot] * ew_ref[0, :][:, None]          # pads carry ew=0
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block_rows, block_e), 0)
+    onehot = (rows == ldst_ref[0, :][None, :]).astype(jnp.float32)
+    acc = jax.lax.dot_general(
+        onehot, msgs,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(jnp.logical_not(first))
+    def _accum():
+        out_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("transpose", "block_d",
+                                             "interpret"))
+def _spmm_dma(x, ew, layout, *, transpose: bool, block_d: int,
+              interpret: bool):
+    m = layout.meta
+    src_blk, ldst_blk, perm_blk, tile_of, nb, n_tiles, n_out = \
+        _direction(layout, transpose)
+    rows, d = x.shape
+    ew_slots = _ew_slots(ew, perm_blk, m.n_edges)
+
+    grid_d = -(-d // block_d)
+    pad_d = grid_d * block_d - d
+    xf = x.astype(jnp.float32)
+    if pad_d:
+        xf = jnp.pad(xf, ((0, 0), (0, pad_d)))
+
+    kernel = functools.partial(_spmm_dma_kernel, block_rows=m.block_rows,
+                               block_e=m.block_e, block_d=block_d, nb=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(grid_d, nb),
+        in_specs=[
+            pl.BlockSpec((1, m.block_e), lambda di, e, s: (e, 0)),
+            pl.BlockSpec((1, m.block_e), lambda di, e, s: (e, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),   # src ids stay in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),   # node table stays in HBM
+        ],
+        out_specs=pl.BlockSpec((m.block_rows, block_d),
+                               lambda di, e, s: (s[e], di)),
+        scratch_shapes=[
+            pltpu.SMEM((2, 1, m.block_e), jnp.int32),
+            pltpu.VMEM((2, m.block_e, block_d), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (n_tiles * m.block_rows, grid_d * block_d), jnp.float32),
+        interpret=interpret,
+    )(tile_of, ldst_blk, ew_slots, src_blk, xf)
+    return out[:n_out, :d].astype(x.dtype)
+
+
+def spmm(x: jax.Array, ew: jax.Array | None, layout, *,
+         transpose: bool = False, block_d: int | None = None,
+         interpret: bool = True, dma: bool = False) -> jax.Array:
+    """Fused gather + scale + segment-accumulate over a blocked-CSR layout.
+
+    x   : (n_src, d) float — the gathered-from table (activations
+          forward; output gradient for the transpose/∇x direction).
+    ew  : (E,) float edge weights in ORIGINAL edge order, or None for
+          unweighted aggregation (plain adjacency).
+    dma : gather from an HBM-resident table via double-buffered async
+          copies instead of assuming the table fits in VMEM (callers
+          dispatch on ``backend.vmem_budget_bytes()``; see ``ops.spmm``).
+    returns (n_out, d) in x.dtype, n_out = n_dst (fwd) / n_src (transpose).
+    """
+    rows, d = x.shape
+    if block_d is None:
+        impl = _spmm_dma if dma else _spmm_vmem
+        block_d = _tuned_block_d(
+            "spmm_dma" if dma else "spmm",
+            shapes=(rows, d, layout.meta.n_edges), default=min(d, 512),
+            candidates=[c for c in _BLOCK_D_CANDIDATES if c <= max(d, 128)],
+            measure_factory=(
+                (lambda bd: impl(x, ew, layout, transpose=transpose,
+                                 block_d=bd, interpret=interpret))
+                if _is_concrete(x, ew) else None))
+    impl = _spmm_dma if dma else _spmm_vmem
+    return impl(x, ew, layout, transpose=transpose, block_d=block_d,
+                interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
 # backward ∇ew: SDDMM (sampled dense-dense matmul over the edge pattern)
 # ---------------------------------------------------------------------------
 
@@ -175,18 +347,9 @@ def _sddmm_kernel(src_ref, dst_ref, x_ref, g_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
-def sddmm_ew(x: jax.Array, g: jax.Array, layout, *,
-             block_d: int | None = None,
-             interpret: bool = True) -> jax.Array:
-    """∇ew[e] = ⟨x[src_e], g[dst_e]⟩ — fp32 residual path.
-
-    x : (n_src, d) saved activation, g : (n_dst, d) output gradient.
-    returns (E,) fp32 in original edge order.
-    """
+def _sddmm_call(x, g, layout, *, block_d: int, interpret: bool):
     m = layout.meta
     n_src, d = x.shape
-    if block_d is None:
-        block_d = min(d, 512)
     grid_d = -(-d // block_d)
     pad_d = grid_d * block_d - d
     xf = x.astype(jnp.float32)
@@ -211,8 +374,30 @@ def sddmm_ew(x: jax.Array, g: jax.Array, layout, *,
     return _scatter_dew(out, layout.perm_blk, m.n_edges)
 
 
+def sddmm_ew(x: jax.Array, g: jax.Array, layout, *,
+             block_d: int | None = None,
+             interpret: bool = True) -> jax.Array:
+    """∇ew[e] = ⟨x[src_e], g[dst_e]⟩ — fp32 residual path.
+
+    x : (n_src, d) saved activation, g : (n_dst, d) output gradient.
+    returns (E,) fp32 in original edge order.
+    """
+    n_src, d = x.shape
+    if block_d is None:
+        block_d = _tuned_block_d(
+            "sddmm", shapes=(n_src, d, layout.meta.n_edges),
+            default=min(d, 512),
+            candidates=[c for c in _BLOCK_D_CANDIDATES if c <= max(d, 128)],
+            measure_factory=(
+                (lambda bd: _sddmm_call(x, g, layout, block_d=bd,
+                                        interpret=interpret))
+                if _is_concrete(x, g) else None))
+    return _sddmm_call(x, g, layout, block_d=block_d, interpret=interpret)
+
+
 def _dq_sddmm_kernel(src_ref, dst_ref, packed_ref, scale_ref, zero_ref,
-                     g_ref, out_ref, *, bits: int, dp: int, block_d: int):
+                     g_ref, out_ref, *, bits: int, dim: int, dp: int,
+                     block_d: int):
     di = pl.program_id(1)
     src = src_ref[0, :]
     # which bit-field this feature tile lives in (chunk-interleaved pack)
@@ -223,6 +408,10 @@ def _dq_sddmm_kernel(src_ref, dst_ref, packed_ref, scale_ref, zero_ref,
     codes = ((prows >> shift) & mask).astype(jnp.float32)
     xhat = codes * jnp.take(scale_ref[...], src, axis=0) \
         + jnp.take(zero_ref[...], src, axis=0)
+    # pad features beyond the true dim (dp·cpb > dim packs) contribute 0
+    feat = di * block_d + jax.lax.broadcasted_iota(
+        jnp.int32, xhat.shape, 1)
+    xhat = jnp.where(feat < dim, xhat, 0.0)
     gr = jnp.take(g_ref[...], dst_ref[0, :], axis=0).astype(jnp.float32)
     part = jnp.sum(xhat * gr, axis=-1)
 
@@ -237,27 +426,21 @@ def _dq_sddmm_kernel(src_ref, dst_ref, packed_ref, scale_ref, zero_ref,
 
 @functools.partial(jax.jit, static_argnames=("bits", "dim", "block_d",
                                              "interpret"))
-def dequant_sddmm_ew(packed: jax.Array, scale: jax.Array, zero: jax.Array,
-                     g: jax.Array, layout, *, bits: int, dim: int,
-                     block_d: int | None = None,
-                     interpret: bool = True) -> jax.Array:
-    """∇ew from the *packed* b-bit residual — shift+mask in-kernel.
-
-    packed : (n_src, dp) uint8 chunk-interleaved codes (dp = dim·bits/8)
-    scale/zero : (n_src, 1) fp32, g : (n_dst, dim) float.
-    returns (E,) fp32 in original edge order.
-    """
+def _dq_sddmm_call(packed, scale, zero, g, layout, *, bits: int, dim: int,
+                   block_d: int, interpret: bool):
     m = layout.meta
     n_src, dp = packed.shape
     cpb = 8 // bits
-    assert dp * cpb == dim, f"packed dim mismatch: {dp}*{cpb} != {dim}"
-    if block_d is None:
-        block_d = _pick_block(dp, 512)
+    d_pad = dp * cpb                   # >= dim when the pack was padded
     assert dp % block_d == 0, (dp, block_d)
-    grid_d = dim // block_d
+    grid_d = d_pad // block_d
     nbt = dp // block_d                # distinct byte tiles (reused cpb×)
+    gf = g.astype(jnp.float32)
+    pad_g = d_pad - g.shape[1]
+    if pad_g:
+        gf = jnp.pad(gf, ((0, 0), (0, pad_g)))
 
-    kernel = functools.partial(_dq_sddmm_kernel, bits=bits, dp=dp,
+    kernel = functools.partial(_dq_sddmm_kernel, bits=bits, dim=dim, dp=dp,
                                block_d=block_d)
     out = pl.pallas_call(
         kernel,
@@ -268,11 +451,164 @@ def dequant_sddmm_ew(packed: jax.Array, scale: jax.Array, zero: jax.Array,
             pl.BlockSpec((n_src, block_d), lambda e, di: (0, di % nbt)),
             pl.BlockSpec((n_src, 1), lambda e, di: (0, 0)),
             pl.BlockSpec((n_src, 1), lambda e, di: (0, 0)),
-            pl.BlockSpec((g.shape[0], block_d), lambda e, di: (0, di)),
+            pl.BlockSpec((gf.shape[0], block_d), lambda e, di: (0, di)),
         ],
         out_specs=pl.BlockSpec((1, m.block_e), lambda e, di: (e, 0)),
         out_shape=jax.ShapeDtypeStruct((m.n_blocks, m.block_e), jnp.float32),
         interpret=interpret,
-    )(layout.src_blk, layout.dstg_blk, packed, scale,
-      zero, g.astype(jnp.float32))
+    )(layout.src_blk, layout.dstg_blk, packed, scale, zero, gf)
     return _scatter_dew(out, layout.perm_blk, m.n_edges)
+
+
+# -- HBM tables + double-buffered DMA (packed codes and g both streamed) ----
+
+
+def _dq_sddmm_dma_kernel(src_ref, dst_ref, scale_ref, zero_ref,
+                         src_hbm, dst_hbm, packed_hbm, g_hbm, out_ref,
+                         idx_smem, pbuf, gbuf, idx_sem, p_sem, g_sem, *,
+                         bits: int, dim: int, dp: int, block_e: int,
+                         d_pad: int, nb: int):
+    e = pl.program_id(0)
+
+    def idx_fetch(slot, blk):
+        # src ids then dst ids into the two SMEM rows of this slot
+        for hbm, row in ((src_hbm, 0), (dst_hbm, 1)):
+            cp = pltpu.make_async_copy(hbm.at[pl.ds(blk, 1), :],
+                                       idx_smem.at[slot, pl.ds(row, 1), :],
+                                       idx_sem.at[slot])
+            cp.start()
+            cp.wait()
+
+    def row_copies(slot, i):
+        return (
+            pltpu.make_async_copy(
+                packed_hbm.at[pl.ds(idx_smem[slot, 0, i], 1), :],
+                pbuf.at[slot, pl.ds(i, 1), :], p_sem.at[slot]),
+            pltpu.make_async_copy(
+                g_hbm.at[pl.ds(idx_smem[slot, 1, i], 1), :],
+                gbuf.at[slot, pl.ds(i, 1), :], g_sem.at[slot]),
+        )
+
+    def rows_start(slot):
+        def body(i, _):
+            for cp in row_copies(slot, i):
+                cp.start()
+            return 0
+        jax.lax.fori_loop(0, block_e, body, 0)
+
+    def rows_wait(slot):
+        def body(i, _):
+            for cp in row_copies(slot, i):
+                cp.wait()
+            return 0
+        jax.lax.fori_loop(0, block_e, body, 0)
+
+    @pl.when(e == 0)
+    def _warmup():
+        idx_fetch(0, 0)
+        rows_start(0)
+
+    @pl.when(e + 1 < nb)
+    def _prefetch():
+        idx_fetch((e + 1) % 2, e + 1)
+        rows_start((e + 1) % 2)
+
+    slot = jax.lax.rem(e, 2)
+    rows_wait(slot)
+
+    cpb = 8 // bits
+    packed = pbuf[slot]                                   # (block_e, dp)
+    mask = jnp.uint8(2**bits - 1)
+    if cpb == 1:
+        codes = packed.astype(jnp.float32)
+    else:
+        chunks = [(packed >> jnp.uint8(k * bits)) & mask
+                  for k in range(cpb)]
+        codes = jnp.concatenate(chunks, axis=-1).astype(jnp.float32)
+    src = src_ref[0, :]
+    xhat = codes * jnp.take(scale_ref[...], src, axis=0) \
+        + jnp.take(zero_ref[...], src, axis=0)            # (block_e, d_pad)
+    feat = jax.lax.broadcasted_iota(jnp.int32, xhat.shape, 1)
+    xhat = jnp.where(feat < dim, xhat, 0.0)
+    gr = gbuf[slot][:, :d_pad]
+    out_ref[0, :] = jnp.sum(xhat * gr, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "dim", "interpret"))
+def _dq_sddmm_dma(packed, scale, zero, g, layout, *, bits: int, dim: int,
+                  interpret: bool):
+    m = layout.meta
+    n_src, dp = packed.shape
+    cpb = 8 // bits
+    d_pad = dp * cpb
+    gf = g.astype(jnp.float32)
+    pad_g = d_pad - g.shape[1]
+    if pad_g > 0:
+        gf = jnp.pad(gf, ((0, 0), (0, pad_g)))
+
+    kernel = functools.partial(
+        _dq_sddmm_dma_kernel, bits=bits, dim=dim, dp=dp,
+        block_e=m.block_e, d_pad=d_pad, nb=m.n_blocks)
+    out = pl.pallas_call(
+        kernel,
+        grid=(m.n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, m.block_e), lambda e: (e, 0)),
+            pl.BlockSpec((1, m.block_e), lambda e: (e, 0)),
+            # per-row scale/zero stay VMEM-resident: 8 bytes/row, 64×
+            # smaller than the d=128 fp32 table the DMA path sheds
+            pl.BlockSpec((n_src, 1), lambda e: (0, 0)),
+            pl.BlockSpec((n_src, 1), lambda e: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),   # src ids
+            pl.BlockSpec(memory_space=pltpu.ANY),   # dst ids
+            pl.BlockSpec(memory_space=pltpu.ANY),   # packed codes (HBM)
+            pl.BlockSpec(memory_space=pltpu.ANY),   # g (HBM)
+        ],
+        out_specs=pl.BlockSpec((1, m.block_e), lambda e: (e, 0)),
+        out_shape=jax.ShapeDtypeStruct((m.n_blocks, m.block_e), jnp.float32),
+        scratch_shapes=[
+            pltpu.SMEM((2, 2, m.block_e), jnp.int32),
+            pltpu.VMEM((2, m.block_e, dp), jnp.uint8),
+            pltpu.VMEM((2, m.block_e, d_pad), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(layout.src_blk, layout.dstg_blk, scale, zero,
+      layout.src_blk, layout.dstg_blk, packed, gf)
+    return _scatter_dew(out, layout.perm_blk, m.n_edges)
+
+
+def dequant_sddmm_ew(packed: jax.Array, scale: jax.Array, zero: jax.Array,
+                     g: jax.Array, layout, *, bits: int, dim: int,
+                     block_d: int | None = None,
+                     interpret: bool = True, dma: bool = False) -> jax.Array:
+    """∇ew from the *packed* b-bit residual — shift+mask in-kernel.
+
+    packed : (n_src, dp) uint8 chunk-interleaved codes, dp·(8/bits) >= dim
+             (pad features beyond ``dim`` are masked to zero in-kernel)
+    scale/zero : (n_src, 1) fp32, g : (n_dst, dim) float.
+    dma    : stream packed rows and g rows from HBM with double-buffered
+             async copies instead of holding both tables in VMEM.
+    returns (E,) fp32 in original edge order.
+    """
+    n_src, dp = packed.shape
+    cpb = 8 // bits
+    assert dp * cpb >= dim, f"packed dim mismatch: {dp}*{cpb} < {dim}"
+    if dma:
+        return _dq_sddmm_dma(packed, scale, zero, g, layout, bits=bits,
+                             dim=dim, interpret=interpret)
+    if block_d is None:
+        default = _pick_block(dp, 512)
+        divisors = sorted({_pick_block(dp, c) for c in _BLOCK_D_CANDIDATES})
+        block_d = _tuned_block_d(
+            "dequant_sddmm", shapes=(n_src, dim, layout.meta.n_edges),
+            bits=bits, default=default, candidates=divisors,
+            measure_factory=(
+                (lambda bd: _dq_sddmm_call(packed, scale, zero, g, layout,
+                                           bits=bits, dim=dim, block_d=bd,
+                                           interpret=interpret))
+                if _is_concrete(packed, g) else None))
+    return _dq_sddmm_call(packed, scale, zero, g, layout, bits=bits,
+                          dim=dim, block_d=block_d, interpret=interpret)

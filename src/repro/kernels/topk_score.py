@@ -45,6 +45,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import autotune
+
 __all__ = ["fused_topk_scores"]
 
 _NEG_INF = float("-inf")  # plain float: a jnp scalar would be captured
@@ -99,23 +101,16 @@ def _topk_kernel(q_ref, packed_ref, scale_ref, zero_ref, excl_ref,
 @functools.partial(jax.jit,
                    static_argnames=("bits", "dim", "k", "n_items",
                                     "block_i", "interpret"))
-def fused_topk_scores(q: jax.Array, packed: jax.Array, scale: jax.Array,
-                      zero: jax.Array, excl: jax.Array, *, bits: int,
-                      dim: int, k: int, n_items: int, block_i: int = 1024,
-                      interpret: bool = True):
-    """Top-K of ``q @ dequant(packed, scale, zero)ᵀ`` with exclusions.
-
-    q      : (B, dim) fp32 query vectors (dequantized user rows)
-    packed : (I, dp) uint8 chunk-interleaved codes (dp = dim * bits / 8)
-    scale  : (I, 1) fp32, zero: (I, 1) fp32
-    excl   : (B, P) int32 item ids to force to -inf per row; -1 pads
-    returns (values (B, k) fp32, indices (B, k) int32) — bit-identical to
-    ``jax.lax.top_k`` over the dense masked score row.
-    """
+def _topk_call(q: jax.Array, packed: jax.Array, scale: jax.Array,
+               zero: jax.Array, excl: jax.Array, *, bits: int,
+               dim: int, k: int, n_items: int, block_i: int,
+               interpret: bool):
     rows, dp = packed.shape
     assert rows == n_items, (rows, n_items)
     cpb = 8 // bits
-    assert dp * cpb == dim, f"packed dim mismatch: {dp}*{cpb} != {dim}"
+    # dp*cpb > dim for padded packs: the in-kernel unpack slices [:dim],
+    # dropping the zero pad codes, so padded stores score identically
+    assert dp * cpb >= dim, f"packed dim mismatch: {dp}*{cpb} < {dim}"
     block_i = max(min(block_i, rows), k)   # first chunk must seed k entries
     grid_i = -(-rows // block_i)
     pad_i = grid_i * block_i - rows
@@ -149,3 +144,41 @@ def fused_topk_scores(q: jax.Array, packed: jax.Array, scale: jax.Array,
         interpret=interpret,
     )(q.astype(jnp.float32), packed, scale, zero, excl.astype(jnp.int32))
     return vals, idx
+
+
+def fused_topk_scores(q: jax.Array, packed: jax.Array, scale: jax.Array,
+                      zero: jax.Array, excl: jax.Array, *, bits: int,
+                      dim: int, k: int, n_items: int,
+                      block_i: int | None = None,
+                      interpret: bool = True):
+    """Top-K of ``q @ dequant(packed, scale, zero)ᵀ`` with exclusions.
+
+    q      : (B, dim) fp32 query vectors (dequantized user rows)
+    packed : (I, dp) uint8 chunk-interleaved codes, dp·(8/bits) >= dim
+    scale  : (I, 1) fp32, zero: (I, 1) fp32
+    excl   : (B, P) int32 item ids to force to -inf per row; -1 pads
+    returns (values (B, k) fp32, indices (B, k) int32) — bit-identical to
+    ``jax.lax.top_k`` over the dense masked score row.
+
+    ``block_i=None`` consults the autotune cache for the item chunk size
+    (measured winners per shape-bucket/bits/backend; old fixed 1024 on a
+    miss). The merge is lossless at ANY block_i >= k, so tuning it is
+    perf-only — the exactness contract above is block-size independent.
+    """
+    rows, _ = packed.shape
+    if block_i is None:
+        tuner = autotune.get()
+        measure = None
+        if tuner.sweep and not isinstance(q, jax.core.Tracer):
+            def measure(params):
+                jax.block_until_ready(_topk_call(
+                    q, packed, scale, zero, excl, bits=bits, dim=dim,
+                    k=k, n_items=n_items, interpret=interpret, **params))
+        block_i = tuner.pick(
+            "topk_score", shapes=(rows, dim, q.shape[0]), bits=bits,
+            extra=f"k{k}",
+            candidates=[{"block_i": c} for c in (256, 512, 1024, 2048)],
+            measure=measure, default={"block_i": 1024})["block_i"]
+    return _topk_call(q, packed, scale, zero, excl, bits=bits, dim=dim,
+                      k=k, n_items=n_items, block_i=block_i,
+                      interpret=interpret)

@@ -64,13 +64,14 @@ from repro.core import act_context
 from repro.core.policy import parse_schedule, policy_for_bits
 from repro.launch.mesh import make_production_mesh
 from repro.launch.partition import build_cell
-from repro.launch.roofline import HW, parse_hlo, roofline_terms
+from repro.launch.roofline import (HW, HW_PROFILES, get_hw, parse_hlo,
+                                   roofline_terms)
 
 
 def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
              bits: int | None, out_dir: str, verbose: bool = True,
              schedule: str | None = None,
-             sim: tuple | None = None) -> dict:
+             sim: tuple | None = None, hw: dict = HW) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod, sim=sim)
     n_dev = mesh.devices.size
     arch = get(arch_name)
@@ -121,7 +122,7 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
             "note": "XLA counts while bodies once; see roofline.*",
         }
         stats = parse_hlo(compiled.as_text(), n_devices=n_dev)
-        rec["roofline"] = roofline_terms(stats)
+        rec["roofline"] = roofline_terms(stats, hw=hw)
         if verbose:
             m = rec["memory"]
             r = rec["roofline"]
@@ -173,7 +174,11 @@ def main() -> None:
                     help="simulated mesh extents 'DxM' (or 'PxDxM' with "
                          "--multi-pod), e.g. --sim 2x4 — lowers the same "
                          "cells without 512 host devices")
+    ap.add_argument("--hw", default="tpu-v5e",
+                    choices=sorted(HW_PROFILES),
+                    help="hardware profile for the roofline denominators")
     args = ap.parse_args()
+    hw = get_hw(args.hw)
     sim = tuple(int(s) for s in args.sim.split("x")) if args.sim else None
     if sim is not None and args.both_meshes:
         # sim extents can match only one of the two axis layouts; the
@@ -199,11 +204,12 @@ def main() -> None:
             for sn in shape_names:
                 results.append(run_cell(an, sn, multi_pod=mp, bits=bits,
                                         out_dir=args.out,
-                                        schedule=args.schedule, sim=sim))
+                                        schedule=args.schedule, sim=sim,
+                                        hw=hw))
     ok = sum(r["ok"] for r in results)
     print(f"[dryrun] {ok}/{len(results)} cells compiled "
-          f"(hw: {HW['peak_flops']/1e12:.0f} TF/s, "
-          f"{HW['hbm_bw']/1e9:.0f} GB/s HBM, {HW['ici_bw']/1e9:.0f} GB/s ICI)")
+          f"(hw {args.hw}: {hw['peak_flops']/1e12:.0f} TF/s, "
+          f"{hw['hbm_bw']/1e9:.0f} GB/s HBM, {hw['ici_bw']/1e9:.0f} GB/s ICI)")
     if ok < len(results):
         raise SystemExit(1)
 

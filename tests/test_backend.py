@@ -1,0 +1,176 @@
+"""Backend dispatch + tile autotuner tests (ISSUE-6 acceptance).
+
+Covers:
+  * autotune cache round-trip determinism — the same backend fingerprint
+    and shape key must return the stored winner with ZERO re-measurement
+    in a fresh Autotuner (a second process loading the file);
+  * dispatch fallback — requesting compiled on a runner without a native
+    Pallas lowering delivers interpret and logs the degradation warning
+    exactly once per op;
+  * the shared heuristics (shape_bucket, pick_block) and the VMEM-budget
+    env override that steers the DMA-vs-VMEM SPMM dispatch.
+"""
+
+import json
+import logging
+
+import pytest
+
+from repro.kernels import autotune, backend
+
+# ---------------------------------------------------------------------------
+# probe / dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_probe_backend_is_consistent():
+    info = backend.probe_backend()
+    assert info.platform in ("cpu", "gpu", "tpu", "cuda", "rocm")
+    assert info.fingerprint.startswith(info.platform + "-")
+    assert info.default_mode in backend.MODES
+    assert info.compiled_available == (info.default_mode == "compiled")
+    # probe is cached: same object both times
+    assert backend.probe_backend() is info
+
+
+def test_resolve_mode_auto_and_passthrough():
+    info = backend.probe_backend()
+    assert backend.resolve_mode("auto") == info.default_mode
+    assert backend.resolve_mode("interpret") == "interpret"
+    assert backend.resolve_mode("jnp") == "jnp"
+    with pytest.raises(ValueError, match="unknown mode"):
+        backend.resolve_mode("fastest")
+    assert backend.interpret_flag("compiled") is False
+    assert backend.interpret_flag("interpret") is True
+    assert backend.interpret_flag("jnp") is True
+
+
+@pytest.mark.skipif(backend.probe_backend().compiled_available,
+                    reason="this runner HAS a compiled Pallas lowering; "
+                           "the degradation path cannot trigger")
+def test_compiled_request_degrades_with_one_warning(caplog):
+    """compiled requested, interpret delivered, warning logged ONCE."""
+    backend.reset_warnings()
+    with caplog.at_level(logging.WARNING, logger="repro.kernels.backend"):
+        m1 = backend.resolve_mode("compiled", op="spmm")
+        m2 = backend.resolve_mode("compiled", op="spmm")   # no second warn
+        m3 = backend.resolve_mode("compiled", op="quant_pack")  # new op
+    assert m1 == m2 == m3 == "interpret"
+    warns = [r for r in caplog.records if "delivering interpret" in
+             r.getMessage()]
+    assert len(warns) == 2                     # one per op, not per call
+    assert "spmm" in warns[0].getMessage()
+    backend.reset_warnings()
+
+
+def test_vmem_budget_env_override(monkeypatch):
+    default = backend.vmem_budget_bytes()
+    assert default == 16 * 2**20
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "4096")
+    assert backend.vmem_budget_bytes() == 4096
+
+
+def test_pick_block_divides():
+    assert backend.pick_block(512, 512) == 512
+    assert backend.pick_block(96, 512) == 96
+    assert backend.pick_block(96, 64) == 48
+    assert backend.pick_block(17, 8) == 1
+
+
+# ---------------------------------------------------------------------------
+# autotuner
+# ---------------------------------------------------------------------------
+
+
+def test_shape_bucket_powers_of_two():
+    assert [autotune.shape_bucket(n) for n in (0, 1, 2, 3, 64, 65, 4096)] \
+        == [1, 1, 2, 4, 64, 128, 4096]
+
+
+def test_autotune_key_buckets_nearby_shapes():
+    k1 = autotune.Autotuner.key("spmm", (2000, 128, 16000), bits=4)
+    k2 = autotune.Autotuner.key("spmm", (1500, 100, 9000), bits=4)
+    assert k1 == k2 == "spmm|2048x128x16384|b4"
+    assert autotune.Autotuner.key("topk", (8,), extra="k20") == \
+        "topk|8|k20"
+
+
+def test_autotune_sweep_picks_fastest_and_caches(tmp_path):
+    path = str(tmp_path / "cache.json")
+    tuner = autotune.Autotuner(path, sweep=True, fingerprint="test-fp",
+                               reps=1)
+    calls = []
+
+    def measure(params):
+        calls.append(params["block"])
+        if params["block"] == 13:
+            raise ValueError("invalid tile on this backend")
+
+    win = tuner.pick("op", shapes=(100, 64), bits=4,
+                     candidates=[{"block": 8}, {"block": 13}, {"block": 32}],
+                     measure=measure, default={"block": 99})
+    assert win["block"] in (8, 32)             # 13 raised -> excluded
+    assert tuner.n_sweeps == 2
+    # the invalid candidate is absent from the stored timings
+    with open(path) as f:
+        data = json.load(f)
+    entry = data["test-fp"]["op|128x64|b4"]
+    assert entry["winner"] == win
+    assert all("13" not in k for k in entry["us"])
+
+
+def test_autotune_cache_roundtrip_no_resweep(tmp_path):
+    """Determinism contract: same fingerprint -> same winners, and a
+    fresh Autotuner over the same file performs ZERO measurements."""
+    path = str(tmp_path / "cache.json")
+    t1 = autotune.Autotuner(path, sweep=True, fingerprint="fp-a", reps=1)
+    win1 = t1.pick("spmm", shapes=(512, 128), bits=None,
+                   candidates=[{"block_d": 64}, {"block_d": 128}],
+                   measure=lambda p: None, default={"block_d": 512})
+
+    t2 = autotune.Autotuner(path, sweep=True, fingerprint="fp-a", reps=1)
+
+    def explode(params):
+        raise AssertionError("cache hit must not re-measure")
+
+    win2 = t2.pick("spmm", shapes=(512, 128), bits=None,
+                   candidates=[{"block_d": 64}, {"block_d": 128}],
+                   measure=explode, default={"block_d": 512})
+    assert win1 == win2
+    assert t2.n_sweeps == 0
+
+    # a DIFFERENT fingerprint must not see fp-a's winners
+    t3 = autotune.Autotuner(path, sweep=False, fingerprint="fp-b")
+    assert t3.lookup(autotune.Autotuner.key("spmm", (512, 128))) is None
+
+
+def test_autotune_default_without_sweep(tmp_path):
+    """sweep disabled + cache miss -> heuristic default, nothing written."""
+    path = str(tmp_path / "cache.json")
+    tuner = autotune.Autotuner(path, sweep=False, fingerprint="fp-c")
+    win = tuner.pick("dqmm", shapes=(64, 64), bits=2,
+                     candidates=[{"block": 1}],
+                     measure=lambda p: (_ for _ in ()).throw(
+                         AssertionError("must not measure")),
+                     default={"block": 7})
+    assert win == {"block": 7}
+    assert tuner.n_sweeps == 0
+    import os
+    assert not os.path.exists(path)            # defaults are not cached
+
+
+def test_autotune_corrupt_cache_recovers(tmp_path):
+    path = tmp_path / "cache.json"
+    path.write_text("{not json")
+    tuner = autotune.Autotuner(str(path), sweep=False, fingerprint="fp")
+    assert tuner.lookup("anything") is None    # fresh empty cache
+
+
+def test_singleton_reset(tmp_path):
+    orig = autotune.get()
+    try:
+        t = autotune.reset(str(tmp_path / "c.json"), sweep=False)
+        assert autotune.get() is t
+        assert t.path == str(tmp_path / "c.json")
+    finally:
+        autotune._singleton = orig

@@ -61,25 +61,31 @@ def test_dequant_matmul_vs_oracle(bits, shape, n):
 
 
 @pytest.mark.parametrize("bits", [1, 2, 4])
-def test_quantize_odd_feature_dim_falls_back(bits):
-    """d % (8/bits) != 0 can't use the fused pack kernel; ops.quantize
-    must fall back to the jnp quantizer (same QTensor layout) instead of
-    raising."""
+def test_quantize_odd_feature_dim_stays_fused(bits):
+    """d % (8/bits) != 0 pads the last pack chunk IN-KERNEL (masked
+    minmax, zero pad codes) — no more silent jnp fallback. The result is
+    bit-exact vs the counter-hash oracle, whose pack_bits zero-pads the
+    tail the same way."""
     d = 65  # odd: 65 % {8,4,2} != 0
     x = jax.random.normal(KEY, (12, d))
     q = kops.quantize(x, KEY, bits=bits)  # must not raise
-    from repro.core.quant import quantize as core_q
-    r = core_q(x, KEY, bits=bits)  # fallback == jnp quantizer, same draws
-    np.testing.assert_array_equal(np.asarray(q.packed), np.asarray(r.packed))
+    rp, rs, rz = kref.ref_quant_pack(x, key_to_seed(KEY), bits=bits)
+    np.testing.assert_array_equal(np.asarray(q.packed), np.asarray(rp))
+    np.testing.assert_allclose(np.asarray(q.scale), np.asarray(rs), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(q.zero), np.asarray(rz), rtol=1e-6)
     # roundtrip bounded by one quantization bin per row
     err = jnp.abs(core_dequantize(q) - x)
     assert float((err - q.scale).max()) < 1e-5
+    # fused dequant strips the pad features
+    np.testing.assert_allclose(np.asarray(kops.dequantize(q)),
+                               np.asarray(core_dequantize(q)), atol=1e-6)
 
 
 def test_odd_feature_dim_trains_end_to_end_pallas():
-    """The padded-pack fallback QTensor must survive the BACKWARD too:
-    dequant_matmul and spmm_grad_ew both consume it (regression: the
-    fused kernel asserted dp*cpb == dim and crashed in grad)."""
+    """The padded-pack QTensor must survive the BACKWARD too: the fused
+    dequant_matmul and spmm_grad_ew kernels consume it directly, masking
+    the tail features in-kernel (regression: they used to assert
+    dp*cpb == dim and fall back / crash in grad)."""
     from repro.core import act_matmul
     from repro.core.policy import ACTPolicy
     d = 65

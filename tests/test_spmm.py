@@ -161,6 +161,95 @@ def test_dequant_sddmm_reads_packed_residual(bits):
 
 
 # ---------------------------------------------------------------------------
+# HBM-DMA double-buffered variants vs the VMEM-resident kernels
+# ---------------------------------------------------------------------------
+
+
+def test_dma_spmm_forward_bit_exact_vs_vmem():
+    """The DMA gather feeds the SAME one-hot matmul in the same block
+    order, so forward and transpose must match the VMEM kernel BIT-exactly
+    — not just within tolerance."""
+    src, dst, x, ew = _graph(N=64, E=512, d=48, seed=9)
+    lay = build_spmm_layout(src, dst, n_dst=64, block_e=64, block_rows=16)
+    for transpose in (False, True):
+        a = ksp.spmm(x, ew, lay, transpose=transpose, dma=False,
+                     interpret=True)
+        b = ksp.spmm(x, ew, lay, transpose=transpose, dma=True,
+                     interpret=True)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # unweighted + rectangular (n_src != n_dst) through the DMA path
+    src2, dst2, x2, _ = _graph(N=30, E=200, d=24, n_src=70, seed=10)
+    lay2 = build_spmm_layout(src2, dst2, n_dst=30, n_src=70,
+                             block_e=32, block_rows=8)
+    np.testing.assert_array_equal(
+        np.asarray(ksp.spmm(x2, None, lay2, dma=True, interpret=True)),
+        np.asarray(ksp.spmm(x2, None, lay2, dma=False, interpret=True)))
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_dma_dequant_sddmm_matches_vmem(bits):
+    """Streaming packed rows + g rows from HBM changes only the data
+    movement; the single full-width reduction may reassociate vs the
+    per-tile accumulation, so parity is ≤1e-5, not bit-exact."""
+    src, dst, x, _ = _graph(N=48, E=320, d=64, seed=12)
+    g = jax.random.normal(jax.random.fold_in(KEY, 3), (48, 64))
+    lay = build_spmm_layout(src, dst, n_dst=48, block_e=64, block_rows=16)
+    q = kops.quantize(x, KEY, bits=bits)
+    a = ksp.dequant_sddmm_ew(q.packed, q.scale, q.zero, g, lay,
+                             bits=bits, dim=64, dma=False, interpret=True)
+    b = ksp.dequant_sddmm_ew(q.packed, q.scale, q.zero, g, lay,
+                             bits=bits, dim=64, dma=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_budget_routes_to_dma_and_grads_match(monkeypatch):
+    """With the VMEM budget forced below the node-table size, ops.spmm /
+    ops.spmm_grad_ew must route to the DMA kernels (trace counters) and
+    end-to-end act_spmm grads must still match the reference to ≤1e-5."""
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "4096")  # 4 KB: nothing fits
+    src, dst, x, ew = _graph(N=40, E=220, d=32, seed=7)
+    lay = build_spmm_layout(src, dst, n_dst=40, block_e=64, block_rows=16)
+
+    base = dict(kops.TRACE_COUNTS)
+    out = kops.spmm(x, ew, lay)
+    used = {k: kops.TRACE_COUNTS[k] - base.get(k, 0)
+            for k in kops.TRACE_COUNTS}
+    assert used.get("spmm_dma", 0) == 1 and used.get("spmm", 0) == 0
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        np.asarray(ksp.spmm(x, ew, lay, dma=False, interpret=True)))
+
+    def ref_loss(x_, ew_):
+        return (_ref_spmm(x_, src, dst, ew_, 40) ** 2).sum()
+
+    def act_loss(x_, ew_):
+        pol = ACTPolicy(bits=None, kernel="pallas")  # fp32 residual
+        return (act_spmm(x_, src, dst, ew_, num_nodes=40, key=KEY,
+                         policy=pol, layout=lay) ** 2).sum()
+
+    ex, eew = jax.grad(ref_loss, argnums=(0, 1))(x, ew)
+    gx, gew = jax.grad(act_loss, argnums=(0, 1))(x, ew)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(ex),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gew), np.asarray(eew),
+                               rtol=1e-5, atol=1e-5)
+
+    # packed residual: ∇ew must route through the DMA dequant-SDDMM
+    base = dict(kops.TRACE_COUNTS)
+    q = kops.quantize(x, KEY, bits=4)
+    g = jax.random.normal(jax.random.fold_in(KEY, 4), (40, 32))
+    dew = kops.spmm_grad_ew(q, g, lay)
+    used = {k: kops.TRACE_COUNTS[k] - base.get(k, 0)
+            for k in kops.TRACE_COUNTS}
+    assert used.get("dequant_sddmm_dma", 0) == 1
+    ref = ksp.dequant_sddmm_ew(q.packed, q.scale, q.zero, g, lay,
+                               bits=4, dim=32, dma=False, interpret=True)
+    np.testing.assert_allclose(np.asarray(dew), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # act_spmm integration: gradients
 # ---------------------------------------------------------------------------
 
