@@ -1,0 +1,86 @@
+"""Minibatch-subsystem bench: device footprint + host-device transfer.
+
+The tiering acceptance bar (ISSUE 7 / ROADMAP item 1): on a
+zipfian-degree KG whose full entity table does NOT need to be device
+resident, sampled training with a ``hot_frac=0.1`` frequency-ranked hot
+tier must (a) keep the hot-cache hit rate >= 80% of row requests,
+(b) move >= 2x fewer rows per step than the same run with no hot tier,
+and (c) train with peak device bytes under the full-table budget.
+
+Rows land in ``BENCH_kernels.json`` keyed by
+``bench="minibatch"``/``model``/``n_nodes``/``dim``;
+``rows_transferred_per_step_ratio`` (no-cache over hot, higher is
+better) is gated by ``check_regression.py``. All gated numbers are
+deterministic (seeded sampler + seeded init); only ``step_ms`` varies
+with the runner.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+ZIPF = dict(n_users=3000, n_items=70000, n_attrs=27000, n_relations=6,
+            n_triples=100000, inter_per_user=12, zipf_a=2.0, seed=0)
+FANOUTS = (10, 5)
+DIM = 16
+BATCH = 64
+HOT_FRAC = 0.1
+LR = 0.01
+
+
+def run(steps: int = 40) -> list:
+    import jax
+
+    from repro.data.synthetic import gen_zipf_kg_dataset
+    from repro.models.registry import build_step
+    from repro.training.tiering import run_sampled_training
+
+    ds = gen_zipf_kg_dataset(**ZIPF)
+    reports = {}
+    for hot_frac in (HOT_FRAC, 0.0):
+        step = build_step("kgat", ds=ds, batch_size=BATCH,
+                          n_layers=len(FANOUTS), dim=DIM,
+                          device_graph=False)
+        rep, _, store = run_sampled_training(
+            step, fanouts=FANOUTS, steps=steps, batch_size=BATCH,
+            hot_frac=hot_frac, lr=LR, seed=0,
+            init_key=jax.random.PRNGKey(0), measure_bytes=True)
+        reports[hot_frac] = (rep, store)
+        print(f"  hot_frac={hot_frac}: hit {rep.hit_rate:.2%}  "
+              f"rows/step {rep.rows_transferred_per_step:.0f}  "
+              f"peak {rep.peak_device_bytes / 2**20:.2f} MiB  "
+              f"step {rep.step_ms:.1f} ms")
+    hot, _ = reports[HOT_FRAC]
+    cold, _ = reports[0.0]
+    ratio = (cold.rows_transferred_per_step
+             / max(hot.rows_transferred_per_step, 1.0))
+    row = {
+        "bench": "minibatch",
+        "model": "kgat",
+        "n_nodes": ds.graph.n_nodes,
+        "n_edges": int(np.asarray(ds.graph.src).shape[0]),
+        "dim": DIM,
+        "fanouts": list(FANOUTS),
+        "batch": BATCH,
+        "hot_frac": HOT_FRAC,
+        "steps": hot.n_steps,
+        "hit_rate": round(hot.hit_rate, 4),
+        "rows_transferred_per_step": round(
+            hot.rows_transferred_per_step, 1),
+        "rows_transferred_per_step_nocache": round(
+            cold.rows_transferred_per_step, 1),
+        "rows_transferred_per_step_ratio": round(ratio, 3),
+        "peak_device_bytes": int(hot.peak_device_bytes),
+        "hot_tier_bytes": int(hot.store_device_bytes),
+        "table_bytes": int(hot.table_bytes),
+        "step_ms": round(hot.step_ms, 2),
+        "loss_first": round(float(np.mean(hot.losses[:10])), 4),
+        "loss_last": round(float(np.mean(hot.losses[-10:])), 4),
+    }
+    print(f"  transfer ratio (no-cache / hot) {ratio:.2f}x  "
+          f"hit {hot.hit_rate:.2%}")
+    return [row]
+
+
+if __name__ == "__main__":
+    print(run())

@@ -20,15 +20,15 @@ def main() -> None:
                     help="fewer steps (CI-speed)")
     ap.add_argument("--only", default=None,
                     help="table234|table5|table6|fig2|fig3|kernels|serve|"
-                         "roofline")
+                         "roofline|minibatch")
     ap.add_argument("--out", default="artifacts/bench")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
     steps = 60 if args.quick else 200
 
-    from . import (fig2_curves, fig3_ratio, kernel_bench, roofline_bench,
-                   serve_bench, table5_memory_speed, table6_rounding,
-                   table234_accuracy)
+    from . import (fig2_curves, fig3_ratio, kernel_bench, minibatch_bench,
+                   roofline_bench, serve_bench, table5_memory_speed,
+                   table6_rounding, table234_accuracy)
 
     jobs = {
         "table234": lambda: table234_accuracy.run(steps=steps),
@@ -39,6 +39,8 @@ def main() -> None:
         "kernels": lambda: kernel_bench.run(),
         "serve": lambda: serve_bench.run(requests=60 if args.quick else 200),
         "roofline": lambda: roofline_bench.run(quick=args.quick),
+        "minibatch": lambda: minibatch_bench.run(
+            steps=15 if args.quick else 40),
     }
     if args.only:
         jobs = {args.only: jobs[args.only]}
@@ -52,7 +54,7 @@ def main() -> None:
         summary[name] = rows
         with open(os.path.join(args.out, f"{name}.json"), "w") as f:
             json.dump(rows, f, indent=1)
-        if name in ("kernels", "serve", "roofline"):
+        if name in ("kernels", "serve", "roofline", "minibatch"):
             gated_rows.extend(rows)
     if gated_rows:
         # perf trajectory tracked across PRs: committed at repo root.
@@ -76,7 +78,9 @@ def main() -> None:
                         row.get("topk_jnp_us", 0)))
             derived = row.get("recall@20", row.get("mem_ratio",
                               row.get("loss", row.get("rel_drop_%",
-                              row.get("fused_traffic_ratio", "")))))
+                              row.get("fused_traffic_ratio",
+                              row.get("rows_transferred_per_step_ratio",
+                                      ""))))))
             tag = "/".join(str(row.get(k)) for k in
                            ("model", "bits", "rounding", "dim", "step")
                            if k in row)

@@ -47,8 +47,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["CSRMeta", "SpmmLayout", "build_spmm_layout", "attach_layout",
-           "maybe_attach_layout", "EdgePartition", "partition_edges",
-           "unpartition_edges"]
+           "maybe_attach_layout", "static_block_caps", "EdgePartition",
+           "partition_edges", "unpartition_edges"]
 
 # KGNN propagation rules that aggregate through act_spmm (and therefore
 # benefit from a blocked-CSR layout). KGIN/R-GCN modulate messages with
@@ -108,9 +108,34 @@ class SpmmLayout:
         return sum(a.size * 4 for a in self.tree_flatten()[0])
 
 
+def static_block_caps(n_edges: int, n_out: int, *, block_e: int = 256,
+                      block_rows: int = 256) -> int:
+    """Worst-case block count of ``_build_direction`` for ANY assignment
+    of ``n_edges`` edges to ``n_out`` output rows.
+
+    ``sum_i ceil(c_i / block_e) <= floor(E / block_e) + n_tiles`` (each
+    tile wastes < 1 block, the floors sum below the global floor), and
+    every tile emits at least one block. Padding a layout to this cap
+    (``build_spmm_layout(pad_static=True)``) makes the layout geometry a
+    function of (n_edges, n_out, block sizes) alone — the property the
+    neighbor-sampled minibatch path needs so a stream of same-shape
+    sampled subgraphs shares ONE jit trace of the fused SPMM.
+    """
+    n_tiles = max(1, -(-n_out // block_rows))
+    return n_edges // block_e + n_tiles
+
+
 def _build_direction(gather_ids: np.ndarray, out_ids: np.ndarray,
-                     n_out: int, block_e: int, block_rows: int):
-    """Slot arrays for one aggregation direction (into ``n_out`` rows)."""
+                     n_out: int, block_e: int, block_rows: int,
+                     pad_to_blocks: int | None = None):
+    """Slot arrays for one aggregation direction (into ``n_out`` rows).
+
+    ``pad_to_blocks`` appends all-pad edge blocks (``perm == n_edges``,
+    zero contribution) assigned to the LAST output tile — contiguous
+    with its existing run, so the kernel's init-on-first-block-of-tile
+    contract still holds — until the block count reaches the given
+    static capacity.
+    """
     E = int(out_ids.shape[0])
     n_tiles = max(1, -(-n_out // block_rows))
     order = np.argsort(out_ids, kind="stable").astype(np.int64)
@@ -137,6 +162,24 @@ def _build_direction(gather_ids: np.ndarray, out_ids: np.ndarray,
     perm_blk[slot] = order
     tile_of_blk = np.repeat(np.arange(n_tiles, dtype=np.int32),
                             blocks_per_tile)
+    if pad_to_blocks is not None:
+        if n_blocks > pad_to_blocks:
+            raise ValueError(
+                f"layout needs {n_blocks} blocks, static cap is "
+                f"{pad_to_blocks} (E={E}, n_out={n_out})")
+        extra = pad_to_blocks - n_blocks
+        if extra:
+            pad_slots = extra * block_e
+            gat_blk = np.concatenate([gat_blk, np.zeros(pad_slots, np.int32)])
+            outg_blk = np.concatenate([outg_blk,
+                                       np.zeros(pad_slots, np.int32)])
+            lrow_blk = np.concatenate([lrow_blk,
+                                       np.zeros(pad_slots, np.int32)])
+            perm_blk = np.concatenate([perm_blk,
+                                       np.full(pad_slots, E, np.int32)])
+            tile_of_blk = np.concatenate([
+                tile_of_blk, np.full(extra, n_tiles - 1, np.int32)])
+        n_blocks = pad_to_blocks
     shape = (n_blocks, block_e)
     return (gat_blk.reshape(shape), outg_blk.reshape(shape),
             lrow_blk.reshape(shape), perm_blk.reshape(shape),
@@ -144,7 +187,8 @@ def _build_direction(gather_ids: np.ndarray, out_ids: np.ndarray,
 
 
 def build_spmm_layout(src, dst, *, n_dst: int, n_src: int | None = None,
-                      block_e: int = 256, block_rows: int = 256) -> SpmmLayout:
+                      block_e: int = 256, block_rows: int = 256,
+                      pad_static: bool = False) -> SpmmLayout:
     """One-time host-side preprocessing of a COO edge list.
 
     src / dst : (E,) integer endpoints (any array-like).
@@ -152,20 +196,31 @@ def build_spmm_layout(src, dst, *, n_dst: int, n_src: int | None = None,
     n_src     : row count of the gathered table; defaults to ``n_dst``
                 (set explicitly when x is a gathered global table wider
                 than the local output shard).
+    pad_static: pad both directions' block counts to the data-independent
+                ``static_block_caps`` worst case, so every layout built
+                for the same (E, n_src, n_dst, block sizes) has identical
+                pytree shapes — required when layouts stream through a
+                jitted step per minibatch (``repro.data.minibatch``).
     """
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
     if src.shape != dst.shape or src.ndim != 1:
         raise ValueError(f"bad edge list shapes {src.shape}/{dst.shape}")
     n_src = int(n_src if n_src is not None else n_dst)
+    E = int(src.shape[0])
+    cap = (lambda n_out: static_block_caps(
+        E, n_out, block_e=block_e, block_rows=block_rows)) \
+        if pad_static else (lambda n_out: None)
 
     (src_blk, dstg_blk, ldst_blk, perm_blk, tile_of_blk,
      n_blocks, n_tiles) = _build_direction(src, dst, n_dst,
-                                           block_e, block_rows)
+                                           block_e, block_rows,
+                                           pad_to_blocks=cap(n_dst))
     # transpose: gather rows of g at dst, accumulate into src rows
     (t_src_blk, _t_outg, t_ldst_blk, t_perm_blk, t_tile_of_blk,
      t_n_blocks, t_n_tiles) = _build_direction(dst, src, n_src,
-                                               block_e, block_rows)
+                                               block_e, block_rows,
+                                               pad_to_blocks=cap(n_src))
 
     meta = CSRMeta(n_src=n_src, n_dst=int(n_dst), n_edges=int(src.shape[0]),
                    block_e=block_e, block_rows=block_rows,

@@ -56,8 +56,16 @@ def sample_blocks(indptr: np.ndarray, indices: np.ndarray,
         uniq, inv = np.unique(src_nodes, return_inverse=True)
         n_src_static = n_dst * (fanout + 1)
         pad = n_src_static - len(uniq)
+        # pad by cycling the FRONTIER's own node ids. The old
+        # ``np.full(pad, uniq[0])`` repeated whichever node happened to
+        # have the smallest global id — when a zero-degree seed
+        # contributed only its self-loop, that id need not be a frontier
+        # member at all, breaking the "pad = the node itself" self-loop
+        # semantics the docstring promises. Frontier ids are always
+        # legitimate members of the next hop's node set.
         src_nodes_padded = np.concatenate(
-            [uniq, np.full(pad, uniq[0], np.int64)])
+            [uniq, np.resize(frontier, pad) if pad else
+             np.empty(0, np.int64)])
         # edges: neighbor j of frontier i -> edge (local(nbr), i); plus self
         loc_nbr = inv[n_dst:].reshape(n_dst, fanout)
         loc_self = inv[:n_dst]

@@ -24,8 +24,8 @@ import numpy as np
 
 from repro.models.kgnn import CKG
 
-__all__ = ["KGDataset", "gen_kg_dataset", "bpr_batches", "lm_batches",
-           "criteo_batches", "cora_like"]
+__all__ = ["KGDataset", "gen_kg_dataset", "gen_zipf_kg_dataset",
+           "bpr_batches", "lm_batches", "criteo_batches", "cora_like"]
 
 
 @dataclasses.dataclass
@@ -127,6 +127,56 @@ def gen_kg_dataset(*, n_users=200, n_items=300, n_attrs=150, n_relations=6,
         n_nodes=n_nodes,
         n_relations=2 * n_relations + 2,
     )
+    return KGDataset(graph, n_users, n_items, n_entities,
+                     graph.n_relations, train_pos, test_pos)
+
+
+def gen_zipf_kg_dataset(*, n_users=300, n_items=500, n_attrs=200,
+                        n_relations=6, n_triples=6000, inter_per_user=20,
+                        zipf_a=1.1, test_frac=0.2, seed=0) -> KGDataset:
+    """KG with Zipf-skewed in-degree — the data-tiering setting.
+
+    Item/attr popularity follows a power law (``p(rank) ∝ rank^-a``), so
+    a small fraction of entity rows receives most neighbor-sample
+    requests; this is the graph the hot/cold tier cache is benchmarked
+    on (hit rate ≥ 80% at ``hot_frac=0.1``). Same node space and
+    relation layout as ``gen_kg_dataset``:
+    ``[users | items | attrs]``, interact=0 both ways, KG relations
+    shifted (+inverse), self-loops last.
+    """
+    rng = np.random.default_rng(seed)
+
+    def zipf_choice(n, size):
+        p = 1.0 / np.arange(1, n + 1) ** zipf_a
+        return rng.choice(n, size=size, p=p / p.sum())
+
+    inter = np.stack([
+        np.repeat(np.arange(n_users), inter_per_user),
+        zipf_choice(n_items, n_users * inter_per_user)], axis=1)
+    inter = np.unique(inter.astype(np.int64), axis=0)
+    rng.shuffle(inter)
+    n_test = int(len(inter) * test_frac)
+    test_pos, train_pos = inter[:n_test], inter[n_test:]
+
+    heads = zipf_choice(n_items, n_triples).astype(np.int64)
+    rels = rng.integers(0, n_relations, n_triples)
+    tails = zipf_choice(n_attrs, n_triples).astype(np.int64)
+
+    n_entities = n_items + n_attrs
+    n_nodes = n_users + n_entities
+    u_nodes, i_nodes = train_pos[:, 0], n_users + train_pos[:, 1]
+    h_nodes, t_nodes = n_users + heads, n_users + n_items + tails
+    loops = np.arange(n_nodes)
+    graph = CKG(
+        src=np.concatenate([u_nodes, i_nodes, h_nodes, t_nodes,
+                            loops]).astype(np.int32),
+        dst=np.concatenate([i_nodes, u_nodes, t_nodes, h_nodes,
+                            loops]).astype(np.int32),
+        rel=np.concatenate([
+            np.zeros(2 * len(train_pos), np.int64), rels + 1,
+            rels + 1 + n_relations,
+            np.full(n_nodes, 2 * n_relations + 1)]).astype(np.int32),
+        n_nodes=n_nodes, n_relations=2 * n_relations + 2)
     return KGDataset(graph, n_users, n_items, n_entities,
                      graph.n_relations, train_pos, test_pos)
 

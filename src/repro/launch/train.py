@@ -86,6 +86,36 @@ def _dp_train_step(step, args, opt, root_key, schedule):
     return train_step
 
 
+def _run_sampled(arch, args, schedule, schedule_spec) -> None:
+    """--sample: minibatch KG training through the tiered row store."""
+    from repro.data.minibatch import parse_fanouts
+    from repro.models.registry import build_step
+    from repro.training import tiering
+
+    try:
+        fanouts = parse_fanouts(args.sample)
+    except ValueError as e:
+        raise SystemExit(f"error: {e}")
+    kwargs = {"n_layers": len(fanouts)} if arch.family == "kgnn" else {}
+    step = build_step(arch, schedule=schedule, **kwargs)
+    print(f"[train] sampled {args.arch} ({arch.family}) "
+          f"fanouts={fanouts} hot_frac={args.hot_frac} "
+          f"schedule={schedule_spec}")
+    try:
+        report, _, store = tiering.run_sampled_training(
+            step, fanouts=fanouts, steps=args.steps,
+            batch_size=args.batch, hot_frac=args.hot_frac,
+            schedule=schedule, root_key=jax.random.PRNGKey(1),
+            init_key=jax.random.PRNGKey(0), log_fn=print)
+    except ValueError as e:
+        raise SystemExit(f"error: {e}")
+    print(f"[train] done; loss {report.losses[0]:.4f} -> "
+          f"{report.losses[-1]:.4f}  hit-rate {report.hit_rate:.2%}  "
+          f"rows/step {report.rows_transferred_per_step:.0f}  "
+          f"hot-tier {report.store_device_bytes/2**20:.2f} MiB of "
+          f"{report.table_bytes/2**20:.2f} MiB table")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
@@ -103,8 +133,24 @@ def main() -> None:
     ap.add_argument("--allreduce", default="int8", choices=["int8", "fp32"],
                     help="gradient all-reduce wire format on the --mesh "
                          "path (int8 = compressed SR psum)")
+    ap.add_argument("--sample", default=None,
+                    help="fanout=F1,F2,...: neighbor-sampled minibatch "
+                         "training with hot/cold embedding tiering (KG "
+                         "archs; one fanout per layer, seed-adjacent "
+                         "first), e.g. --sample fanout=15,10")
+    ap.add_argument("--hot-frac", type=float, default=0.1,
+                    help="--sample: fraction of entity rows kept device-"
+                         "resident (frequency-ranked hot tier)")
+    ap.add_argument("--batch", type=int, default=256,
+                    help="--sample: BPR batch size per sampled step")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
+    if args.sample and args.mesh:
+        from repro.training.data_parallel import check_no_sampled_dp
+        try:
+            check_no_sampled_dp(args.sample, mesh_spec=args.mesh)
+        except NotImplementedError as e:
+            raise SystemExit(f"error: {e}")
     if args.mesh:
         # must precede every jax call: the device count locks at first init
         _force_host_devices(_parse_mesh(args.mesh)[1])
@@ -114,6 +160,9 @@ def main() -> None:
 
     from repro.models.registry import build_step
 
+    if args.sample:
+        _run_sampled(arch, args, schedule, schedule_spec)
+        return
     step = build_step(arch, schedule=schedule)
     opt = adam(step.lr)
     root = jax.random.PRNGKey(1)

@@ -56,8 +56,9 @@ from .layers import glorot, normal_init
 __all__ = [
     "KGNNConfig", "CKG", "segment_softmax", "kgat_bi_interaction",
     "init_params", "propagate", "score_pairs", "bpr_loss",
-    "FullGraphView", "ShardGraphView", "model_sites",
-    "propagate_view", "kg_shard_loss", "readout",
+    "FullGraphView", "ShardGraphView", "BlockView", "SampledGraphView",
+    "model_sites", "propagate_view", "kg_shard_loss", "readout",
+    "sampled_bpr_loss", "sampled_reps",
 ]
 
 
@@ -122,12 +123,43 @@ def segment_softmax(logits: jax.Array, seg: jax.Array, num_segments: int):
 
 
 # ---------------------------------------------------------------------------
-# graph views: one set of layer functions, two execution layouts
+# graph views: one set of layer functions, three execution layouts
 # ---------------------------------------------------------------------------
 
 
+class _ViewDefaults:
+    """Hooks every view shares; identity for the whole-graph views.
+
+    The sampled-minibatch path (``SampledGraphView``) is the only one
+    that overrides them: its edge set *changes per layer* (per-hop
+    fanout blocks) and its row space *shrinks toward the seeds*, so the
+    shared layer functions ask the view instead of assuming one static
+    edge list. On ``FullGraphView``/``ShardGraphView`` every hook
+    returns its argument unchanged — the jaxpr is identical to the
+    pre-hook code, which the pinned bit-exact step regression relies on.
+    """
+
+    def layer_view(self, layer: int):
+        """The view layer ``layer`` aggregates over (self for the
+        whole-graph views; hop block ``layer`` for the sampled view)."""
+        return self
+
+    def layer_weights(self, weights, layer: int):
+        """Slice the once-computed edge-weight data for one layer."""
+        return weights
+
+    def self_rows(self, e):
+        """Restrict a source-row table to this layer's destination rows
+        (the self/residual term of kgat/kgcn/rgcn)."""
+        return e
+
+    def seed_rows(self, e):
+        """Restrict a layer output to the rows the readout keeps."""
+        return e
+
+
 @dataclasses.dataclass(frozen=True)
-class FullGraphView:
+class FullGraphView(_ViewDefaults):
     """The whole COO graph on one device — every hook is the identity.
 
     ``src`` indexes the table returned by ``table`` (== the node table
@@ -179,7 +211,7 @@ class FullGraphView:
 
 
 @dataclasses.dataclass(frozen=True)
-class ShardGraphView:
+class ShardGraphView(_ViewDefaults):
     """One shard of a dst-partitioned graph, inside a ``shard_map`` body.
 
     Built from one row of ``repro.data.csr.EdgePartition``: ``src`` is
@@ -231,6 +263,121 @@ class ShardGraphView:
 
     def edge_ones(self, dtype):
         return self.mask.astype(dtype)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BlockView(_ViewDefaults):
+    """One sampled fanout hop: a bipartite edge block, view-shaped.
+
+    Built host-side by ``repro.data.minibatch.sample_kg_blocks``. Local
+    indexing rides on the *seeds-prefix invariant*: the hop's
+    destination frontier is a prefix of its source frontier (which is a
+    prefix of the outermost gathered node set), so
+
+      * ``src`` indexes the CURRENT layer input table (``n_src`` rows),
+      * ``dst`` indexes the same table's first ``n_dst`` rows,
+      * both remain valid positions into the outermost layer-0 table —
+        which is what lets per-hop KGAT/KGCN edge weights be computed
+        once from the layer-0 embeddings, exactly like the full-graph
+        semantics.
+
+    ``mask`` zeroes pad edges (zero-degree destinations); ``layout`` is
+    an optional static-geometry blocked-CSR ``SpmmLayout`` over the
+    SAME slot order, so the fused Pallas SPMM runs unchanged on the
+    sampled subgraph. ``n_src``/``n_dst`` are pytree aux data — static
+    under jit, so a stream of same-shape blocks never retraces.
+    """
+
+    src: jax.Array        # (Eb,) block-local source index
+    dst: jax.Array        # (Eb,) block-local destination index (< n_dst)
+    rel: jax.Array        # (Eb,) relation ids
+    mask: jax.Array       # (Eb,) 1=real sampled edge, 0=pad
+    layout: object | None  # SpmmLayout over this block's edges, or None
+    n_src: int            # static source-frontier size
+    n_dst: int            # static destination-frontier size
+
+    def tree_flatten(self):
+        return (self.src, self.dst, self.rel, self.mask, self.layout), (
+            self.n_src, self.n_dst)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        src, dst, rel, mask, layout = children
+        return cls(src, dst, rel, mask, layout, *aux)
+
+    @property
+    def num_rows(self) -> int:
+        return self.n_dst
+
+    def local_rows(self, table):
+        return table
+
+    def table(self, x, axis: int = 0):
+        return x
+
+    def unshard(self, x, axis: int = 0):
+        return x
+
+    def mask_logits(self, logits):
+        return jnp.where(self.mask > 0, logits, -1e30)
+
+    def mask_weights(self, w):
+        return w * self.mask
+
+    def mask_messages(self, m):
+        return m * self.mask[:, None]
+
+    def edge_ones(self, dtype):
+        return self.mask.astype(dtype)
+
+    def self_rows(self, e):
+        return e[: self.n_dst]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SampledGraphView(_ViewDefaults):
+    """Neighbor-sampled minibatch: one ``BlockView`` per layer.
+
+    ``blocks[l]`` is the hop layer ``l`` consumes (outermost hop first —
+    the layer-0 aggregation reads the largest frontier); the innermost
+    hop's destination set is exactly the seed set, whose first
+    ``n_seeds`` rows the readout keeps. ``params["entity"]`` is expected
+    to ALREADY be the gathered outermost row table — the tier cache
+    (``repro.training.tiering``) resolves global entity ids to rows
+    before the jitted step, so ``local_rows`` is the identity and the
+    step never sees the full table.
+    """
+
+    blocks: tuple         # (BlockView, ...) one per layer, outermost first
+    n_seeds: int          # rows of every hop frontier that are seeds
+
+    def tree_flatten(self):
+        return (self.blocks,), (self.n_seeds,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    @property
+    def n_input_rows(self) -> int:
+        """Rows of the gathered entity table the step expects."""
+        return self.blocks[0].n_src
+
+    def layer_view(self, layer: int):
+        return self.blocks[layer]
+
+    def layer_weights(self, weights, layer: int):
+        # kgat/kgcn: per-hop edge weights (a tuple); kgin: the
+        # hop-independent intent-weighted relation table; rgcn: None
+        return weights[layer] if isinstance(weights, tuple) else weights
+
+    def local_rows(self, table):
+        return table
+
+    def seed_rows(self, e):
+        return e[: self.n_seeds]
 
 
 def model_sites(cfg: KGNNConfig) -> tuple[tuple[str, str], ...]:
@@ -348,7 +495,7 @@ def _kgat_layer(p, layer: int, e: jax.Array, view, att: jax.Array, *,
                    num_nodes=view.num_rows, scope="spmm",
                    layout=view.layout, key=k.get("spmm"),
                    policy=po.get("spmm"))
-    return kgat_bi_interaction(p, layer, e, e_n, keys=keys,
+    return kgat_bi_interaction(p, layer, view.self_rows(e), e_n, keys=keys,
                                policies=policies)
 
 
@@ -361,7 +508,7 @@ def _kgcn_layer(p, layer: int, e: jax.Array, view, ew: jax.Array, *,
     h = act_spmm(view.table(e), view.src, view.dst, ew,
                  num_nodes=view.num_rows, scope="spmm", layout=view.layout,
                  key=k.get("spmm"), policy=po.get("spmm"))
-    j = act_matmul(h + e, p["w"][layer], scope="dense",
+    j = act_matmul(h + view.self_rows(e), p["w"][layer], scope="dense",
                    key=k.get("dense"), policy=po.get("dense"))
     j = j + p["b"][layer]
     return act_nonlin(j, scope="act",
@@ -408,7 +555,7 @@ def _rgcn_layer(p, layer: int, e: jax.Array, view, *,
                               num_segments=view.num_rows)
     agg = jax.ops.segment_sum(msgs, view.dst, num_segments=view.num_rows)
     agg = agg / jnp.maximum(deg, 1.0)[:, None]
-    self_t = act_matmul(e, p["w_self"][layer], scope="self",
+    self_t = act_matmul(view.self_rows(e), p["w_self"][layer], scope="self",
                         key=k.get("self"), policy=po.get("self"))
     return act_nonlin(agg + self_t, fn="leaky_relu", scope="act",
                       key=k.get("act"), policy=po.get("act"))
@@ -420,7 +567,17 @@ def _edge_weights(params: dict, e0: jax.Array, view, cfg: KGNNConfig):
     kgat: attention probabilities (E,); kgcn: relation-scored adjacency
     (E,); kgin: the intent-weighted relation table (R, d) its per-layer
     modulation reads; rgcn: nothing (coefficients are per-layer params).
+
+    On a ``SampledGraphView`` the edge set differs per hop, so the
+    edge-space weightings (kgat/kgcn) come back as a per-hop tuple —
+    each hop's weights still computed from the SAME layer-0 embeddings
+    (every hop frontier is a prefix of the outermost gathered table, so
+    block-local indices are valid positions into ``e0``), preserving
+    the once-from-layer-0 semantics the full-graph and DP paths pin.
+    ``view.layer_weights`` slices the tuple back out per layer.
     """
+    if isinstance(view, SampledGraphView) and cfg.model in ("kgat", "kgcn"):
+        return tuple(_edge_weights(params, e0, b, cfg) for b in view.blocks)
     if cfg.model == "kgat":
         return _kgat_attention(params, e0, view)
     if cfg.model == "kgcn":
@@ -454,29 +611,31 @@ def propagate_view(params: dict, view, cfg: KGNNConfig, *, ctx=None,
         off-limits inside one), the data-parallel path.
     """
     e = view.local_rows(params["entity"])
-    outs = [e]
+    outs = [view.seed_rows(e)]
     weights = _edge_weights(params, e, view, cfg)
     for l in range(cfg.n_layers):
+        lview = view.layer_view(l)
+        w = view.layer_weights(weights, l)
         keys = site_keys[l] if site_keys is not None else None
         pols = site_policies[l] if site_policies is not None else None
         scope = ctx.scope(f"layer{l}") if ctx is not None \
             else contextlib.nullcontext()
         with scope:
             if cfg.model == "kgat":
-                e = _kgat_layer(params, l, e, view, weights,
+                e = _kgat_layer(params, l, e, lview, w,
                                 keys=keys, policies=pols)
             elif cfg.model == "kgcn":
-                e = _kgcn_layer(params, l, e, view, weights,
+                e = _kgcn_layer(params, l, e, lview, w,
                                 keys=keys, policies=pols)
             elif cfg.model == "kgin":
-                e = _kgin_layer(params, e, weights, view,
+                e = _kgin_layer(params, e, w, lview,
                                 keys=keys, policies=pols)
             elif cfg.model == "rgcn":
-                e = _rgcn_layer(params, l, e, view,
+                e = _rgcn_layer(params, l, e, lview,
                                 keys=keys, policies=pols)
             else:
                 raise ValueError(cfg.model)
-        outs.append(e)
+        outs.append(view.seed_rows(e))
     return outs
 
 
@@ -605,6 +764,45 @@ def bpr_loss(params: dict, g: CKG, batch: dict, cfg: KGNNConfig, *,
     reps = propagate(params, g, cfg, policy=policy, key=key)
     pos = score_pairs(reps, batch["user"], batch["pos"], cfg.n_users)
     neg = score_pairs(reps, batch["user"], batch["neg"], cfg.n_users)
+    loss = -jnp.mean(jax.nn.log_sigmoid(pos - neg))
+    reg = sum(jnp.sum(x ** 2) for x in jax.tree_util.tree_leaves(params))
+    return loss + cfg.l2 * reg
+
+
+def sampled_reps(params: dict, view: "SampledGraphView", cfg: KGNNConfig, *,
+                 policy: ACTPolicy | PolicySchedule | None = None,
+                 key: jax.Array | None = None) -> jax.Array:
+    """Seed-row readout representations from a sampled minibatch.
+
+    ``params["entity"]`` must already be the gathered outermost row
+    table (``view.n_input_rows`` rows) — the tier cache's job. Scopes
+    are the SAME ``<model>/layer<l>/<site>`` paths as ``propagate``, so
+    an ACT schedule and its scope-hashed SR keys apply unchanged to
+    sampled training.
+    """
+    ctx = model_context(policy, key)
+    ctx.check_key(f"sampled_reps({cfg.model})")
+    with ctx, ctx.scope(cfg.model):
+        outs = propagate_view(params, view, cfg, ctx=ctx)
+    return readout(outs, cfg)
+
+
+def sampled_bpr_loss(params: dict, view: "SampledGraphView", cfg: KGNNConfig,
+                     *, policy: ACTPolicy | PolicySchedule | None = None,
+                     key: jax.Array | None = None):
+    """BPR over a seed layout of ``[users | pos items | neg items]``.
+
+    The sampler packs the three BPR roles as the seed set in fixed
+    thirds (``B = n_seeds // 3``), so scoring is position-based — no
+    global-id indexing into a full rep table exists on this path.
+    L2 regularization covers the touched parameters only (the gathered
+    entity rows + dense params), the sampled-approximate counterpart of
+    the full-table term; see DESIGN.md §11 exactness ledger.
+    """
+    reps = sampled_reps(params, view, cfg, policy=policy, key=key)
+    b = view.n_seeds // 3
+    pos = jnp.sum(reps[:b] * reps[b:2 * b], axis=-1)
+    neg = jnp.sum(reps[:b] * reps[2 * b:3 * b], axis=-1)
     loss = -jnp.mean(jax.nn.log_sigmoid(pos - neg))
     reg = sum(jnp.sum(x ** 2) for x in jax.tree_util.tree_leaves(params))
     return loss + cfg.l2 * reg

@@ -91,7 +91,7 @@ def kg_dp_spec(cfg, graph=None) -> DPSpec:
 def _kgnn_step(arch: ArchSpec, *, schedule=None, ds=None, cfg=None,
                batch_size: int = 512, data_seed: int = 2,
                lr: float = 3e-3, dim: int = 32,
-               n_layers: int = 3) -> ModelStep:
+               n_layers: int = 3, device_graph: bool = True) -> ModelStep:
     from repro.data.csr import maybe_attach_layout
     from repro.data.synthetic import bpr_batches, gen_kg_dataset
     from repro.models import kgnn
@@ -104,8 +104,14 @@ def _kgnn_step(arch: ArchSpec, *, schedule=None, ds=None, cfg=None,
             model=model, n_users=ds.n_users, n_entities=ds.n_entities,
             n_relations=ds.n_relations, dim=dim, n_layers=n_layers,
             readout="concat" if model == "kgat" else "sum")
-    g = jax.tree_util.tree_map(jnp.asarray, ds.graph)
-    g = maybe_attach_layout(g, schedule, model=cfg.model)
+    if device_graph:
+        g = jax.tree_util.tree_map(jnp.asarray, ds.graph)
+        g = maybe_attach_layout(g, schedule, model=cfg.model)
+    else:
+        # sampled-minibatch runs (training.tiering) never touch the full
+        # edge list on device — keep the COO host-side so the device
+        # budget holds only the hot tier + gathered batch rows
+        g = ds.graph
 
     def init(key, data_spec=None):
         return kgnn.init_params(key, cfg)

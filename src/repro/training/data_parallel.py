@@ -57,7 +57,33 @@ from repro.sharding.compat import P, shard_map
 from repro.training.step import DPSpec, ModelStep
 
 __all__ = ["partition_graph", "dp_loss_and_grads", "make_dp_step",
-           "dp_forward_reps", "dp_bpr_loss_and_grads", "make_kgat_dp_step"]
+           "dp_forward_reps", "dp_bpr_loss_and_grads", "make_kgat_dp_step",
+           "check_no_sampled_dp"]
+
+
+def check_no_sampled_dp(batch_or_view, *, mesh_spec: str = "data=N") -> None:
+    """Refuse sampled minibatches on the DP path with a NAMED error.
+
+    ``--mesh data=N`` dst-partitions the FULL edge list once at launch;
+    a neighbor-sampled batch (``SampledGraphView`` / ``--sample``) has a
+    fresh per-hop edge set every step, so the partition, the halo caps
+    and the per-shard block layouts are all undefined for it. Until
+    sharded sampling lands, the combination must fail loudly here — not
+    as a shape mismatch three layers deep in a ``shard_map`` body.
+    """
+    from repro.models.kgnn import SampledGraphView
+
+    inner = getattr(batch_or_view, "view", None)  # unwrap a SampledItem
+    if isinstance(batch_or_view, SampledGraphView) \
+            or isinstance(inner, SampledGraphView) or (
+            isinstance(batch_or_view, str) and batch_or_view):
+        raise NotImplementedError(
+            f"sampled minibatch training (--sample) cannot be combined "
+            f"with data parallelism (--mesh {mesh_spec}): edges are "
+            f"dst-partitioned once at launch, but sampled batches carry "
+            f"a fresh per-hop edge set every step. Drop --mesh to train "
+            f"sampled on one device, or drop --sample for full-graph "
+            f"data parallelism.")
 
 
 def partition_graph(g, mesh, *, axis: str = "data") -> EdgePartition:
@@ -227,8 +253,12 @@ def make_dp_step(step: ModelStep | DPSpec, part: EdgePartition, mesh, opt,
     """
     spec = _as_dp_spec(step)
 
-    @jax.jit
     def train_step(state, batch, step_idx):
+        check_no_sampled_dp(batch)
+        return _jit_step(state, batch, step_idx)
+
+    @jax.jit
+    def _jit_step(state, batch, step_idx):
         params, opt_state = state
         loss, grads = dp_loss_and_grads(
             spec, params, part, batch, mesh=mesh, axis=axis,

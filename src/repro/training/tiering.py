@@ -1,0 +1,398 @@
+"""Two-tier embedding store + the sampled-minibatch training loop.
+
+The companion of ``repro.data.minibatch`` (DESIGN.md §11): once batches
+are neighbor-sampled, the full entity table no longer needs to live on
+device. Following the data-tiering observation (Min et al. 2022) that
+recommender-graph row access is heavily skewed, the table splits into
+
+  * a **hot tier** — the top ``hot_frac`` rows by access frequency
+    (seeded with in-degree at load, LFU-refreshed from live counters),
+    resident on device; and
+  * a **cold tier** — the authoritative host copy, gathered on demand.
+
+``gather`` assembles a batch's row table on device by scattering the
+(few) cold rows fetched from host and the (many) hot rows copied
+device-to-device; index buffers are padded to power-of-two buckets with
+out-of-range slots (``mode="drop"``) so the number of distinct eager
+shapes — and hence compiles — stays logarithmic in batch size.
+``apply_grads`` is the sparse scatter-back: only touched rows update
+(duplicate row ids accumulate, matching dense-gradient semantics), SGD
+on rows while the dense params run under the step's regular optimizer.
+
+``run_sampled_training`` overlaps the NEXT batch's gather with the
+current device step, then repairs the overlap: after scatter-back, rows
+that were both prefetched and just updated are re-gathered (a small
+"patch" transfer), so the loop is bit-exact with the sequential
+schedule — determinism is a property we test, not a hope.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import act_context
+from repro.training.step import ModelStep, enter_or_null
+from repro.training.optimizer import Optimizer, adam
+
+__all__ = ["TieredEmbeddingStore", "make_sampled_train_step",
+           "run_sampled_training", "SampledTrainReport", "live_device_bytes",
+           "node_in_degree"]
+
+
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def live_device_bytes() -> int:
+    """Bytes held by live jax arrays (our peak-memory probe; the CPU
+    backend has no allocator high-water-mark API)."""
+    try:
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                   for a in jax.live_arrays())
+    except Exception:
+        return 0
+
+
+def node_in_degree(src, dst, rel, n_nodes: int) -> np.ndarray:
+    """Initial hot-ranking signal: in-degree ≈ expected sample frequency
+    (uniform fanout sampling hits a node proportionally to how many
+    frontier nodes list it as a neighbor)."""
+    del src, rel
+    return np.bincount(np.asarray(dst, np.int64),
+                       minlength=n_nodes).astype(np.float64)
+
+
+class TieredEmbeddingStore:
+    """Device-hot / host-cold entity table with LFU refresh.
+
+    The host array is authoritative for cold rows; the device cache is
+    authoritative for hot rows (flushed back on ``refresh``/``flush``).
+    All statistics count ROWS actually moved across the host-device
+    boundary, including bucket padding and scatter-back — the honest
+    transfer cost the minibatch bench gates on.
+    """
+
+    def __init__(self, table: np.ndarray, freq: np.ndarray | None = None, *,
+                 hot_frac: float = 0.1, refresh_every: int = 0,
+                 lfu_decay: float = 0.5):
+        self._host = np.array(table, np.float32, copy=True)
+        n, d = self._host.shape
+        if not 0.0 <= hot_frac <= 1.0:
+            raise ValueError(f"hot_frac must be in [0, 1], got {hot_frac}")
+        self.n_rows, self.dim = n, d
+        self.n_hot = int(round(hot_frac * n))
+        self.refresh_every = int(refresh_every)
+        self.lfu_decay = float(lfu_decay)
+        self._counts = (np.zeros(n, np.float64) if freq is None
+                        else np.asarray(freq, np.float64).copy())
+        self._hot_ids = np.empty(0, np.int64)
+        self._hot_slot = np.full(n, -1, np.int64)
+        self._hot = jnp.zeros((0, d), jnp.float32)
+        self._rebuild_hot()
+        self.stats = {"gathers": 0, "rows_requested": 0, "hot_hits": 0,
+                      "rows_transferred": 0, "refreshes": 0,
+                      "patch_rows": 0}
+
+    # -- tier management ---------------------------------------------------
+
+    def _rebuild_hot(self) -> None:
+        if self.n_hot:
+            # stable ranking: frequency desc, id asc — deterministic
+            order = np.lexsort((np.arange(self.n_rows), -self._counts))
+            self._hot_ids = np.sort(order[: self.n_hot])
+        else:
+            self._hot_ids = np.empty(0, np.int64)
+        self._hot_slot.fill(-1)
+        self._hot_slot[self._hot_ids] = np.arange(len(self._hot_ids))
+        self._hot = jnp.asarray(self._host[self._hot_ids])
+
+    def flush(self) -> np.ndarray:
+        """Write hot rows back to host; returns the full (authoritative)
+        table — what eval and checkpointing read."""
+        if len(self._hot_ids):
+            self._host[self._hot_ids] = np.asarray(self._hot)
+        return self._host
+
+    def refresh(self) -> None:
+        """LFU re-rank: flush, decay counters, rebuild the hot set."""
+        self.flush()
+        self._counts *= self.lfu_decay
+        self._rebuild_hot()
+        self.stats["refreshes"] += 1
+
+    # -- gather / scatter --------------------------------------------------
+
+    def _scatter_rows(self, out: jax.Array, rows: np.ndarray,
+                      targets: np.ndarray, *, count: bool) -> jax.Array:
+        """Assemble ``out[targets] = table[rows]`` through the tiers."""
+        slots = self._hot_slot[rows]
+        cold = np.nonzero(slots < 0)[0]
+        hot = np.nonzero(slots >= 0)[0]
+        n_out = out.shape[0]
+        if len(cold):
+            bc = _next_pow2(len(cold))
+            tgt = np.full(bc, n_out, np.int64)
+            tgt[: len(cold)] = targets[cold]
+            vals = np.zeros((bc, self.dim), np.float32)
+            vals[: len(cold)] = self._host[rows[cold]]
+            out = out.at[jnp.asarray(tgt)].set(jnp.asarray(vals),
+                                               mode="drop")
+            if count:
+                self.stats["rows_transferred"] += bc
+        if len(hot):
+            bh = _next_pow2(len(hot))
+            tgt = np.full(bh, n_out, np.int64)
+            tgt[: len(hot)] = targets[hot]
+            sl = np.zeros(bh, np.int64)
+            sl[: len(hot)] = slots[hot]
+            out = out.at[jnp.asarray(tgt)].set(self._hot[jnp.asarray(sl)],
+                                               mode="drop")
+        return out
+
+    def gather(self, rows: np.ndarray,
+               requests: np.ndarray | None = None) -> jax.Array:
+        """Device row table for global ids ``rows`` (duplicates fine).
+
+        Deduplicated: each distinct row crosses the host-device boundary
+        at most once per gather, then expands to positions on device
+        (``take``). ``requests`` is the access stream the LFU counters
+        and hit-rate stats are measured over — the sampler's
+        seeds + real-edge draws (defaults to ``rows``, which on heavily
+        padded small-graph frontiers under-reports skew).
+        """
+        rows = np.asarray(rows, np.int64)
+        req = rows if requests is None else np.asarray(requests, np.int64)
+        np.add.at(self._counts, req, 1.0)
+        self.stats["gathers"] += 1
+        self.stats["rows_requested"] += len(req)
+        self.stats["hot_hits"] += int((self._hot_slot[req] >= 0).sum())
+        uniq, inv = np.unique(rows, return_inverse=True)
+        bu = _next_pow2(len(uniq))
+        ut = jnp.zeros((bu, self.dim), jnp.float32)
+        ut = self._scatter_rows(ut, uniq, np.arange(len(uniq)), count=True)
+        out = jnp.take(ut, jnp.asarray(inv), axis=0)
+        if self.refresh_every and \
+                self.stats["gathers"] % self.refresh_every == 0:
+            self.refresh()
+        return out
+
+    def patch(self, out: jax.Array, rows: np.ndarray,
+              updated: np.ndarray) -> jax.Array:
+        """Repair a prefetched gather: re-fetch the rows of ``rows``
+        whose global ids are in ``updated`` (just scattered-back), so
+        ``out`` matches a sequential gather-after-update."""
+        rows = np.asarray(rows, np.int64)
+        idx = np.nonzero(np.isin(rows, updated))[0]
+        if not len(idx):
+            return out
+        self.stats["patch_rows"] += len(idx)
+        return self._scatter_rows(out, rows[idx], idx, count=True)
+
+    def apply_grads(self, rows: np.ndarray, grads: jax.Array,
+                    lr: float) -> np.ndarray:
+        """Sparse SGD scatter-back for the touched rows. Duplicate ids
+        accumulate their gradients (device ``segment_sum`` over the
+        unique-row map), matching what a dense gradient over the full
+        table would produce; each updated row crosses the boundary once.
+        Returns the unique global ids updated (the patch set)."""
+        rows = np.asarray(rows, np.int64)
+        uniq, inv = np.unique(rows, return_inverse=True)
+        bu = _next_pow2(len(uniq))
+        # per-unique-row gradient sum on device (duplicate accumulation)
+        delta = jax.ops.segment_sum((-lr * grads).astype(jnp.float32),
+                                    jnp.asarray(inv), num_segments=bu)
+        slots = self._hot_slot[uniq]
+        cold = np.nonzero(slots < 0)[0]
+        hot = np.nonzero(slots >= 0)[0]
+        if len(hot):
+            bh = _next_pow2(len(hot))
+            sl = np.full(bh, len(self._hot_ids), np.int64)
+            sl[: len(hot)] = slots[hot]
+            src = np.zeros(bh, np.int64)
+            src[: len(hot)] = hot
+            self._hot = self._hot.at[jnp.asarray(sl)].add(
+                delta[jnp.asarray(src)], mode="drop")
+        if len(cold):
+            bc = _next_pow2(len(cold))
+            src = np.zeros(bc, np.int64)
+            src[: len(cold)] = cold
+            d_host = np.asarray(delta[jnp.asarray(src)])[: len(cold)]
+            self._host[uniq[cold]] += d_host
+            self.stats["rows_transferred"] += bc
+        return uniq
+
+    # -- accounting --------------------------------------------------------
+
+    @property
+    def hit_rate(self) -> float:
+        req = self.stats["rows_requested"]
+        return self.stats["hot_hits"] / req if req else 0.0
+
+    @property
+    def rows_transferred_per_step(self) -> float:
+        g = self.stats["gathers"]
+        return self.stats["rows_transferred"] / g if g else 0.0
+
+    @property
+    def device_bytes(self) -> int:
+        return int(self._hot.size) * 4
+
+    @property
+    def table_bytes(self) -> int:
+        return int(self._host.size) * 4
+
+
+# ---------------------------------------------------------------------------
+# sampled train step + loop
+# ---------------------------------------------------------------------------
+
+
+def make_sampled_train_step(step: ModelStep, opt: Optimizer, *,
+                            schedule=None, root_key=None) -> Callable:
+    """Jitted ``train_step(state, rows, view, i)`` for sampled batches.
+
+    ``state = (dense_params, opt_state)`` excludes the entity table —
+    the tier store owns it; ``rows`` is the gathered row table for this
+    batch's outermost frontier. Returns ``(state, row_grads, metrics)``;
+    the caller scatters ``row_grads`` back through the store. ACT
+    resolution is the standard ``act_context(schedule, root, step=i)``
+    entry — same scope paths, policies and stochastic-rounding keys as
+    the full-graph step (``make_train_step``).
+    """
+    from repro.models.kgnn import sampled_bpr_loss
+
+    cfg = step.cfg
+
+    @jax.jit
+    def train_step(state, rows, view, i):
+        dense, opt_state = state
+
+        def loss_fn(d, r):
+            params = {**d, "entity": r}
+            ctx = act_context(schedule, root_key, step=i)
+            with enter_or_null(ctx):
+                return sampled_bpr_loss(params, view, cfg)
+
+        loss, (g_dense, g_rows) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1))(dense, rows)
+        dense, opt_state = opt.update(g_dense, opt_state, dense)
+        return (dense, opt_state), g_rows, {"loss": loss}
+
+    return train_step
+
+
+@dataclasses.dataclass
+class SampledTrainReport:
+    losses: list
+    hit_rate: float
+    rows_transferred_per_step: float
+    peak_device_bytes: int
+    store_device_bytes: int
+    table_bytes: int
+    step_ms: float
+    n_steps: int
+    stats: dict
+
+
+def run_sampled_training(step: ModelStep, *, fanouts: tuple[int, ...],
+                         steps: int = 50, batch_size: int = 256,
+                         hot_frac: float = 0.1, refresh_every: int = 16,
+                         lr: float | None = None, schedule=None,
+                         root_key=None, seed: int = 0,
+                         block_e: int = 256, block_rows: int = 256,
+                         measure_bytes: bool = False,
+                         init_key: jax.Array | None = None,
+                         log_fn: Callable | None = None):
+    """Train a KG step end-to-end on sampled minibatches.
+
+    Pipeline per step (DESIGN.md §11 overlap timeline):
+
+      1. dispatch the jitted step on batch *k* (async);
+      2. pull batch *k+1* from the background sampler and gather its
+         rows — overlaps the running device step, but is stale with
+         respect to step *k*'s pending row update;
+      3. scatter step *k*'s row gradients back (the first sync point);
+      4. ``patch`` the prefetched table: re-gather only the rows batch
+         *k+1* shares with the rows just updated.
+
+    Step 4 restores exact sequential semantics, so the whole loop is
+    deterministic given (seed, schedule) — pinned by the replay test.
+
+    Returns ``(report, dense_params, store)``; ``store.flush()`` is the
+    full entity table for eval/checkpointing.
+    """
+    from repro.data.minibatch import MinibatchStream
+
+    if step.family != "kgnn" or "dataset" not in step.data:
+        raise ValueError(
+            f"sampled minibatch training (--sample) is defined for the "
+            f"kgnn family with a bound KG dataset; arch {step.arch!r} "
+            f"(family {step.family!r}) has none. Train it full-batch "
+            f"instead (drop --sample).")
+    cfg = step.cfg
+    if cfg.n_layers != len(fanouts):
+        raise ValueError(
+            f"--sample needs one fanout per layer: model has "
+            f"{cfg.n_layers} layers but got fanouts {tuple(fanouts)} "
+            f"(pass e.g. --sample fanout="
+            f"{','.join(['10'] * cfg.n_layers)})")
+
+    ds = step.data["dataset"]
+    g = ds.graph
+    params = step.init(init_key if init_key is not None
+                       else jax.random.PRNGKey(0))
+    # the full entity table moves host-side NOW and its device buffer is
+    # dropped — from here on the device never holds more than the hot
+    # tier + the gathered batch rows (the whole point of the subsystem)
+    entity_host = np.asarray(params.pop("entity"))
+    dense = params
+    freq = node_in_degree(g.src, g.dst, g.rel, g.n_nodes)
+    store = TieredEmbeddingStore(
+        entity_host, freq, hot_frac=hot_frac,
+        refresh_every=refresh_every)
+    del entity_host
+    lr = step.lr if lr is None else lr
+    opt = adam(lr)
+    state = (dense, opt.init(dense))
+    train_step = make_sampled_train_step(step, opt, schedule=schedule,
+                                         root_key=root_key)
+    build_layouts = getattr(schedule, "kernel", "jnp") == "pallas"
+
+    losses, peak_bytes = [], 0
+    t0 = time.perf_counter()
+    with MinibatchStream(ds, tuple(fanouts), batch_size=batch_size,
+                         seed=seed, build_layouts=build_layouts,
+                         block_e=block_e, block_rows=block_rows) as stream:
+        item = stream.next()
+        rows = store.gather(item.input_nodes, item.requests)
+        for t in range(steps):
+            state, g_rows, metrics = train_step(
+                state, rows, item.view, jnp.asarray(t, jnp.int32))
+            nxt = stream.next()
+            pre = store.gather(nxt.input_nodes,       # overlaps the step
+                               nxt.requests)
+            updated = store.apply_grads(item.input_nodes, g_rows, lr)
+            pre = store.patch(pre, nxt.input_nodes, updated)
+            losses.append(float(metrics["loss"]))
+            if measure_bytes:
+                peak_bytes = max(peak_bytes, live_device_bytes())
+            if log_fn is not None and (t % 10 == 0 or t == steps - 1):
+                log_fn(f"step {t:4d}  loss {losses[-1]:.4f}  "
+                       f"hit {store.hit_rate:.2%}")
+            item, rows = nxt, pre
+    dt_ms = (time.perf_counter() - t0) * 1e3 / max(steps, 1)
+
+    report = SampledTrainReport(
+        losses=losses, hit_rate=store.hit_rate,
+        rows_transferred_per_step=store.rows_transferred_per_step,
+        peak_device_bytes=peak_bytes,
+        store_device_bytes=store.device_bytes,
+        table_bytes=store.table_bytes, step_ms=dt_ms, n_steps=steps,
+        stats=dict(store.stats))
+    return report, state[0], store

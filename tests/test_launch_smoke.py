@@ -61,6 +61,27 @@ def test_mesh_refused_with_named_reason(arch, family):
     assert "implemented for --arch kgat" not in err
 
 
+def test_train_sampled_minibatch():
+    """--sample fanout=... runs the tiered minibatch path end to end."""
+    out = _launch("--arch", "kgat", "--steps", "3",
+                  "--sample", "fanout=5,4,3", "--batch", "16",
+                  "--hot-frac", "0.1")
+    assert "sampled kgat" in out.stdout
+    assert "hit-rate" in out.stdout
+
+
+def test_sample_plus_mesh_refused_with_named_reason():
+    """--sample + --mesh refuses up front with the named explanation,
+    before any device or sampler work starts."""
+    out = _launch("--arch", "kgat", "--steps", "2", "--mesh", "data=2",
+                  "--sample", "fanout=5,4", expect_ok=False)
+    assert out.returncode != 0
+    err = out.stderr
+    assert "--sample" in err and "--mesh" in err
+    assert "dst-partitioned" in err
+    assert "Drop --mesh" in err
+
+
 def test_schedule_flag_still_routes():
     """--schedule spec reaches the ActContext path in the generic driver."""
     out = _launch("--arch", "kgat", "--steps", "2",
