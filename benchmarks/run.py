@@ -20,15 +20,15 @@ def main() -> None:
                     help="fewer steps (CI-speed)")
     ap.add_argument("--only", default=None,
                     help="table234|table5|table6|fig2|fig3|kernels|serve|"
-                         "roofline|minibatch")
+                         "roofline|minibatch|mesh2d")
     ap.add_argument("--out", default="artifacts/bench")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
     steps = 60 if args.quick else 200
 
-    from . import (fig2_curves, fig3_ratio, kernel_bench, minibatch_bench,
-                   roofline_bench, serve_bench, table5_memory_speed,
-                   table6_rounding, table234_accuracy)
+    from . import (fig2_curves, fig3_ratio, kernel_bench, mesh2d_bench,
+                   minibatch_bench, roofline_bench, serve_bench,
+                   table5_memory_speed, table6_rounding, table234_accuracy)
 
     jobs = {
         "table234": lambda: table234_accuracy.run(steps=steps),
@@ -41,6 +41,7 @@ def main() -> None:
         "roofline": lambda: roofline_bench.run(quick=args.quick),
         "minibatch": lambda: minibatch_bench.run(
             steps=15 if args.quick else 40),
+        "mesh2d": lambda: mesh2d_bench.run(steps=6 if args.quick else 10),
     }
     if args.only:
         jobs = {args.only: jobs[args.only]}
@@ -54,7 +55,7 @@ def main() -> None:
         summary[name] = rows
         with open(os.path.join(args.out, f"{name}.json"), "w") as f:
             json.dump(rows, f, indent=1)
-        if name in ("kernels", "serve", "roofline", "minibatch"):
+        if name in ("kernels", "serve", "roofline", "minibatch", "mesh2d"):
             gated_rows.extend(rows)
     if gated_rows:
         # perf trajectory tracked across PRs: committed at repo root.

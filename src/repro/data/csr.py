@@ -48,7 +48,8 @@ import numpy as np
 
 __all__ = ["CSRMeta", "SpmmLayout", "build_spmm_layout", "attach_layout",
            "maybe_attach_layout", "static_block_caps", "EdgePartition",
-           "partition_edges", "unpartition_edges"]
+           "partition_edges", "unpartition_edges",
+           "RowPartition", "row_partition"]
 
 # KGNN propagation rules that aggregate through act_spmm (and therefore
 # benefit from a blocked-CSR layout). KGIN/R-GCN modulate messages with
@@ -413,3 +414,64 @@ def unpartition_edges(part: EdgePartition):
               + shard_ix * part.rows_per_shard)
     rel[p] = np.asarray(part.rel).ravel()[keep]
     return src, dst, rel
+
+
+@dataclasses.dataclass(frozen=True)
+class RowPartition:
+    """Host-side geometry of a dim-0 row-sharded table over a mesh axis.
+
+    Global row ``i`` lives on shard ``i // rows_per_shard`` at local
+    offset ``i % rows_per_shard``; rows ``>= n_rows`` are padding (zero,
+    zero-grad). The device-side twin of this addressing is
+    ``repro.sharding.rowshard.fetch_rows`` — tests check the two agree
+    against a ``np.add.at`` reference.
+    """
+
+    n_rows: int          # real rows (e.g. n_nodes)
+    n_shards: int        # model-axis extent
+    rows_per_shard: int  # block rows per shard (includes padding)
+
+    @property
+    def n_rows_padded(self) -> int:
+        return self.n_shards * self.rows_per_shard
+
+    def owner_of(self, ids):
+        return np.asarray(ids) // self.rows_per_shard
+
+    def local_of(self, ids):
+        ids = np.asarray(ids)
+        return ids - self.owner_of(ids) * self.rows_per_shard
+
+    def pad_table(self, table):
+        """Zero-pad a host ``(n_rows, ...)`` table to ``n_rows_padded``."""
+        table = np.asarray(table)
+        if table.shape[0] != self.n_rows:
+            raise ValueError(
+                f"table has {table.shape[0]} rows, partition built for "
+                f"{self.n_rows}")
+        pad = [(0, self.n_rows_padded - self.n_rows)]
+        pad += [(0, 0)] * (table.ndim - 1)
+        return np.pad(table, pad)
+
+    def blocks(self, table):
+        """Padded table reshaped ``(n_shards, rows_per_shard, ...)``."""
+        padded = self.pad_table(table)
+        return padded.reshape(
+            self.n_shards, self.rows_per_shard, *padded.shape[1:])
+
+
+def row_partition(n_rows: int, n_shards: int, *, pad_to: int | None = None):
+    """Split ``n_rows`` table rows evenly over ``n_shards`` mesh shards.
+
+    ``pad_to`` widens the addressable row space before splitting — the
+    2D mesh passes the data partition's ``n_nodes_padded`` so every
+    data-shard dst row (including edge-partition padding) has an owner.
+    """
+    if n_rows < 1 or n_shards < 1:
+        raise ValueError(
+            f"row_partition needs n_rows >= 1 and n_shards >= 1, got "
+            f"{n_rows} rows over {n_shards} shards")
+    span = max(int(n_rows), int(pad_to or 0))
+    return RowPartition(
+        n_rows=int(n_rows), n_shards=int(n_shards),
+        rows_per_shard=-(-span // int(n_shards)))

@@ -66,12 +66,19 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.partition import build_cell
 from repro.launch.roofline import (HW, HW_PROFILES, get_hw, parse_hlo,
                                    roofline_terms)
+from repro.sharding.mesh_spec import MeshSpec
 
 
 def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
              bits: int | None, out_dir: str, verbose: bool = True,
              schedule: str | None = None,
-             sim: tuple | None = None, hw: dict = HW) -> dict:
+             sim: "tuple | MeshSpec | None" = None, hw: dict = HW) -> dict:
+    # route bare extents through the shared MeshSpec type so a wrong
+    # extent count fails with the same named error as --mesh parsing
+    if sim is not None and not isinstance(sim, MeshSpec):
+        sim = MeshSpec.from_shape(
+            sim, ("pod", "data", "model") if multi_pod
+            else ("data", "model"))
     mesh = make_production_mesh(multi_pod=multi_pod, sim=sim)
     n_dev = mesh.devices.size
     arch = get(arch_name)

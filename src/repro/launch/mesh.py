@@ -33,13 +33,22 @@ def make_production_mesh(*, multi_pod: bool = False,
 
     ``sim`` substitutes per-axis extents (same axis names, same order) so
     dry-run tests can exercise the full partition machinery on a handful
-    of forced host devices — e.g. ``sim=(2, 4)`` or
-    ``sim=(2, 2, 2)`` with ``multi_pod=True``. Production callers leave
-    it ``None`` and get a real error, not a silent downsize, when the
-    host cannot back the pod.
+    of forced host devices — a tuple of extents (``sim=(2, 4)``, or
+    ``sim=(2, 2, 2)`` with ``multi_pod=True``) or a
+    ``sharding.mesh_spec.MeshSpec`` whose axis names must match the
+    layout exactly. Production callers leave it ``None`` and get a real
+    error, not a silent downsize, when the host cannot back the pod.
     """
+    from repro.sharding.mesh_spec import MeshSpec
+
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if isinstance(sim, MeshSpec):
+        if sim.names != axes:
+            raise ValueError(
+                f"sim mesh spec {sim} names axes {sim.names}; this layout "
+                f"needs {axes} (in order)")
+        sim = sim.shape
     if sim is not None:
         sim = tuple(int(s) for s in sim)
         if len(sim) != len(axes):

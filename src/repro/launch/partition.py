@@ -506,18 +506,24 @@ def _kgnn_cell(arch: ArchSpec, shape: ShapeSpec, mesh,
     opt = adam(1e-3)
     n_tri = _ru(p["n_triples"])
     B = p["batch"]
-    # pad the node space so the entity table row-shards over the batch axes
+    # pad the node space so the entity table row-shards over the model axis
     pad_nodes = _ru(cfg.n_nodes) - cfg.n_nodes
     cfg = dataclasses.replace(cfg, n_entities=cfg.n_entities + pad_nodes)
 
     shapes = jax.eval_shape(lambda k: kgnn.init_params(k, cfg),
                             jax.random.PRNGKey(0))
 
+    # the registry's ShardSpec placement is the one source of truth for
+    # which tables row-shard (DESIGN.md §12); here they shard over the
+    # mesh's model axis — same contract as make_dp_step's 2D path
+    from repro.models.registry import kg_dp_spec
+    row_sharded = kg_dp_spec(cfg).row_sharded()
+
     def spec(path, leaf):
         name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                         for k in path)
-        if name == "entity":
-            return P(batch, None)
+        if name in row_sharded:
+            return P("model", None)
         return P(*([None] * len(leaf.shape)))
 
     specs = jax.tree_util.tree_map_with_path(spec, shapes)

@@ -20,19 +20,32 @@ bit-width, or ordered ``[kind:]glob=bits`` rules — see
 stochastic-rounding key (scope-hashed, replay-exact). ``--bits`` remains
 the uniform fast path.
 
-``--mesh data=N`` runs the data-parallel shard_map path (DESIGN.md §7)
-for EVERY arch whose step registers a ``DPSpec`` — all KG archs (kgat,
-kgcn, kgin): edges dst-partitioned over N shards, per-shard ACT-
-compressed propagation through the same ``propagate_view`` layer math
-as the single-device step, gradients all-reduced through the INT8
-compressed psum (``--allreduce fp32`` for the exact baseline). Archs
-without a DPSpec (lm / recsys / gcn) fail fast with the reason. On a
-CPU host the N simulated devices are forced automatically — provided no
-jax call has initialized the backend first.
+``--mesh`` takes a ``MeshSpec`` layout (``sharding/mesh_spec.py`` —
+the one parser shared with dryrun and ``make_dp_step``) and runs the
+shard_map path (DESIGN.md §7, §12) for EVERY arch whose step registers
+a ``ShardSpec`` — all KG archs (kgat, kgcn, kgin):
 
-Checkpoints carry the run identity (arch id + schedule spec):
-restoring from a directory written by a different arch or schedule is
-refused instead of silently resuming the wrong run.
+  * ``--mesh data=N`` — 1D data parallelism: edges dst-partitioned
+    over N shards, params replicated, per-shard ACT-compressed
+    propagation through the same ``propagate_view`` layer math as the
+    single-device step, gradients all-reduced through the INT8
+    compressed psum (``--allreduce fp32`` for the exact baseline).
+  * ``--mesh data=N,model=M`` — the 2D data×model mesh: additionally
+    row-shards the embedding tables the step's placement marks
+    (entity) over M model shards, so each device holds 1/M of the
+    dominant table; gradients reduce per-axis.
+
+Archs without a ShardSpec (lm / recsys / gcn) fail fast with the
+reason. On a CPU host the N×M simulated devices are forced
+automatically — provided no jax call has initialized the backend first.
+
+Checkpoints carry the run identity (arch id + schedule spec + mesh
+topology + table placement): restoring from a directory written by a
+different arch, schedule or mesh layout is refused instead of silently
+resuming the wrong run. ``--reshard-from <dir>`` is the explicit
+migration hatch: it restores a checkpoint IGNORING its mesh layout
+(arch/schedule still checked) and re-pads the row-sharded tables onto
+the current layout.
 """
 
 from __future__ import annotations
@@ -50,13 +63,15 @@ from repro.training.step import make_train_step, step_metadata
 from repro.training.trainer import Trainer, TrainerConfig
 
 
-def _parse_mesh(spec: str) -> tuple[str, int]:
-    """``"data=8"`` -> ``("data", 8)``."""
+def _parse_mesh(spec: str):
+    """``--mesh`` string -> validated ``MeshSpec`` (SystemExit on junk)."""
+    from repro.sharding.mesh_spec import MeshSpec, MeshSpecError
+
     try:
-        axis, n = spec.split("=")
-        return axis, int(n)
-    except ValueError:
-        raise SystemExit(f"--mesh expects AXIS=N (e.g. data=8), got {spec!r}")
+        return MeshSpec.parse(spec).check_axes(("data", "model"),
+                                               required=("data",))
+    except MeshSpecError as e:
+        raise SystemExit(f"--mesh: {e}")
 
 
 def _force_host_devices(n: int) -> None:
@@ -69,21 +84,23 @@ def _force_host_devices(n: int) -> None:
             (cur + f" --xla_force_host_platform_device_count={n}").strip()
 
 
-def _dp_train_step(step, args, opt, root_key, schedule):
-    """--mesh data=N: the generic shard_map data-parallel path."""
-    from repro.sharding.compat import make_sim_mesh
+def _dp_train_step(step, mesh_spec, args, opt, root_key, schedule):
+    """--mesh: the generic shard_map path (1D data / 2D data×model)."""
     from repro.training import data_parallel as dp
 
-    axis, n = _parse_mesh(args.mesh)
-    mesh = make_sim_mesh(n, (axis,))
-    part = dp.partition_graph(step.dp_spec.graph, mesh, axis=axis)
+    mesh = mesh_spec.build_sim()
+    part = dp.partition_graph(step.dp_spec.graph, mesh, axis="data")
     train_step = dp.make_dp_step(
         step, part, mesh, opt, schedule=schedule, root_key=root_key,
-        axis=axis, compress_grads=args.allreduce == "int8")
-    print(f"[train] data-parallel {step.arch}: mesh {axis}={n}, "
+        mesh_spec=mesh_spec, compress_grads=args.allreduce == "int8")
+    tables = ""
+    if "model" in mesh_spec.names:
+        tables = (f", row-sharded [{step.dp_spec.placement_str()}] over "
+                  f"model={mesh_spec.extent('model')}")
+    print(f"[train] data-parallel {step.arch}: mesh {mesh_spec}, "
           f"allreduce={args.allreduce}, "
-          f"edges/shard≤{part.e_cap}, halo/shard≤{part.h_cap}")
-    return train_step
+          f"edges/shard≤{part.e_cap}, halo/shard≤{part.h_cap}{tables}")
+    return train_step, part, mesh
 
 
 def _run_sampled(arch, args, schedule, schedule_spec) -> None:
@@ -127,9 +144,10 @@ def main() -> None:
     ap.add_argument("--kernel", default="jnp", choices=["jnp", "pallas"],
                     help="ACT backend: jnp reference or fused Pallas kernels")
     ap.add_argument("--mesh", default=None,
-                    help="AXIS=N, e.g. data=8: shard_map data-parallel "
-                         "training on a simulated N-device mesh (any arch "
-                         "with a registered DPSpec — kgat, kgcn, kgin)")
+                    help="MeshSpec layout, e.g. data=8 (1D data-parallel) "
+                         "or data=4,model=2 (2D mesh with row-sharded "
+                         "tables) on simulated devices (any arch with a "
+                         "registered ShardSpec — kgat, kgcn, kgin)")
     ap.add_argument("--allreduce", default="int8", choices=["int8", "fp32"],
                     help="gradient all-reduce wire format on the --mesh "
                          "path (int8 = compressed SR psum)")
@@ -144,6 +162,11 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=256,
                     help="--sample: BPR batch size per sampled step")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--reshard-from", default=None, metavar="DIR",
+                    help="restore this checkpoint dir IGNORING its mesh "
+                         "layout (arch/schedule still checked) and re-pad "
+                         "row-sharded tables onto the current --mesh — the "
+                         "explicit 1D->2D migration hatch")
     args = ap.parse_args()
     if args.sample and args.mesh:
         from repro.training.data_parallel import check_no_sampled_dp
@@ -151,9 +174,10 @@ def main() -> None:
             check_no_sampled_dp(args.sample, mesh_spec=args.mesh)
         except NotImplementedError as e:
             raise SystemExit(f"error: {e}")
-    if args.mesh:
+    mesh_spec = _parse_mesh(args.mesh) if args.mesh else None
+    if mesh_spec is not None:
         # must precede every jax call: the device count locks at first init
-        _force_host_devices(_parse_mesh(args.mesh)[1])
+        _force_host_devices(mesh_spec.size)
     arch = get(args.arch)
     schedule = schedule_from_cli(args.schedule, args.bits, kernel=args.kernel)
     schedule_spec = schedule_label(args.schedule, args.bits)
@@ -166,17 +190,53 @@ def main() -> None:
     step = build_step(arch, schedule=schedule)
     opt = adam(step.lr)
     root = jax.random.PRNGKey(1)
-    if args.mesh:
+    part = None
+    if mesh_spec is not None:
         if step.dp_spec is None:
             raise SystemExit(
                 f"--mesh: data parallelism is not implemented for --arch "
                 f"{args.arch} ({arch.family}): {step.dp_unsupported}")
-        train_step = _dp_train_step(step, args, opt, root, schedule)
+        train_step, part, _ = _dp_train_step(step, mesh_spec, args, opt,
+                                             root, schedule)
     else:
         train_step = make_train_step(step, opt, schedule=schedule,
                                      root_key=root)
+    n_model = (mesh_spec.extent("model")
+               if mesh_spec is not None and "model" in mesh_spec.names
+               else None)
+    placement = (step.dp_spec.placement_str() if n_model is not None
+                 else None)
     params = step.init(jax.random.PRNGKey(0))
-    state = (params, opt.init(params))
+    if args.reshard_from:
+        from repro.training import data_parallel as dp
+        from repro.training.checkpoint import restore_checkpoint
+
+        # template + expected meta deliberately carry NO mesh/placement:
+        # resharding reads the source layout-agnostically (row tables at
+        # their real row count), then re-pads for the current layout.
+        template = (params, opt.init(params))
+        rstep, state = restore_checkpoint(args.reshard_from, template,
+                                          expect_meta=step_metadata(
+                                              step, schedule_spec))
+        if rstep is None:
+            raise SystemExit(f"--reshard-from: no checkpoint found under "
+                             f"{args.reshard_from}")
+        # the template has no shardings, so restore committed every leaf
+        # to one device; gather to host (uncommitted) so the train step's
+        # shard_map is free to lay the tree out on the new mesh
+        import numpy as np
+        state = jax.tree_util.tree_map(np.asarray, state)
+        if n_model is not None:
+            state = dp.pad_row_sharded(state, step.dp_spec, part, n_model)
+        print(f"[train] resharded checkpoint step {rstep} from "
+              f"{args.reshard_from} onto mesh "
+              f"{mesh_spec if mesh_spec is not None else '1 device'}")
+    else:
+        if n_model is not None:
+            from repro.training import data_parallel as dp
+
+            params = dp.pad_row_sharded(params, step.dp_spec, part, n_model)
+        state = (params, opt.init(params))
 
     n = sum(x.size for x in jax.tree_util.tree_leaves(params))
     print(f"[train] {args.arch} ({arch.family}) {n/1e6:.2f}M params "
@@ -186,7 +246,9 @@ def main() -> None:
         ckpt_dir=args.ckpt or tempfile.mkdtemp(prefix="repro_ckpt_"),
         ckpt_every=max(args.steps // 4, 10), log_every=max(args.steps // 8, 5))
     trainer = Trainer(train_step, state, step.batches(), cfg,
-                      ckpt_meta=step_metadata(step, schedule_spec)
+                      ckpt_meta=step_metadata(step, schedule_spec,
+                                              mesh_spec=mesh_spec,
+                                              placement=placement)
                       ).restore_if_available()
     trainer.run()
     losses = [h["loss"] for h in trainer.history]

@@ -56,7 +56,8 @@ from .layers import glorot, normal_init
 __all__ = [
     "KGNNConfig", "CKG", "segment_softmax", "kgat_bi_interaction",
     "init_params", "propagate", "score_pairs", "bpr_loss",
-    "FullGraphView", "ShardGraphView", "BlockView", "SampledGraphView",
+    "FullGraphView", "ShardGraphView", "Shard2DGraphView", "BlockView",
+    "SampledGraphView",
     "model_sites", "propagate_view", "kg_shard_loss", "readout",
     "sampled_bpr_loss", "sampled_reps",
 ]
@@ -156,6 +157,17 @@ class _ViewDefaults:
     def seed_rows(self, e):
         """Restrict a layer output to the rows the readout keeps."""
         return e
+
+    def param_l2(self, params):
+        """Full-model L2 of the parameter pytree as this view sees it.
+
+        Every view but the 2D mesh view sums leaves directly; the 2D
+        view holds row-sharded tables as model-axis blocks and must
+        psum their sum-of-squares so each shard sees the same scalar
+        the replicated path would.
+        """
+        return sum(jnp.sum(x ** 2)
+                   for x in jax.tree_util.tree_leaves(params))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -263,6 +275,71 @@ class ShardGraphView(_ViewDefaults):
 
     def edge_ones(self, dtype):
         return self.mask.astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Shard2DGraphView(ShardGraphView):
+    """A ``ShardGraphView`` whose embedding tables are row-sharded over
+    a second mesh axis (the 2D ``data×model`` mesh, DESIGN.md §12).
+
+    Row-sharded parameters (``row_sharded``, e.g. ``"entity"``) enter
+    the ``shard_map`` body as ``(table_rows, d)`` model-axis blocks
+    instead of replicated ``(N, d)`` tables. Only two hooks differ from
+    the 1D view:
+
+      * ``local_rows`` — the data shard's dst rows are the contiguous
+        global ids ``[s*num_rows, (s+1)*num_rows)``; ``fetch_rows``
+        assembles them from the model-axis blocks (one psum), pulling
+        exactly the rows this shard's edges touch. Since each fetched
+        value is one real row plus zeros, the result is bit-exact
+        against slicing a replicated table — so everything downstream
+        (halo gathers over the data axis, layer math, ``unshard``) is
+        byte-for-byte the 1D computation.
+      * ``param_l2`` — sharded tables contribute through
+        ``rowshard_l2`` (a psum of block sums) so the regularizer is
+        the full-table L2 on every shard.
+
+    Everything after the fetch must stay replicated over the model
+    axis; the custom VJPs of both ops rely on that contract (their
+    backward passes are local reduce-scatter shares).
+    """
+
+    model_axis: str = "model"
+    table_rows: int = 0    # block rows per model shard
+    n_valid_rows: int = 0  # real node count; padded ids fetch as zero
+    row_sharded: tuple = ()  # top-level param names stored as blocks
+
+    @classmethod
+    def from_shard2d(cls, sh: dict, *, axis: str, num_rows: int,
+                     n_nodes_padded: int, model_axis: str, table_rows: int,
+                     n_valid_rows: int, row_sharded: tuple):
+        return cls(src=sh["src_h"], dst=sh["dst_l"], rel=sh["rel"],
+                   mask=sh["mask"], halo=sh["halo"], axis=axis,
+                   num_rows=num_rows, n_nodes_padded=n_nodes_padded,
+                   model_axis=model_axis, table_rows=table_rows,
+                   n_valid_rows=n_valid_rows,
+                   row_sharded=tuple(row_sharded))
+
+    def local_rows(self, table):
+        from repro.sharding.rowshard import fetch_rows
+
+        s = jax.lax.axis_index(self.axis)
+        ids = s * self.num_rows + jnp.arange(self.num_rows)
+        return fetch_rows(table, ids, axis=self.model_axis,
+                          rows_per_shard=self.table_rows,
+                          n_valid=self.n_valid_rows)
+
+    def param_l2(self, params):
+        from repro.sharding.rowshard import rowshard_l2
+
+        total = 0.0
+        for name, sub in params.items():
+            if name in self.row_sharded:
+                total = total + rowshard_l2(sub, axis=self.model_axis)
+            else:
+                total = total + sum(jnp.sum(x ** 2)
+                                    for x in jax.tree_util.tree_leaves(sub))
+        return total
 
 
 @jax.tree_util.register_pytree_node_class
@@ -824,7 +901,9 @@ def kg_shard_loss(params: dict, view, batch: dict, cfg: KGNNConfig, *,
     pos = score_pairs(reps, batch["user"], batch["pos"], cfg.n_users)
     neg = score_pairs(reps, batch["user"], batch["neg"], cfg.n_users)
     loss_loc = -jnp.mean(jax.nn.log_sigmoid(pos - neg))
-    reg = sum(jnp.sum(x ** 2) for x in jax.tree_util.tree_leaves(params))
+    # view.param_l2 == plain leaf sum-of-squares everywhere except the
+    # 2D mesh view, which psums row-sharded tables to the same scalar.
+    reg = view.param_l2(params)
     return loss_loc + cfg.l2 * reg, loss_loc
 
 

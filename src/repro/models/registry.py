@@ -29,7 +29,8 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, get
 from repro.configs.base import ArchSpec
-from repro.training.step import DPSpec, ModelStep, enter_or_null
+from repro.training.step import (DPSpec, ModelStep, ROW_SHARDED,
+                                 enter_or_null)
 
 __all__ = ["build_step", "register_family", "kg_dp_spec", "kg_archs",
            "FAMILY_BUILDERS"]
@@ -74,17 +75,20 @@ def kg_archs() -> tuple[str, ...]:
 
 
 def kg_dp_spec(cfg, graph=None) -> DPSpec:
-    """The KG data-parallel contract: edges dst-sharded, params
-    replicated, batch sharded; the in-shard objective is
-    ``kgnn.kg_shard_loss`` running the same ``propagate_view`` layer
-    math as the single-device step."""
+    """The KG mesh contract: edges dst-sharded over ``data``, batch
+    sharded; the in-shard objective is ``kgnn.kg_shard_loss`` running
+    the same ``propagate_view`` layer math as the single-device step.
+    ``placement`` marks the entity table row-sharded over the ``model``
+    axis — the dominant footprint at scale; on a 1D ``data=N`` mesh the
+    placement is inert and everything is replicated, as before."""
     from repro.models import kgnn
 
     return DPSpec(
         graph=graph, scope=cfg.model, sites=kgnn.model_sites(cfg),
         n_layers=cfg.n_layers,
         shard_loss=functools.partial(kgnn.kg_shard_loss, cfg=cfg),
-        shard_reps=functools.partial(kgnn.kg_shard_reps, cfg=cfg))
+        shard_reps=functools.partial(kgnn.kg_shard_reps, cfg=cfg),
+        placement=(("entity", ROW_SHARDED),))
 
 
 @register_family("kgnn")

@@ -1,0 +1,97 @@
+"""Row-sharded table access inside `shard_map` bodies (DESIGN.md §12).
+
+A row-sharded table lives as a ``(table_rows, d)`` block per shard of a
+mesh axis (global row ``i`` belongs to shard ``i // table_rows`` at
+local offset ``i % table_rows``). The two ops here are the ONLY places
+the 2D data×model path touches such a block; everything downstream of
+them is replicated over the model axis, which is the layout contract
+their custom VJPs rely on.
+
+Why custom VJPs instead of plain autodiff through the collectives: the
+2D body computes the loss redundantly on every model shard (activations
+are model-replicated), so differentiating through a forward ``psum``
+over the model axis would transpose into a second psum and overcount
+the block gradient by the model extent. The VJP of ``fetch_rows`` is
+instead a LOCAL scatter of the (replicated) cotangent into the rows
+this shard owns — which is exactly the shard's reduce-scatter share of
+the global row-gradient, computed with zero model-axis traffic. That is
+the "reduce-scatter of row-shard grads over `model`" of the per-axis
+reduction order: it is fused into the fetch VJP rather than issued as a
+separate collective.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fetch_rows", "rowshard_l2"]
+
+
+def fetch_rows(block, ids, *, axis, rows_per_shard, n_valid=None):
+    """Gather global rows ``ids`` from a dim-0 row-sharded table.
+
+    Forward: each shard of ``axis`` contributes the rows it owns (a
+    masked local gather), and one ``psum`` over ``axis`` assembles the
+    full gather. Per id exactly one shard contributes a nonzero row, so
+    the sum is ``x + 0.0 + ...`` — bit-exact against indexing a
+    replicated table. Ids ``>= n_valid`` (node-space padding) come back
+    as zero rows, matching the zero-pad-extended replicated table of
+    the 1D path; their cotangents are dropped in the backward pass, so
+    padded block rows never receive gradient and stay zero forever.
+
+    Backward: requires the cotangent to be replicated over ``axis``
+    (the 2D body contract). Each shard scatter-adds the cotangent rows
+    it owns into a zero block — its reduce-scatter share, locally.
+    """
+    ids = jnp.asarray(ids)
+
+    def _mine(m):
+        owner = ids // rows_per_shard
+        off = ids - owner * rows_per_shard
+        ok = owner == m
+        if n_valid is not None:
+            ok = ok & (ids < n_valid)
+        return ok, off
+
+    @jax.custom_vjp
+    def gather(b):
+        ok, off = _mine(jax.lax.axis_index(axis))
+        rows = jnp.where(ok[:, None], b[off], jnp.zeros((), b.dtype))
+        return jax.lax.psum(rows, axis)
+
+    def fwd(b):
+        return gather(b), None
+
+    def bwd(_, ct):
+        ok, off = _mine(jax.lax.axis_index(axis))
+        contrib = jnp.where(ok[:, None], ct, jnp.zeros((), ct.dtype))
+        zeros = jnp.zeros((rows_per_shard, ct.shape[-1]), ct.dtype)
+        return (zeros.at[off].add(contrib),)
+
+    gather.defvjp(fwd, bwd)
+    return gather(block)
+
+
+def rowshard_l2(block, *, axis):
+    """``sum(x**2)`` over the FULL row-sharded table.
+
+    Forward psums the per-block sums over ``axis`` so every shard sees
+    the same scalar the replicated path would (padded rows are zero and
+    contribute nothing). The VJP is ``2 * block * ct`` — the full-table
+    L2 gradient restricted to the local block, under the same
+    replicated-cotangent contract as :func:`fetch_rows`.
+    """
+
+    @jax.custom_vjp
+    def l2(b):
+        return jax.lax.psum(jnp.sum(b * b), axis)
+
+    def fwd(b):
+        return l2(b), b
+
+    def bwd(b, ct):
+        return (2.0 * b * ct,)
+
+    l2.defvjp(fwd, bwd)
+    return l2(block)

@@ -103,11 +103,17 @@ def check_meta(stored: dict | None, expected: dict | None,
     if bad:
         detail = ", ".join(f"{k}: checkpoint={s!r} run={e!r}"
                            for k, (s, e) in sorted(bad.items()))
+        hint = ""
+        if "mesh" in bad or "placement" in bad:
+            # a topology mismatch has a sanctioned migration path; name it
+            hint = (" (for a mesh/placement change, launch.train's "
+                    "--reshard-from gathers the old layout onto the new "
+                    "mesh instead of resuming in place)")
         raise ValueError(
             f"checkpoint{' at ' + where if where else ''} was written for "
             f"a different run ({detail}); refusing a silent mismatch — "
             "point --ckpt at a fresh directory or match the original "
-            "arch/schedule")
+            "arch/schedule" + hint)
 
 
 def restore_checkpoint(base: str, template, *, step: int | None = None,

@@ -1,4 +1,4 @@
-"""Gradient compression for the data-parallel all-reduce (beyond-paper).
+"""Gradient compression for the mesh-parallel all-reduce (beyond-paper).
 
 The paper (§5) lists gradient compression as orthogonal future work; since
 TinyKG's own SR quantizer is exactly the unbiased compressor needed, we
@@ -11,11 +11,23 @@ reuse it for the cross-replica gradient all-reduce:
      when the reduce is expressible; we model the int32 accumulate)
   4. dequantize by scale/replica-count
 
-Used inside ``shard_map`` (via ``repro.sharding.compat``) over the
-`data`/`pod` mesh axes — the live call site is the data-parallel KGAT
-step in ``repro.training.data_parallel``. At 2+ pods the inter-pod (DCN)
-hop is the slow link — compressing it 4× moves the collective roofline
-term directly (see EXPERIMENTS.md §Perf).
+Used inside ``shard_map`` (via ``repro.sharding.compat``) — the live call
+site is the generic data-parallel step in
+``repro.training.data_parallel``. At 2+ pods the inter-pod (DCN) hop is
+the slow link — compressing it 4× moves the collective roofline term
+directly (see EXPERIMENTS.md §Perf).
+
+Axis-awareness (2D ``data×model`` mesh, DESIGN.md §12): ``axis_name``
+may be a tuple of mesh axes, and ``all_reduce_grads`` takes a
+``placement`` map assigning top-level parameter names to the axis they
+are row-sharded over. A row-sharded table's gradient is already the
+shard's exact block gradient (the fetch VJP's local scatter IS the
+model-axis reduce-scatter, see ``repro.sharding.rowshard``), so it must
+NOT be reduced over that axis again — it reduces only over the
+remaining axes (``psum`` over ``data``). Replicated parameters reduce
+over every axis: their per-shard gradients are identical across the
+model axis, so the extra reduction is exact in fp32 and, compressed,
+averages more independent SR draws (variance ↓).
 """
 
 from __future__ import annotations
@@ -26,6 +38,10 @@ import jax.numpy as jnp
 __all__ = ["all_reduce_grads", "compressed_psum_mean", "psum_mean"]
 
 
+def _axes(axis_name) -> tuple:
+    return (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+
+
 def _sr_quantize_int8(g: jax.Array, scale: jax.Array, key: jax.Array):
     gn = g / jnp.maximum(scale, 1e-12) * 127.0
     floor = jnp.floor(gn)
@@ -34,50 +50,91 @@ def _sr_quantize_int8(g: jax.Array, scale: jax.Array, key: jax.Array):
     return jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
 
 
-def compressed_psum_mean(grads, axis_name: str, key: jax.Array):
+def compressed_psum_mean(grads, axis_name, key: jax.Array):
     """Mean-all-reduce each leaf with int8 SR compression (unbiased).
 
-    ``key`` may be replicated: each replica folds in its own axis index,
-    so rounding noise is independent across replicas and averages down
-    ~1/√n in the psum instead of adding coherently (shard gradients are
-    near-equal batch estimates — with a shared draw the identical
-    components, e.g. the L2 term, would round identically on every
-    replica and the mean would keep the full single-replica error).
+    ``axis_name`` is one mesh axis or a tuple of them (the reduce then
+    spans their product). ``key`` may be replicated: each replica folds
+    in its own index along every reduced axis, so rounding noise is
+    independent across replicas and averages down ~1/√n in the psum
+    instead of adding coherently (shard gradients are near-equal batch
+    estimates — with a shared draw the identical components, e.g. the
+    L2 term, would round identically on every replica and the mean
+    would keep the full single-replica error).
     """
-    key = jax.random.fold_in(key, jax.lax.axis_index(axis_name))
+    axes = _axes(axis_name)
+    for ax in axes:
+        key = jax.random.fold_in(key, jax.lax.axis_index(ax))
     leaves, treedef = jax.tree_util.tree_flatten(grads)
-    n = jax.lax.psum(1, axis_name)
+    n = jax.lax.psum(1, axes)
     out = []
     for i, g in enumerate(leaves):
         gf = g.astype(jnp.float32)
-        scale = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis_name)
+        scale = jax.lax.pmax(jnp.max(jnp.abs(gf)), axes)
         q = _sr_quantize_int8(gf, scale, jax.random.fold_in(key, i))
-        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        total = jax.lax.psum(q.astype(jnp.int32), axes)
         out.append((total.astype(jnp.float32) * scale / 127.0 / n)
                    .astype(g.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def psum_mean(grads, axis_name: str):
-    """Uncompressed baseline."""
-    n = jax.lax.psum(1, axis_name)
+def psum_mean(grads, axis_name):
+    """Uncompressed baseline (``axis_name``: one axis or a tuple)."""
+    axes = _axes(axis_name)
+    n = jax.lax.psum(1, axes)
     return jax.tree_util.tree_map(
-        lambda g: jax.lax.psum(g, axis_name) / n, grads)
+        lambda g: jax.lax.psum(g, axes) / n, grads)
 
 
-def all_reduce_grads(grads, axis_name: str, *, key: jax.Array | None = None,
-                     compressed: bool = True):
+def all_reduce_grads(grads, axis_name, *, key: jax.Array | None = None,
+                     compressed: bool = True, placement: dict | None = None):
     """The one gradient all-reduce entry point for shard_map train steps.
 
     ``compressed=False`` (or no key) is the exact fp32 path — the
     bit-verification baseline; ``compressed=True`` needs a per-step key
     (reusing one would replay identical rounding noise every step and
     void unbiasedness-in-expectation, same rule as the ACT sites).
+
+    ``placement`` maps top-level param names (``grads`` must then be a
+    dict) to the mesh axis each is row-sharded over; those subtrees
+    skip that axis in their reduce (their in-body gradient is already
+    the exact block gradient — see module docstring). ``None`` or an
+    empty map is the classic everything-over-every-axis behavior.
     """
-    if not compressed:
-        return psum_mean(grads, axis_name)
-    if key is None:
+    axes = _axes(axis_name)
+    if compressed and key is None:
         raise ValueError(
             "compressed grad all-reduce needs a per-step PRNG key "
             "(pass compressed=False for the exact baseline)")
-    return compressed_psum_mean(grads, axis_name, key)
+    if not placement:
+        if not compressed:
+            return psum_mean(grads, axes if len(axes) > 1 else axes[0])
+        return compressed_psum_mean(
+            grads, axes if len(axes) > 1 else axes[0], key)
+    if not isinstance(grads, dict):
+        raise TypeError(
+            "all_reduce_grads placement= requires a dict of top-level "
+            f"param subtrees, got {type(grads).__name__}")
+    unknown = sorted(set(placement) - set(grads))
+    if unknown:
+        raise ValueError(
+            f"placement names parameters not in the gradient tree: "
+            f"{unknown} (have {sorted(grads)})")
+    # Group param names by the axes they actually reduce over, reduce
+    # each group in one call (per-leaf key folding stays i-indexed
+    # within the group; a per-group salt keeps draws independent).
+    groups: dict = {}
+    for name in grads:
+        r_axes = tuple(a for a in axes if a != placement.get(name))
+        groups.setdefault(r_axes, []).append(name)
+    out = {}
+    for j, r_axes in enumerate(sorted(groups)):
+        sub = {n: grads[n] for n in groups[r_axes]}
+        if not r_axes:
+            out.update(sub)  # sharded over every reduced axis: already local
+        elif not compressed:
+            out.update(psum_mean(sub, r_axes))
+        else:
+            out.update(compressed_psum_mean(sub, r_axes,
+                                            jax.random.fold_in(key, j)))
+    return {name: out[name] for name in grads}

@@ -1,28 +1,41 @@
-"""Compressed-gradient data parallelism for ANY registered KG step
-(DESIGN.md §7 + §9).
+"""Compressed-gradient mesh parallelism for ANY registered KG step
+(DESIGN.md §7, §9, §12).
 
 The end-to-end story: edges dst-partitioned by
 ``repro.data.csr.partition_edges``, the full step (edge weights, edge
 softmax, ACT-compressed SPMM + transforms, BPR loss, backward) runs
-per-shard inside one ``shard_map``, and gradients of the replicated
-params all-reduce through the INT8 stochastic-rounding ``psum`` of
-``repro.training.compress``.
+per-shard inside one ``shard_map``, and gradients all-reduce through the
+INT8 stochastic-rounding ``psum`` of ``repro.training.compress``.
 
 There is no per-model DP forward here anymore: the ``shard_map`` body
 builds a ``kgnn.ShardGraphView`` and runs the step's own
-``DPSpec.shard_loss`` — the SAME ``propagate_view`` layer functions the
-single-device step traces — so kgat, kgcn and kgin (and any future
-registered KG arch) share one wrapper. ``propagate_spmd`` now matches
-these semantics too (attention once, from the layer-0 embeddings); the
-old per-layer-recomputed-attention fork is gone.
+``ShardSpec.shard_loss`` — the SAME ``propagate_view`` layer functions
+the single-device step traces — so kgat, kgcn and kgin (and any future
+registered KG arch) share one wrapper.
 
-Exactness contract (pinned by tests/test_data_parallel.py per arch):
+Two mesh layouts, one wrapper (``model_axis`` selects):
+
+  * **1D ``data=N``** (``model_axis=None``, the PR 3/5 path, unchanged):
+    params replicated, gradients mean-reduced over ``data``.
+  * **2D ``data×model``** (``model_axis="model"``): parameters the
+    step's ``ShardSpec.placement`` marks ROW_SHARDED (the embedding
+    tables) enter the body as per-shard row blocks — each device holds
+    ``1/M`` of the table. The body uses ``kgnn.Shard2DGraphView``,
+    whose ``fetch_rows`` assembles each data shard's dst rows from the
+    blocks with one model-axis psum (values bit-exact vs the replicated
+    slice), and whose custom VJP reduce-scatters the row gradients
+    locally. ``all_reduce_grads`` then runs per-axis: row-shard grads
+    psum over ``data`` only, replicated grads over both axes.
+
+Exactness contract (pinned by tests/test_data_parallel.py +
+tests/test_mesh2d.py per arch):
 
   * edge weights are computed ONCE from the layer-0 embeddings;
   * within a shard, edges keep their original relative order, so each
     destination row accumulates in the same order as the unsharded
     ``segment_sum`` — with exact compression and ``compress_grads=False``
-    a step is bit-verifiable against the single-device step;
+    a step is bit-verifiable against the single-device step (forward
+    reps bit-exact on 1D AND 2D meshes);
   * with stochastic policies the per-shard quantizers use shard-local
     scales and scope-hashed keys, so the step is not bit-identical but
     every estimator stays unbiased (Proposition 1 per shard + unbiased
@@ -31,7 +44,7 @@ Exactness contract (pinned by tests/test_data_parallel.py per arch):
 Per-site ACT policies and stochastic-rounding keys resolve through the
 ordinary ``ActContext`` machinery (same ``<arch>/layer<l>/<site>``
 scopes as ``propagate``, with the site table supplied by
-``DPSpec.sites``) but are derived OUTSIDE the shard_map body and ride
+``ShardSpec.sites``) but are derived OUTSIDE the shard_map body and ride
 in as replicated args: closed-over tracers are off-limits inside a body.
 
 Each shard's SPMM gathers only its halo rows (the unique remote sources
@@ -51,13 +64,14 @@ from repro.core import FP32
 from repro.core.context import ActContext
 from repro.core.policy import as_schedule
 from repro.core.rng import scope_key
-from repro.data.csr import EdgePartition, partition_edges
-from repro.models.kgnn import ShardGraphView
+from repro.data.csr import EdgePartition, partition_edges, row_partition
+from repro.models.kgnn import Shard2DGraphView, ShardGraphView
 from repro.sharding.compat import P, shard_map
+from repro.sharding.mesh_spec import MeshSpec
 from repro.training.step import DPSpec, ModelStep
 
 __all__ = ["partition_graph", "dp_loss_and_grads", "make_dp_step",
-           "dp_forward_reps", "dp_bpr_loss_and_grads", "make_kgat_dp_step",
+           "dp_forward_reps", "pad_row_sharded", "unpad_row_sharded",
            "check_no_sampled_dp"]
 
 
@@ -101,7 +115,7 @@ def _as_dp_spec(step: ModelStep | DPSpec) -> DPSpec:
     if getattr(step, "dp_spec", None) is None:
         arch = getattr(step, "arch", "<unknown>")
         why = getattr(step, "dp_unsupported", None) or \
-            "the step registered no DPSpec"
+            "the step registered no ShardSpec"
         raise NotImplementedError(
             f"data parallelism is not implemented for arch {arch!r}: {why}")
     return step.dp_spec
@@ -162,34 +176,152 @@ def _part_leaves(part: EdgePartition) -> dict:
             "rel": part.rel, "mask": part.mask, "halo": part.halo}
 
 
+# ---------------------------------------------------------------------------
+# 2D row-sharded placement plumbing
+# ---------------------------------------------------------------------------
+
+
+def _spec_row_sharded(spec_or_names) -> tuple:
+    if isinstance(spec_or_names, (list, tuple, set, frozenset)):
+        return tuple(spec_or_names)
+    return _as_dp_spec(spec_or_names).row_sharded()
+
+
+def _row_geometry(part: EdgePartition, n_model: int):
+    """Block geometry of the row-sharded tables on an ``n_model`` axis:
+    the padded row space must cover every data shard's dst rows
+    (``n_nodes_padded``), so each data shard's contiguous id range has
+    an owner."""
+    return row_partition(part.n_nodes, n_model, pad_to=part.n_nodes_padded)
+
+
+def _check_row_sharded(params, sharded, rp, model_axis: str) -> None:
+    for name in sharded:
+        if name not in params:
+            raise ValueError(
+                f"ShardSpec places {name!r} on the model axis but params "
+                f"has no such top-level entry (have {sorted(params)})")
+        leaf = params[name]
+        if getattr(leaf, "ndim", 0) < 2:
+            raise ValueError(
+                f"row-sharded param {name!r} must be a (rows, d) array, "
+                f"got ndim={getattr(leaf, 'ndim', None)}")
+        if leaf.shape[0] != rp.n_rows_padded:
+            raise ValueError(
+                f"row-sharded param {name!r} has {leaf.shape[0]} rows; a "
+                f"{model_axis}={rp.n_shards} mesh needs {rp.n_rows_padded} "
+                f"({rp.n_shards}×{rp.rows_per_shard}) — pad the state with "
+                f"pad_row_sharded() before building the step")
+
+
+def _param_specs(params, sharded, model_axis: str) -> dict:
+    """Per-top-level-name in/out specs: row blocks over ``model_axis``,
+    everything else replicated (a ``P()`` prefix covers the subtree)."""
+    return {name: (P(model_axis, *(None,) * (params[name].ndim - 1))
+                   if name in sharded else P())
+            for name in params}
+
+
+def pad_row_sharded(tree, spec_or_names, part: EdgePartition, n_model: int):
+    """Zero-pad every row-sharded leaf in ``tree`` to the 2D mesh's
+    padded row count (``n_model × rows_per_block``).
+
+    Matches leaves by dict key anywhere in the tree, so one call fixes
+    both the params dict and an optimizer state whose moments mirror it
+    (adam's ``mu``/``nu``). Padded rows are zero and — because
+    ``fetch_rows`` drops their cotangents — receive zero gradient, so
+    adam keeps them at zero forever.
+    """
+    names = set(_spec_row_sharded(spec_or_names))
+    if not names or n_model is None:
+        return tree
+    rp = _row_geometry(part, n_model)
+
+    def fix(path, leaf):
+        keys = {k.key for k in path
+                if isinstance(k, jax.tree_util.DictKey)}
+        if not (keys & names) or getattr(leaf, "ndim", 0) < 2:
+            return leaf
+        rows = leaf.shape[0]
+        if rows == rp.n_rows_padded:
+            return leaf
+        if rows != part.n_nodes:
+            raise ValueError(
+                f"row-sharded leaf at {jax.tree_util.keystr(path)} has "
+                f"{rows} rows; expected {part.n_nodes} (unpadded) or "
+                f"{rp.n_rows_padded} (already padded for model={n_model})")
+        pad = [(0, rp.n_rows_padded - rows)] + [(0, 0)] * (leaf.ndim - 1)
+        return jnp.pad(leaf, pad)
+
+    return jax.tree_util.tree_map_with_path(fix, tree)
+
+
+def unpad_row_sharded(tree, spec_or_names, n_rows: int):
+    """Inverse of :func:`pad_row_sharded`: slice row-sharded leaves back
+    to the real row count (checkpoint gather-back, parity tests)."""
+    names = set(_spec_row_sharded(spec_or_names))
+    if not names:
+        return tree
+
+    def fix(path, leaf):
+        keys = {k.key for k in path
+                if isinstance(k, jax.tree_util.DictKey)}
+        if not (keys & names) or getattr(leaf, "ndim", 0) < 2:
+            return leaf
+        return leaf[:n_rows]
+
+    return jax.tree_util.tree_map_with_path(fix, tree)
+
+
+def _make_view(sh, part, axis, model_axis, rp, sharded):
+    if model_axis is None:
+        return ShardGraphView.from_shard(
+            sh, axis=axis, num_rows=part.rows_per_shard,
+            n_nodes_padded=part.n_nodes_padded)
+    return Shard2DGraphView.from_shard2d(
+        sh, axis=axis, num_rows=part.rows_per_shard,
+        n_nodes_padded=part.n_nodes_padded, model_axis=model_axis,
+        table_rows=rp.rows_per_shard, n_valid_rows=part.n_nodes,
+        row_sharded=sharded)
+
+
 def dp_loss_and_grads(step: ModelStep | DPSpec, params,
                       part: EdgePartition, batch, *, mesh,
-                      axis: str = "data", schedule=None,
-                      root_key: jax.Array | None = None, step_idx=0,
-                      compress_grads: bool = True):
+                      axis: str = "data", model_axis: str | None = None,
+                      schedule=None, root_key: jax.Array | None = None,
+                      step_idx=0, compress_grads: bool = True):
     """Sharded step core for any registered KG arch: ``(loss, grads)``.
 
-    ``params`` replicated; ``part`` dst-sharded over ``axis``; ``batch``
-    (user/pos/neg, each divisible by the shard count) sharded over
-    ``axis``. ``grads`` come back replicated — already mean-reduced
-    through the compressed (or exact) psum — so the optimizer update
-    stays a plain replicated computation. ``loss`` is the shard-mean of
-    the local objectives (local batch BPR + full L2), i.e. the global
-    objective.
+    ``part`` dst-sharded over ``axis``; ``batch`` (user/pos/neg, each
+    divisible by the shard count) sharded over ``axis``. With
+    ``model_axis=None`` params are replicated and ``grads`` come back
+    replicated — already mean-reduced through the compressed (or exact)
+    psum — so the optimizer update stays a plain replicated computation.
+    With ``model_axis`` set, ROW_SHARDED params (and their grads) are
+    laid out as row blocks over that axis (pad the state with
+    :func:`pad_row_sharded` first); the optimizer update still runs
+    outside the shard_map — elementwise updates commute with the row
+    layout. ``loss`` is the shard-mean of the local objectives (local
+    batch BPR + full L2), i.e. the global objective.
     """
     from repro.training.compress import all_reduce_grads
 
     spec = _as_dp_spec(step)
     _check_contract(part, mesh, axis, batch, root_key, need_key=True)
+    sharded = spec.row_sharded() if model_axis is not None else ()
+    rp = None
+    if model_axis is not None:
+        rp = _row_geometry(part, int(mesh.shape[model_axis]))
+        _check_row_sharded(params, sharded, rp, model_axis)
     policies = _site_policies(schedule, spec)
     site_keys = _site_keys(root_key, step_idx, spec)
     psum_key = scope_key(root_key, f"{spec.scope}/dp_psum", step_idx)
+    axes = (axis, model_axis) if model_axis is not None else axis
+    placement = {n: model_axis for n in sharded} or None
 
     def body(params_, part_leaves, batch_, site_keys_, psum_key_):
         sh = {k: v[0] for k, v in part_leaves.items()}  # (1, …) -> (…)
-        view = ShardGraphView.from_shard(
-            sh, axis=axis, num_rows=part.rows_per_shard,
-            n_nodes_padded=part.n_nodes_padded)
+        view = _make_view(sh, part, axis, model_axis, rp, sharded)
 
         def loss_fn(p):
             return spec.shard_loss(p, view, batch_, site_keys=site_keys_,
@@ -197,44 +329,56 @@ def dp_loss_and_grads(step: ModelStep | DPSpec, params,
 
         (total, _), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params_)
-        grads = all_reduce_grads(grads, axis, key=psum_key_,
-                                 compressed=compress_grads)
+        grads = all_reduce_grads(grads, axes, key=psum_key_,
+                                 compressed=compress_grads,
+                                 placement=placement)
         loss = jax.lax.pmean(total, axis)
         return loss, grads
 
+    param_specs = (P() if model_axis is None
+                   else _param_specs(params, sharded, model_axis))
     mapped = shard_map(
         body, mesh=mesh,
-        in_specs=(P(), P(axis), P(axis), P(), P()),
-        out_specs=(P(), P()))
+        in_specs=(param_specs, P(axis), P(axis), P(), P()),
+        out_specs=(P(), param_specs))
     return mapped(params, _part_leaves(part), batch, site_keys, psum_key)
 
 
 def dp_forward_reps(step: ModelStep | DPSpec, params,
                     part: EdgePartition, *, mesh, axis: str = "data",
-                    schedule=None, root_key: jax.Array | None = None,
+                    model_axis: str | None = None, schedule=None,
+                    root_key: jax.Array | None = None,
                     step_idx=0) -> jax.Array:
     """Readout representations from the sharded forward (parity tests).
 
     Returns the (n_nodes, D) table — rows beyond ``part.n_nodes`` (node-
     space padding) are dropped. With exact compression this is
-    bit-comparable against single-device ``propagate``.
+    bit-comparable against single-device ``propagate`` on 1D and 2D
+    meshes alike (the 2D fetch is one-real-row-plus-zeros psums).
     """
     spec = _as_dp_spec(step)
     if spec.shard_reps is None:
-        raise NotImplementedError(f"{spec.scope}: DPSpec has no shard_reps")
+        raise NotImplementedError(f"{spec.scope}: ShardSpec has no "
+                                  f"shard_reps")
     _check_contract(part, mesh, axis, None, root_key, need_key=False)
+    sharded = spec.row_sharded() if model_axis is not None else ()
+    rp = None
+    if model_axis is not None:
+        rp = _row_geometry(part, int(mesh.shape[model_axis]))
+        _check_row_sharded(params, sharded, rp, model_axis)
     policies = _site_policies(schedule, spec)
     site_keys = _site_keys(root_key, step_idx, spec)
 
     def body(params_, part_leaves, site_keys_):
         sh = {k: v[0] for k, v in part_leaves.items()}
-        view = ShardGraphView.from_shard(
-            sh, axis=axis, num_rows=part.rows_per_shard,
-            n_nodes_padded=part.n_nodes_padded)
+        view = _make_view(sh, part, axis, model_axis, rp, sharded)
         return spec.shard_reps(params_, view, site_keys=site_keys_,
                                site_policies=policies)
 
-    mapped = shard_map(body, mesh=mesh, in_specs=(P(), P(axis), P()),
+    param_specs = (P() if model_axis is None
+                   else _param_specs(params, sharded, model_axis))
+    mapped = shard_map(body, mesh=mesh,
+                       in_specs=(param_specs, P(axis), P()),
                        out_specs=P(axis, None))
     reps = mapped(params, _part_leaves(part), site_keys)
     return reps[:part.n_nodes]
@@ -242,16 +386,31 @@ def dp_forward_reps(step: ModelStep | DPSpec, params,
 
 def make_dp_step(step: ModelStep | DPSpec, part: EdgePartition, mesh, opt,
                  *, schedule=None, root_key: jax.Array,
-                 axis: str = "data", compress_grads: bool = True):
+                 axis: str = "data", model_axis: str | None = None,
+                 mesh_spec: "MeshSpec | str | None" = None,
+                 compress_grads: bool = True):
     """Jitted ``train_step(state, batch, step)`` for ``Trainer``, for any
-    KG arch with a ``DPSpec``.
+    KG arch with a ``ShardSpec``.
 
     One ``shard_map`` spans loss, backward, and the compressed gradient
-    all-reduce; the (replicated) optimizer update runs outside it.
-    Raises ``NotImplementedError`` (naming the arch and why) for steps
-    without a ``DPSpec``.
+    all-reduce; the optimizer update runs outside it (replicated params
+    update replicated, row-sharded tables update block-wise — adam is
+    elementwise, so the update commutes with the layout). Raises
+    ``NotImplementedError`` (naming the arch and why) for steps without
+    a ``ShardSpec``.
+
+    ``mesh_spec`` (a ``MeshSpec`` or its ``"data=4,model=2"`` string) is
+    the launcher-facing way to pick the layout: it is validated against
+    ``mesh`` and sets ``axis``/``model_axis`` — a ``model`` axis in the
+    spec selects the 2D row-sharded path.
     """
     spec = _as_dp_spec(step)
+    if mesh_spec is not None:
+        ms = MeshSpec.parse(mesh_spec)
+        ms.check_axes(("data", "model"), required=("data",))
+        ms.check_mesh(mesh)
+        axis = "data"
+        model_axis = "model" if "model" in ms.names else None
 
     def train_step(state, batch, step_idx):
         check_no_sampled_dp(batch)
@@ -262,38 +421,9 @@ def make_dp_step(step: ModelStep | DPSpec, part: EdgePartition, mesh, opt,
         params, opt_state = state
         loss, grads = dp_loss_and_grads(
             spec, params, part, batch, mesh=mesh, axis=axis,
-            schedule=schedule, root_key=root_key, step_idx=step_idx,
-            compress_grads=compress_grads)
+            model_axis=model_axis, schedule=schedule, root_key=root_key,
+            step_idx=step_idx, compress_grads=compress_grads)
         params, opt_state = opt.update(grads, opt_state, params)
         return (params, opt_state), {"loss": loss}
 
     return train_step
-
-
-# ---------------------------------------------------------------------------
-# legacy KGAT-shaped entry points (thin wrappers over the generic path)
-# ---------------------------------------------------------------------------
-
-
-def dp_bpr_loss_and_grads(params, part: EdgePartition, batch, *, cfg,
-                          mesh, axis: str = "data", schedule=None,
-                          root_key: jax.Array | None = None, step=0,
-                          compress_grads: bool = True):
-    """Config-shaped wrapper around ``dp_loss_and_grads`` (any KG model)."""
-    from repro.models.registry import kg_dp_spec
-
-    return dp_loss_and_grads(
-        kg_dp_spec(cfg), params, part, batch, mesh=mesh, axis=axis,
-        schedule=schedule, root_key=root_key, step_idx=step,
-        compress_grads=compress_grads)
-
-
-def make_kgat_dp_step(cfg, part: EdgePartition, mesh, opt, *,
-                      schedule=None, root_key: jax.Array,
-                      axis: str = "data", compress_grads: bool = True):
-    """Config-shaped wrapper around ``make_dp_step`` (any KG model)."""
-    from repro.models.registry import kg_dp_spec
-
-    return make_dp_step(
-        kg_dp_spec(cfg), part, mesh, opt, schedule=schedule,
-        root_key=root_key, axis=axis, compress_grads=compress_grads)

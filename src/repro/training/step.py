@@ -18,9 +18,10 @@ instances from the existing layer functions):
     ``act_context(schedule, root, step=i)`` per trace); ``ctx=None``
     leaves ambient resolution to the caller (e.g. a recording context
     for ``traced_activation_report``);
-  * ``dp_spec`` — what is replicated vs edge-sharded (``DPSpec``), or
-    ``None`` with ``dp_unsupported`` naming why data parallelism does
-    not apply;
+  * ``dp_spec`` — what is edge-sharded over the data axis and how each
+    parameter lays out over the model axis (``ShardSpec``; ``DPSpec``
+    is its pre-2D alias), or ``None`` with ``dp_unsupported`` naming
+    why mesh parallelism does not apply;
   * ``batches() -> iterator`` — the step's default data stream (the
     launcher's; examples/benchmarks bring their own sizes).
 """
@@ -35,22 +36,33 @@ import jax
 
 from repro.core import act_context
 
-__all__ = ["DPSpec", "ModelStep", "ModelStepProtocol", "make_train_step",
-           "step_metadata"]
+__all__ = ["ShardSpec", "DPSpec", "ROW_SHARDED", "REPLICATED", "ModelStep",
+           "ModelStepProtocol", "make_train_step", "step_metadata"]
+
+# Per-parameter placement kinds for ``ShardSpec.placement`` (DESIGN.md
+# §12). REPLICATED is the default for any parameter not listed.
+ROW_SHARDED = "rows"
+REPLICATED = "replicated"
 
 
 @dataclasses.dataclass(frozen=True)
-class DPSpec:
-    """What a step shards vs replicates under data parallelism.
+class ShardSpec:
+    """What a step shards vs replicates under mesh parallelism.
 
-    Params stay replicated (gradients all-reduce through the compressed
-    psum); ``graph`` is the COO edge structure to dst-partition
+    The data axis: ``graph`` is the COO edge structure to dst-partition
     (``repro.data.csr.partition_edges``); the batch shards evenly over
-    the mesh axis. ``sites`` lists the per-layer ACT sites
+    the mesh's data axis. ``sites`` lists the per-layer ACT sites
     ``(name, op_kind)`` whose policies/keys must be pre-resolved OUTSIDE
     the ``shard_map`` body, under ``<scope>/layer<l>/<site>`` scopes —
-    the same paths the single-device step uses, so a DP step replays the
-    same rounding noise at the same sites.
+    the same paths the single-device step uses, so a sharded step
+    replays the same rounding noise at the same sites.
+
+    The model axis: ``placement`` declares, per top-level parameter
+    name, how the parameter lays out over the mesh's model axis —
+    ``(name, ROW_SHARDED)`` splits dim 0 into per-shard row blocks
+    (embedding tables); anything not listed is REPLICATED. On a 1D
+    ``data=N`` mesh the placement is inert and every parameter is
+    replicated, which is exactly the pre-2D behavior.
     """
 
     graph: Any                     # CKG to dst-partition
@@ -63,6 +75,22 @@ class DPSpec:
     # (params, view, *, site_keys, site_policies) -> local readout rows;
     # optional, used by the forward-parity tests
     shard_reps: Callable | None = None
+    # ((top_level_param_name, ROW_SHARDED), ...); unlisted => replicated
+    placement: tuple = ()
+
+    def row_sharded(self) -> tuple:
+        """Top-level param names row-sharded over the model axis."""
+        return tuple(n for n, kind in self.placement if kind == ROW_SHARDED)
+
+    def placement_str(self) -> str:
+        """Stable string form for checkpoint metadata (``"entity=rows"``)."""
+        return ",".join(f"{n}={kind}" for n, kind in self.placement)
+
+
+# The pre-2D name: ShardSpec generalizes DPSpec (placement defaults to
+# all-replicated), so every existing DPSpec(...) construction and
+# isinstance check keeps working unchanged.
+DPSpec = ShardSpec
 
 
 @runtime_checkable
@@ -102,7 +130,8 @@ class ModelStep:
                 "model": getattr(self.cfg, "model", self.family)}
 
 
-def step_metadata(step: ModelStep, schedule_spec: str | None = None) -> dict:
+def step_metadata(step: ModelStep, schedule_spec: str | None = None, *,
+                  mesh_spec=None, placement: str | None = None) -> dict:
     """Identity a checkpoint carries so restore can't silently mismatch.
 
     ``schedule_spec`` is the CLI-level policy string (``"int8"``,
@@ -110,10 +139,22 @@ def step_metadata(step: ModelStep, schedule_spec: str | None = None) -> dict:
     different arch or schedule is almost always a mistake — the
     ``CheckpointManager`` refuses it instead of producing silently-wrong
     training.
+
+    ``mesh_spec`` (a ``MeshSpec`` or its string form) and ``placement``
+    (``ShardSpec.placement_str()``) record the mesh topology and
+    per-table layout of sharded runs: a 2D checkpoint's row-sharded
+    tables are padded to the mesh's block geometry, so restoring onto a
+    different layout is a shape-silent corruption — ``check_meta``
+    refuses it naming both topologies (``--reshard-from`` is the
+    explicit migration path).
     """
     meta = step.metadata()
     if schedule_spec is not None:
         meta["schedule"] = str(schedule_spec)
+    if mesh_spec is not None:
+        meta["mesh"] = str(mesh_spec)
+    if placement is not None:
+        meta["placement"] = str(placement)
     return meta
 
 

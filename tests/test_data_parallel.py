@@ -134,18 +134,21 @@ def test_dp_step_contract_errors():
     from repro.sharding.compat import make_sim_mesh
     from repro.training import data_parallel as dp
 
+    from repro.models.registry import kg_dp_spec
+
     cfg = kgnn.KGNNConfig(model="kgat", n_users=4, n_entities=12,
                           n_relations=3, dim=4, n_layers=1, n_bases=2)
+    spec = kg_dp_spec(cfg)
     part2 = partition_edges([0, 1], [1, 2], n_nodes=cfg.n_nodes, n_shards=2)
     mesh1 = make_sim_mesh(1)
     params = kgnn.init_params(jax.random.PRNGKey(0), cfg)
     batch = {k: jnp.zeros((4,), jnp.int32) for k in ("user", "pos", "neg")}
     with pytest.raises(ValueError, match="partition built for 2"):
-        dp.dp_bpr_loss_and_grads(params, part2, batch, cfg=cfg, mesh=mesh1,
-                                 root_key=jax.random.PRNGKey(0))
+        dp.dp_loss_and_grads(spec, params, part2, batch, mesh=mesh1,
+                             root_key=jax.random.PRNGKey(0))
     part1 = partition_edges([0, 1], [1, 2], n_nodes=cfg.n_nodes, n_shards=1)
     with pytest.raises(ValueError, match="root key"):
-        dp.dp_bpr_loss_and_grads(params, part1, batch, cfg=cfg, mesh=mesh1)
+        dp.dp_loss_and_grads(spec, params, part1, batch, mesh=mesh1)
 
 
 # ---------------------------------------------------------------------------
@@ -157,6 +160,7 @@ _SETUP = """
         import jax, jax.numpy as jnp, numpy as np
         from jax.flatten_util import ravel_pytree
         from repro.models import kgnn
+        from repro.models.registry import kg_dp_spec
         from repro.training import data_parallel as dp
         from repro.sharding.compat import make_sim_mesh
 
@@ -174,6 +178,7 @@ _SETUP = """
             "user": jnp.asarray(rng.integers(0, cfg.n_users, B), jnp.int32),
             "pos": jnp.asarray(rng.integers(0, cfg.n_entities, B), jnp.int32),
             "neg": jnp.asarray(rng.integers(0, cfg.n_entities, B), jnp.int32)}
+        spec = kg_dp_spec(cfg, g)
 """
 
 
@@ -189,8 +194,8 @@ def test_dp_step_matches_single_device():
             params, g, batch, cfg, policy=None, key=None)
         mesh = make_sim_mesh(8)
         part = dp.partition_graph(g, mesh)
-        loss_dp, g_dp = dp.dp_bpr_loss_and_grads(
-            params, part, batch, cfg=cfg, mesh=mesh, schedule=None,
+        loss_dp, g_dp = dp.dp_loss_and_grads(
+            spec, params, part, batch, mesh=mesh, schedule=None,
             root_key=jax.random.PRNGKey(7), compress_grads=False)
         assert abs(float(loss_ref - loss_dp)) < 1e-6, (loss_ref, loss_dp)
         fr, _ = ravel_pytree(g_ref)
@@ -217,11 +222,11 @@ def test_dp_forward_loss_invariant_under_act_policy():
         from repro.core.policy import parse_schedule
         mesh = make_sim_mesh(4)
         part = dp.partition_graph(g, mesh)
-        l_exact, _ = dp.dp_bpr_loss_and_grads(
-            params, part, batch, cfg=cfg, mesh=mesh, schedule=None,
+        l_exact, _ = dp.dp_loss_and_grads(
+            spec, params, part, batch, mesh=mesh, schedule=None,
             root_key=jax.random.PRNGKey(3), compress_grads=False)
-        l_int8, _ = dp.dp_bpr_loss_and_grads(
-            params, part, batch, cfg=cfg, mesh=mesh,
+        l_int8, _ = dp.dp_loss_and_grads(
+            spec, params, part, batch, mesh=mesh,
             schedule=parse_schedule("int8"),
             root_key=jax.random.PRNGKey(3), compress_grads=True)
         d = abs(float(l_exact - l_int8))
@@ -317,15 +322,15 @@ def test_compressed_psum_grad_unbiasedness_2_4_8():
         for S in (2, 4, 8):
             mesh = make_sim_mesh(S)
             part = dp.partition_graph(g, mesh)
-            _, g_exact = dp.dp_bpr_loss_and_grads(
-                params, part, batch, cfg=cfg, mesh=mesh, schedule=None,
+            _, g_exact = dp.dp_loss_and_grads(
+                spec, params, part, batch, mesh=mesh, schedule=None,
                 root_key=jax.random.PRNGKey(0), compress_grads=False)
             fe, _ = ravel_pytree(g_exact)
 
             @jax.jit
             def comp(root, part=part, mesh=mesh):
-                _, gr = dp.dp_bpr_loss_and_grads(
-                    params, part, batch, cfg=cfg, mesh=mesh, schedule=None,
+                _, gr = dp.dp_loss_and_grads(
+                    spec, params, part, batch, mesh=mesh, schedule=None,
                     root_key=root, compress_grads=True)
                 return ravel_pytree(gr)[0]
 
