@@ -47,6 +47,37 @@ import sys
 _KEY_FIELDS = ("bench", "op", "mode", "bits", "dim", "rows", "n",
                "n_edges", "n_nodes", "model", "k")
 
+# Every BENCH record must carry these (identity fields — a row without
+# them can silently collide with or shadow another row under _key).
+_REQUIRED_FIELDS = ("op", "mode", "backend")
+
+
+class BenchSchemaError(ValueError):
+    """A BENCH record is missing identity fields; message names them."""
+
+
+def validate_bench_rows(rows: list) -> None:
+    """Raise ``BenchSchemaError`` naming every row/field violation.
+
+    Each record must carry ``op`` (what was measured), ``mode``
+    (compiled | interp | host | ...) and ``backend`` (pallas | jnp |
+    cpu | ...) so the merge key is total and the timing-gate logic can
+    trust ``mode``.
+    """
+    problems = []
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            problems.append(f"row {i}: not an object "
+                            f"({type(row).__name__})")
+            continue
+        missing = [f for f in _REQUIRED_FIELDS if f not in row]
+        if missing:
+            tag = ",".join(f"{f}={v}" for f, v in _key(row)) or f"row {i}"
+            problems.append(f"{tag}: missing required keys {missing}")
+    if problems:
+        raise BenchSchemaError(
+            "BENCH record schema violations: " + "; ".join(problems))
+
 
 def _key(row: dict) -> tuple:
     return tuple((f, row[f]) for f in _KEY_FIELDS if f in row)
@@ -110,19 +141,67 @@ def compare(baseline: list, current: list, *, tol: float,
     return failures
 
 
+def _validate_schema(args) -> None:
+    """--validate-schema: structural checks, no baseline comparison.
+
+    Validates every given BENCH rows file (missing op/mode/backend is a
+    named failure) and, with ``--summary``, a telemetry summary.json
+    against repro.obs.sinks.SUMMARY_SCHEMA.
+    """
+    checked = 0
+    for path in (args.baseline, args.current):
+        if not path:
+            continue
+        with open(path) as f:
+            validate_bench_rows(json.load(f))
+        print(f"[check_regression] schema OK: {path}")
+        checked += 1
+    if args.summary:
+        import os
+        sys.path.insert(0, os.path.join(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))), "src"))
+        from repro.obs import validate_summary
+
+        with open(args.summary) as f:
+            validate_summary(json.load(f))
+        print(f"[check_regression] schema OK: {args.summary}")
+        checked += 1
+    if not checked:
+        raise SystemExit("--validate-schema needs --baseline, --current "
+                         "and/or --summary")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline", required=True)
-    ap.add_argument("--current", required=True)
+    ap.add_argument("--baseline", default=None)
+    ap.add_argument("--current", default=None)
     ap.add_argument("--tol", type=float, default=0.10,
                     help="allowed fractional drop before failing (0.10)")
     ap.add_argument("--strict-timing", action="store_true",
                     help="also gate on jnp/pallas wall-clock speedups")
+    ap.add_argument("--validate-schema", action="store_true",
+                    help="only validate file schemas (BENCH rows must "
+                         "carry op/mode/backend; --summary validates a "
+                         "telemetry summary.json), no ratio comparison")
+    ap.add_argument("--summary", default=None, metavar="SUMMARY.json",
+                    help="with --validate-schema: a launch --metrics-out "
+                         "summary to validate")
     args = ap.parse_args()
+    if args.validate_schema:
+        _validate_schema(args)
+        return
+    if not args.baseline or not args.current:
+        ap.error("--baseline and --current are required "
+                 "(unless --validate-schema)")
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.current) as f:
         current = json.load(f)
+    for name, rows in (("baseline", baseline), ("current", current)):
+        try:
+            validate_bench_rows(rows)
+        except BenchSchemaError as e:
+            raise SystemExit(f"{name} {e}")
     failures = compare(baseline, current, tol=args.tol,
                        strict_timing=args.strict_timing)
     if failures:

@@ -92,6 +92,8 @@ def _child(steps: int) -> dict:
     return {
         "bench": "mesh2d",
         "op": "dp2d_step",
+        "mode": "jnp",
+        "backend": "cpu",
         "model": "kgat",
         "mesh": MESH_2D,
         "n_nodes": cfg.n_nodes,

@@ -56,6 +56,9 @@ def run(steps: int = 40) -> list:
              / max(hot.rows_transferred_per_step, 1.0))
     row = {
         "bench": "minibatch",
+        "op": "sampled_step",
+        "mode": "jnp",
+        "backend": "cpu",
         "model": "kgat",
         "n_nodes": ds.graph.n_nodes,
         "n_edges": int(np.asarray(ds.graph.src).shape[0]),
@@ -74,6 +77,7 @@ def run(steps: int = 40) -> list:
         "hot_tier_bytes": int(hot.store_device_bytes),
         "table_bytes": int(hot.table_bytes),
         "step_ms": round(hot.step_ms, 2),
+        "step_time_p99_ms": round(hot.step_ms_p99, 2),
         "loss_first": round(float(np.mean(hot.losses[:10])), 4),
         "loss_last": round(float(np.mean(hot.losses[-10:])), 4),
     }

@@ -63,7 +63,8 @@ def main() -> None:
         # partial run (--only kernels / --only serve) refreshes its own
         # rows without dropping the other job's — dropping them would
         # read as a coverage regression at the nightly gate.
-        from .check_regression import _key
+        from .check_regression import _key, validate_bench_rows
+        validate_bench_rows(gated_rows)  # fail the producer, not the gate
         path = os.path.join(repo_root, "BENCH_kernels.json")
         merged = {}
         if os.path.exists(path):
@@ -88,6 +89,13 @@ def main() -> None:
             print(f"{name}:{tag},{us:.0f},{derived}")
     with open(os.path.join(args.out, "summary.json"), "w") as f:
         json.dump(summary, f, indent=1)
+    # registry snapshot of everything the benches incremented (tiering
+    # counters, step-time reservoirs, ...) — "summary.json" above is the
+    # per-table rows, so the telemetry snapshot gets its own name
+    from repro.obs import write_summary
+    write_summary(args.out, {"kind": "bench", "quick": bool(args.quick),
+                             "only": args.only},
+                  filename="obs_summary.json")
     print("[bench] wrote", args.out)
 
 

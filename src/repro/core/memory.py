@@ -17,7 +17,8 @@ from typing import Sequence
 
 from .quant import act_bytes
 
-__all__ = ["activation_bytes_report", "traced_activation_report"]
+__all__ = ["activation_bytes_report", "traced_activation_report",
+           "publish_activation_report"]
 
 
 def _mask_bytes(shape: tuple[int, ...]) -> int:
@@ -75,3 +76,24 @@ def traced_activation_report(fn, *args, schedule=None, key=None,
     with ctx:
         jax.eval_shape(fn, *args)
     return activation_bytes_report(ctx.records)
+
+
+def publish_activation_report(report: dict[str, float], registry=None,
+                              *, prefix: str = "act") -> None:
+    """Mirror an activation-bytes report into the metrics registry.
+
+    Per-scope rows become ``act/bytes{scope=...}`` gauges; the three
+    aggregates become ``act/total_bytes`` / ``act/total_fp32_bytes`` /
+    ``act/compression_ratio`` — the live activation timeline the run
+    summary carries (and the schema check in benchmarks reads). The obs
+    import is local so this module stays free of the telemetry layer
+    unless publishing is actually requested.
+    """
+    from repro.obs import get_registry
+
+    reg = registry if registry is not None else get_registry()
+    for scope, b in report.items():
+        if scope in ("total_bytes", "total_fp32_bytes", "compression_ratio"):
+            reg.gauge(f"{prefix}/{scope}").set(float(b))
+        else:
+            reg.gauge(f"{prefix}/bytes", scope=scope).set(float(b))

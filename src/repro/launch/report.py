@@ -48,6 +48,29 @@ def roofline_table(recs: dict, mesh: str) -> list[str]:
     return lines
 
 
+def metrics_table(summary: dict) -> list[str]:
+    """Render a run's ``summary.json`` (repro.obs.sinks) as markdown.
+
+    Counters and gauges get one row each; histograms render their
+    count and p50/p95/p99 — the table EXPERIMENTS.md embeds next to the
+    roofline numbers for telemetry-bearing runs.
+    """
+    run = summary.get("run", {})
+    ident = " ".join(f"{k}={v}" for k, v in sorted(run.items())
+                     if v is not None)
+    lines = [f"run: `{ident}`" if ident else "run: `?`", "",
+             "| metric | type | value | p50 | p95 | p99 |",
+             "|---|---|---|---|---|---|"]
+    for k, v in sorted(summary.get("counters", {}).items()):
+        lines.append(f"| {k} | counter | {v:g} | - | - | - |")
+    for k, v in sorted(summary.get("gauges", {}).items()):
+        lines.append(f"| {k} | gauge | {v:g} | - | - | - |")
+    for k, h in sorted(summary.get("histograms", {}).items()):
+        lines.append(f"| {k} | histogram | n={h['count']} | "
+                     f"{h['p50']:.3g} | {h['p95']:.3g} | {h['p99']:.3g} |")
+    return lines
+
+
 def dryrun_table(recs: dict) -> list[str]:
     lines = [
         "| arch | shape | mesh | compile | peak GB/dev | arg GB | status |",
@@ -70,6 +93,9 @@ def main() -> None:
     ap.add_argument("--baseline", default="artifacts/dryrun")
     ap.add_argument("--optimized", default="artifacts/dryrun_opt")
     ap.add_argument("--out", default="artifacts/report.md")
+    ap.add_argument("--metrics", default=None, metavar="SUMMARY.json",
+                    help="also render a telemetry summary.json "
+                         "(launch --metrics-out) as a metrics table")
     args = ap.parse_args()
     base = load_dir(args.baseline)
     opt = load_dir(args.optimized)
@@ -82,6 +108,13 @@ def main() -> None:
     parts += roofline_table(opt, "2x16x16")
     parts.append("\n## Baseline (paper-faithful, pre-§Perf) single-pod\n")
     parts += roofline_table(base, "16x16")
+    if args.metrics:
+        from repro.obs import validate_summary
+
+        summary = json.load(open(args.metrics))
+        validate_summary(summary)
+        parts.append("\n## Run telemetry\n")
+        parts += metrics_table(summary)
     with open(args.out, "w") as f:
         f.write("\n".join(parts) + "\n")
     print("wrote", args.out, f"({len(opt)} optimized, {len(base)} baseline "

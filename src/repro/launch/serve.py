@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.configs import ARCHS, get
 from repro.configs.smoke import reduced
+from repro.obs import get_tracer, log, write_summary
 
 
 def serve_lm(arch, args) -> None:
@@ -166,8 +167,17 @@ def main() -> None:
                     help="top-K size for KGNN retrieval")
     ap.add_argument("--train-steps", type=int, default=30,
                     help="quick BPR steps before the serving rollout")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Chrome-trace/Perfetto JSON of the host "
+                         "spans (serve/batch drains etc.)")
+    ap.add_argument("--metrics-out", default=None, metavar="DIR",
+                    help="write the schema-validated summary.json registry "
+                         "snapshot (serve/latency_ms, queue depth, ...) "
+                         "under DIR")
     args = ap.parse_args()
     arch = get(args.arch)
+    if args.trace:
+        get_tracer().enable()
     if arch.family in ("lm", "moe_lm"):
         serve_lm(arch, args)
     elif arch.family == "recsys":
@@ -177,6 +187,14 @@ def main() -> None:
     else:
         raise SystemExit(f"{arch.family} has no serve path "
                          "(GNNs are training workloads)")
+    run = {"kind": "serve", "arch": args.arch, "family": arch.family,
+           "requests": args.requests, "bits": args.bits}
+    if args.trace:
+        log(f"[serve] trace written to "
+            f"{get_tracer().save(args.trace, run=run)}")
+    if args.metrics_out:
+        log(f"[serve] metrics summary written to "
+            f"{write_summary(args.metrics_out, run)}")
 
 
 if __name__ == "__main__":

@@ -51,6 +51,7 @@ the current layout.
 from __future__ import annotations
 
 import argparse
+import itertools
 import os
 import tempfile
 
@@ -58,6 +59,7 @@ import jax
 
 from repro.configs import ARCHS, get
 from repro.core.policy import schedule_from_cli, schedule_label
+from repro.obs import StepLogWriter, get_tracer, log, write_summary
 from repro.training.optimizer import adam
 from repro.training.step import make_train_step, step_metadata
 from repro.training.trainer import Trainer, TrainerConfig
@@ -97,9 +99,9 @@ def _dp_train_step(step, mesh_spec, args, opt, root_key, schedule):
     if "model" in mesh_spec.names:
         tables = (f", row-sharded [{step.dp_spec.placement_str()}] over "
                   f"model={mesh_spec.extent('model')}")
-    print(f"[train] data-parallel {step.arch}: mesh {mesh_spec}, "
-          f"allreduce={args.allreduce}, "
-          f"edges/shard≤{part.e_cap}, halo/shard≤{part.h_cap}{tables}")
+    log(f"[train] data-parallel {step.arch}: mesh {mesh_spec}, "
+        f"allreduce={args.allreduce}, "
+        f"edges/shard≤{part.e_cap}, halo/shard≤{part.h_cap}{tables}")
     return train_step, part, mesh
 
 
@@ -115,15 +117,15 @@ def _run_sampled(arch, args, schedule, schedule_spec) -> None:
         raise SystemExit(f"error: {e}")
     kwargs = {"n_layers": len(fanouts)} if arch.family == "kgnn" else {}
     step = build_step(arch, schedule=schedule, **kwargs)
-    print(f"[train] sampled {args.arch} ({arch.family}) "
-          f"fanouts={fanouts} hot_frac={args.hot_frac} "
-          f"schedule={schedule_spec}")
+    log(f"[train] sampled {args.arch} ({arch.family}) "
+        f"fanouts={fanouts} hot_frac={args.hot_frac} "
+        f"schedule={schedule_spec}")
     try:
         report, _, store = tiering.run_sampled_training(
             step, fanouts=fanouts, steps=args.steps,
             batch_size=args.batch, hot_frac=args.hot_frac,
             schedule=schedule, root_key=jax.random.PRNGKey(1),
-            init_key=jax.random.PRNGKey(0), log_fn=print)
+            init_key=jax.random.PRNGKey(0), log_fn=log)
     except ValueError as e:
         raise SystemExit(f"error: {e}")
     print(f"[train] done; loss {report.losses[0]:.4f} -> "
@@ -161,6 +163,14 @@ def main() -> None:
                          "resident (frequency-ranked hot tier)")
     ap.add_argument("--batch", type=int, default=256,
                     help="--sample: BPR batch size per sampled step")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Chrome-trace/Perfetto JSON of the run's "
+                         "host spans (train/step/... nesting; on TPU also "
+                         "brackets StepTraceAnnotation)")
+    ap.add_argument("--metrics-out", default=None, metavar="DIR",
+                    help="write steps.jsonl (per-step timeline) and the "
+                         "schema-validated summary.json registry snapshot "
+                         "under DIR")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--reshard-from", default=None, metavar="DIR",
                     help="restore this checkpoint dir IGNORING its mesh "
@@ -184,8 +194,16 @@ def main() -> None:
 
     from repro.models.registry import build_step
 
+    if args.trace:
+        get_tracer().enable()
+    run = {"kind": "train", "arch": args.arch, "family": arch.family,
+           "schedule": schedule_spec, "steps": args.steps,
+           "mesh": str(mesh_spec) if mesh_spec is not None else None,
+           "sample": args.sample}
+
     if args.sample:
         _run_sampled(arch, args, schedule, schedule_spec)
+        _finish_telemetry(args, run)
         return
     step = build_step(arch, schedule=schedule)
     opt = adam(step.lr)
@@ -228,9 +246,9 @@ def main() -> None:
         state = jax.tree_util.tree_map(np.asarray, state)
         if n_model is not None:
             state = dp.pad_row_sharded(state, step.dp_spec, part, n_model)
-        print(f"[train] resharded checkpoint step {rstep} from "
-              f"{args.reshard_from} onto mesh "
-              f"{mesh_spec if mesh_spec is not None else '1 device'}")
+        log(f"[train] resharded checkpoint step {rstep} from "
+            f"{args.reshard_from} onto mesh "
+            f"{mesh_spec if mesh_spec is not None else '1 device'}")
     else:
         if n_model is not None:
             from repro.training import data_parallel as dp
@@ -239,21 +257,63 @@ def main() -> None:
         state = (params, opt.init(params))
 
     n = sum(x.size for x in jax.tree_util.tree_leaves(params))
-    print(f"[train] {args.arch} ({arch.family}) {n/1e6:.2f}M params "
-          f"schedule={schedule_spec}")
+    log(f"[train] {args.arch} ({arch.family}) {n/1e6:.2f}M params "
+        f"schedule={schedule_spec}")
+    data_iter = step.batches()
+    step_writer = None
+    if args.metrics_out:
+        step_writer = StepLogWriter(os.path.join(args.metrics_out,
+                                                 "steps.jsonl"))
+        if mesh_spec is None:
+            # Table-5 pricing of THIS run's loss trace: peek the first
+            # batch, price the residuals the compressed ops would save
+            # (eval_shape — no FLOPs), publish as act/* gauges, and stamp
+            # the total onto every step line so steps.jsonl doubles as
+            # the activation-bytes timeline. Mesh runs skip it: per-shard
+            # residual shapes live inside the shard_map body.
+            from repro.core.memory import (publish_activation_report,
+                                           traced_activation_report)
+
+            first = next(data_iter)
+            data_iter = itertools.chain([first], data_iter)
+            act = traced_activation_report(step.loss, params, first,
+                                           schedule=schedule, key=root)
+            publish_activation_report(act)
+            step_writer.extras["act_total_bytes"] = act["total_bytes"]
+            log(f"[train] activation footprint "
+                f"{act['total_bytes']/2**20:.2f} MiB "
+                f"({act['compression_ratio']:.1f}x vs fp32)")
+    n_edges = (int(step.dp_spec.graph.src.shape[0])
+               if step.dp_spec is not None else None)
     cfg = TrainerConfig(
         total_steps=args.steps,
         ckpt_dir=args.ckpt or tempfile.mkdtemp(prefix="repro_ckpt_"),
         ckpt_every=max(args.steps // 4, 10), log_every=max(args.steps // 8, 5))
-    trainer = Trainer(train_step, state, step.batches(), cfg,
+    trainer = Trainer(train_step, state, data_iter, cfg,
                       ckpt_meta=step_metadata(step, schedule_spec,
                                               mesh_spec=mesh_spec,
-                                              placement=placement)
+                                              placement=placement),
+                      step_writer=step_writer, items_per_step=n_edges
                       ).restore_if_available()
-    trainer.run()
+    try:
+        trainer.run()
+    finally:
+        if step_writer is not None:
+            step_writer.close()
+    _finish_telemetry(args, run)
     losses = [h["loss"] for h in trainer.history]
     print(f"[train] done; loss {losses[0]:.4f} -> {losses[-1]:.4f}"
           if losses else "[train] done")
+
+
+def _finish_telemetry(args, run: dict) -> None:
+    """End-of-run artifacts: Perfetto trace and/or summary snapshot."""
+    if args.trace:
+        path = get_tracer().save(args.trace, run=run)
+        log(f"[train] trace written to {path}")
+    if args.metrics_out:
+        path = write_summary(args.metrics_out, run)
+        log(f"[train] metrics summary written to {path}")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,7 @@ single-shard fast path when ``item_shards == 1``.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import queue
 import threading
 import time
@@ -30,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quant import QTensor
+from repro.obs import get_registry, span
 
 from .scorer import merge_topk, topk_scores
 from .store import QuantizedEmbeddingStore
@@ -78,10 +80,13 @@ class ServingEngine:
               per-iteration drain limit.
     """
 
+    _SEQ = itertools.count()
+
     def __init__(self, store: QuantizedEmbeddingStore, *, k: int = 20,
                  exclude=None, buckets=(1, 4, 16, 64),
                  backend: str = "pallas", block_i: int = 1024,
-                 item_shards: int = 1, max_queue: int = 1024):
+                 item_shards: int = 1, max_queue: int = 1024,
+                 lat_capacity: int = 4096, registry=None):
         self.store = store
         self.k = k
         self.buckets = tuple(sorted(buckets))
@@ -95,7 +100,16 @@ class ServingEngine:
                    for s in self._shards])[:-1]
         self._queue: queue.Queue = queue.Queue(maxsize=max_queue)
         self._thread: threading.Thread | None = None
-        self._lat_ms: list[float] = []
+        # latency lives on a bounded reservoir, not an unbounded list — a
+        # long-lived engine's memory no longer grows with request count
+        # (percentiles stay exact up to lat_capacity, sampled past it)
+        reg = registry if registry is not None else get_registry()
+        label = f"engine{next(self._SEQ)}"
+        self._m_lat = reg.histogram("serve/latency_ms", engine=label,
+                                    capacity=lat_capacity)
+        self._m_queue = reg.gauge("serve/queue_depth", engine=label)
+        self._m_requests = reg.counter("serve/requests", engine=label)
+        self._m_batches = reg.counter("serve/batches", engine=label)
         self._n_batches = 0
         self._t_first = self._t_last = None
 
@@ -153,6 +167,7 @@ class ServingEngine:
         if self._t_first is None:
             self._t_first = now          # serving window opens at first submit
         self._queue.put((int(user_id), now, fut))
+        self._m_queue.set(float(self._queue.qsize()))
         return fut
 
     def _serve_loop(self) -> None:
@@ -191,12 +206,16 @@ class ServingEngine:
 
     def _drain_batch(self, batch) -> None:
         ids = np.array([r[0] for r in batch], np.int32)
-        vals, idx = self.score_batch(ids)
+        with span("serve/batch", n=len(batch)):
+            vals, idx = self.score_batch(ids)
         now = time.perf_counter()
         self._n_batches += 1
+        self._m_batches.inc()
         self._t_last = now
+        self._m_queue.set(float(self._queue.qsize()))
         for j, (_, t0, fut) in enumerate(batch):
-            self._lat_ms.append((now - t0) * 1e3)
+            self._m_lat.observe((now - t0) * 1e3)
+            self._m_requests.inc()
             fut.set_result((vals[j], idx[j]))
 
     def __enter__(self) -> "ServingEngine":
@@ -210,12 +229,12 @@ class ServingEngine:
         self._thread = None
 
     def stats(self) -> EngineStats:
-        lat = np.sort(np.asarray(self._lat_ms))
-        n = len(lat)
-        span = max((self._t_last or 0) - (self._t_first or 0), 1e-9)
+        h = self._m_lat.snapshot()
+        n = int(self._m_requests.value)
+        window = max((self._t_last or 0) - (self._t_first or 0), 1e-9)
         return EngineStats(
             n_requests=n,
-            qps=n / span if n else 0.0,
-            p50_ms=float(lat[n // 2]) if n else 0.0,
-            p99_ms=float(lat[min(int(n * 0.99), n - 1)]) if n else 0.0,
+            qps=n / window if n else 0.0,
+            p50_ms=h["p50"] if n else 0.0,
+            p99_ms=h["p99"] if n else 0.0,
             n_batches=self._n_batches)

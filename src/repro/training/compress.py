@@ -35,11 +35,63 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["all_reduce_grads", "compressed_psum_mean", "psum_mean"]
+__all__ = ["all_reduce_grads", "compressed_psum_mean", "psum_mean",
+           "allreduce_byte_report"]
 
 
 def _axes(axis_name) -> tuple:
     return (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+
+
+def _reduce_groups(grads, axes: tuple, placement: dict | None) -> dict:
+    """``reduced-axes tuple -> top-level names`` — the same grouping
+    ``all_reduce_grads`` reduces by (placement skips the sharded axis)."""
+    if not placement:
+        return {axes: sorted(grads) if isinstance(grads, dict) else None}
+    groups: dict = {}
+    for name in grads:
+        r_axes = tuple(a for a in axes if a != placement.get(name))
+        groups.setdefault(r_axes, []).append(name)
+    return groups
+
+
+def allreduce_byte_report(grads, axis_name, *, placement: dict | None = None,
+                          compressed: bool = True) -> list[dict]:
+    """Analytic per-step wire bytes of :func:`all_reduce_grads`.
+
+    Static accounting over leaf shapes (no tracing): the INT8 path ships
+    one byte per element plus a 4-byte fp32 scale per leaf (the agreed
+    per-tensor scale); the fp32 baseline ships 4 bytes per element.
+    Bytes are the per-device reduce *payload* — one full traversal of
+    the group's tree — not a fabric/ring model (that lives in
+    ``launch/roofline.py``). Groups mirror ``all_reduce_grads``: a
+    row-sharded table skips its placement axis, so on a 2D mesh its
+    bytes report under ``axes="data"`` while replicated params report
+    under ``axes="data+model"``. Feeds the ``allreduce/*`` registry
+    series (DESIGN.md §13).
+    """
+    axes = _axes(axis_name)
+    if placement and not isinstance(grads, dict):
+        raise TypeError(
+            "allreduce_byte_report placement= requires a dict of "
+            f"top-level param subtrees, got {type(grads).__name__}")
+    wire = "int8" if compressed else "fp32"
+    out = []
+    for r_axes, names in sorted(_reduce_groups(grads, axes,
+                                               placement).items()):
+        sub = grads if names is None else {n: grads[n] for n in names}
+        leaves = jax.tree_util.tree_leaves(sub)
+        n_elems = sum(int(x.size) for x in leaves)
+        if not r_axes:
+            nbytes = 0      # sharded over every reduced axis: no wire hop
+        elif compressed:
+            nbytes = n_elems + 4 * len(leaves)
+        else:
+            nbytes = 4 * n_elems
+        out.append({"axes": "+".join(r_axes) if r_axes else "none",
+                    "wire": wire, "bytes": int(nbytes),
+                    "params": names})
+    return out
 
 
 def _sr_quantize_int8(g: jax.Array, scale: jax.Array, key: jax.Array):

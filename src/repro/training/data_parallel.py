@@ -68,6 +68,7 @@ from repro.data.csr import EdgePartition, partition_edges, row_partition
 from repro.models.kgnn import Shard2DGraphView, ShardGraphView
 from repro.sharding.compat import P, shard_map
 from repro.sharding.mesh_spec import MeshSpec
+from repro.training.compress import allreduce_byte_report
 from repro.training.step import DPSpec, ModelStep
 
 __all__ = ["partition_graph", "dp_loss_and_grads", "make_dp_step",
@@ -412,8 +413,34 @@ def make_dp_step(step: ModelStep | DPSpec, part: EdgePartition, mesh, opt,
         axis = "data"
         model_axis = "model" if "model" in ms.names else None
 
+    # All-reduce byte telemetry: the reduce runs inside jit/shard_map, so
+    # it traces ONCE — per-step accounting must live out here. Shapes are
+    # static, so the per-step payload is analytic (allreduce_byte_report)
+    # and we price it lazily from the first state's params.
+    _byte_meters: list = []
+
+    def _init_byte_meters(params):
+        from repro.obs import get_registry
+
+        axes = (axis, model_axis) if model_axis is not None else axis
+        sharded = spec.row_sharded() if model_axis is not None else ()
+        placement = {n: model_axis for n in sharded} or None
+        reg = get_registry()
+        for row in allreduce_byte_report(params, axes, placement=placement,
+                                         compressed=compress_grads):
+            labels = dict(arch=spec.scope, axes=row["axes"],
+                          wire=row["wire"])
+            reg.gauge("allreduce/bytes_per_step", **labels) \
+                .set(float(row["bytes"]))
+            _byte_meters.append(
+                (reg.counter("allreduce/bytes", **labels), row["bytes"]))
+
     def train_step(state, batch, step_idx):
         check_no_sampled_dp(batch)
+        if not _byte_meters:
+            _init_byte_meters(state[0])
+        for ctr, nbytes in _byte_meters:
+            ctr.inc(nbytes)
         return _jit_step(state, batch, step_idx)
 
     @jax.jit

@@ -29,6 +29,7 @@ schedule — determinism is a property we test, not a hope.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from typing import Callable
 
@@ -37,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import act_context
+from repro.obs import get_registry, span
 from repro.training.step import ModelStep, enter_or_null
 from repro.training.optimizer import Optimizer, adam
 
@@ -75,12 +77,22 @@ class TieredEmbeddingStore:
     authoritative for hot rows (flushed back on ``refresh``/``flush``).
     All statistics count ROWS actually moved across the host-device
     boundary, including bucket padding and scatter-back — the honest
-    transfer cost the minibatch bench gates on.
+    transfer cost the minibatch bench gates on. They live as labeled
+    counters on the metrics registry (``tiering/*``, DESIGN.md §13);
+    the ``stats`` dict and ``hit_rate`` remain the public read API.
     """
+
+    # the registry label that keeps concurrent stores' series apart
+    _SEQ = itertools.count()
+
+    # the legacy ``stats`` dict keys, now registry counters
+    _STAT_KEYS = ("gathers", "rows_requested", "hot_hits",
+                  "rows_transferred", "refreshes", "patch_rows",
+                  "cold_rows")
 
     def __init__(self, table: np.ndarray, freq: np.ndarray | None = None, *,
                  hot_frac: float = 0.1, refresh_every: int = 0,
-                 lfu_decay: float = 0.5):
+                 lfu_decay: float = 0.5, registry=None):
         self._host = np.array(table, np.float32, copy=True)
         n, d = self._host.shape
         if not 0.0 <= hot_frac <= 1.0:
@@ -95,9 +107,25 @@ class TieredEmbeddingStore:
         self._hot_slot = np.full(n, -1, np.int64)
         self._hot = jnp.zeros((0, d), jnp.float32)
         self._rebuild_hot()
-        self.stats = {"gathers": 0, "rows_requested": 0, "hot_hits": 0,
-                      "rows_transferred": 0, "refreshes": 0,
-                      "patch_rows": 0}
+        # Registry-backed counters (DESIGN.md §13): ``tiering/<name>``
+        # labeled per store instance. ``rows_transferred`` counts rows
+        # including pow2 bucket padding (the honest boundary cost the
+        # bench gates on); ``cold_rows`` is the exact unpadded cold-miss
+        # count per boundary event (gather/apply_grads dedup first;
+        # patch re-fetches once per overlapping position) — the
+        # invariant tests/test_obs.py pins is
+        # rows_transferred == Σ next_pow2(per-event cold_rows).
+        self._registry = registry if registry is not None else get_registry()
+        label = f"tier{next(self._SEQ)}"
+        self._m = {k: self._registry.counter(f"tiering/{k}", store=label)
+                   for k in self._STAT_KEYS}
+
+    @property
+    def stats(self) -> dict:
+        """The legacy stats view (ints), derived from the registry
+        counters — same keys the pre-telemetry dict carried, plus
+        ``cold_rows``."""
+        return {k: int(c.value) for k, c in self._m.items()}
 
     # -- tier management ---------------------------------------------------
 
@@ -124,7 +152,7 @@ class TieredEmbeddingStore:
         self.flush()
         self._counts *= self.lfu_decay
         self._rebuild_hot()
-        self.stats["refreshes"] += 1
+        self._m["refreshes"].inc()
 
     # -- gather / scatter --------------------------------------------------
 
@@ -144,7 +172,8 @@ class TieredEmbeddingStore:
             out = out.at[jnp.asarray(tgt)].set(jnp.asarray(vals),
                                                mode="drop")
             if count:
-                self.stats["rows_transferred"] += bc
+                self._m["rows_transferred"].inc(bc)
+                self._m["cold_rows"].inc(len(cold))
         if len(hot):
             bh = _next_pow2(len(hot))
             tgt = np.full(bh, n_out, np.int64)
@@ -169,16 +198,16 @@ class TieredEmbeddingStore:
         rows = np.asarray(rows, np.int64)
         req = rows if requests is None else np.asarray(requests, np.int64)
         np.add.at(self._counts, req, 1.0)
-        self.stats["gathers"] += 1
-        self.stats["rows_requested"] += len(req)
-        self.stats["hot_hits"] += int((self._hot_slot[req] >= 0).sum())
+        self._m["gathers"].inc()
+        self._m["rows_requested"].inc(len(req))
+        self._m["hot_hits"].inc(int((self._hot_slot[req] >= 0).sum()))
         uniq, inv = np.unique(rows, return_inverse=True)
         bu = _next_pow2(len(uniq))
         ut = jnp.zeros((bu, self.dim), jnp.float32)
         ut = self._scatter_rows(ut, uniq, np.arange(len(uniq)), count=True)
         out = jnp.take(ut, jnp.asarray(inv), axis=0)
         if self.refresh_every and \
-                self.stats["gathers"] % self.refresh_every == 0:
+                int(self._m["gathers"].value) % self.refresh_every == 0:
             self.refresh()
         return out
 
@@ -191,7 +220,7 @@ class TieredEmbeddingStore:
         idx = np.nonzero(np.isin(rows, updated))[0]
         if not len(idx):
             return out
-        self.stats["patch_rows"] += len(idx)
+        self._m["patch_rows"].inc(len(idx))
         return self._scatter_rows(out, rows[idx], idx, count=True)
 
     def apply_grads(self, rows: np.ndarray, grads: jax.Array,
@@ -224,20 +253,21 @@ class TieredEmbeddingStore:
             src[: len(cold)] = cold
             d_host = np.asarray(delta[jnp.asarray(src)])[: len(cold)]
             self._host[uniq[cold]] += d_host
-            self.stats["rows_transferred"] += bc
+            self._m["rows_transferred"].inc(bc)
+            self._m["cold_rows"].inc(len(cold))
         return uniq
 
     # -- accounting --------------------------------------------------------
 
     @property
     def hit_rate(self) -> float:
-        req = self.stats["rows_requested"]
-        return self.stats["hot_hits"] / req if req else 0.0
+        req = self._m["rows_requested"].value
+        return self._m["hot_hits"].value / req if req else 0.0
 
     @property
     def rows_transferred_per_step(self) -> float:
-        g = self.stats["gathers"]
-        return self.stats["rows_transferred"] / g if g else 0.0
+        g = self._m["gathers"].value
+        return self._m["rows_transferred"].value / g if g else 0.0
 
     @property
     def device_bytes(self) -> int:
@@ -298,6 +328,7 @@ class SampledTrainReport:
     step_ms: float
     n_steps: int
     stats: dict
+    step_ms_p99: float = 0.0   # per-step wall-time tail (report-only)
 
 
 def run_sampled_training(step: ModelStep, *, fanouts: tuple[int, ...],
@@ -364,7 +395,9 @@ def run_sampled_training(step: ModelStep, *, fanouts: tuple[int, ...],
                                          root_key=root_key)
     build_layouts = getattr(schedule, "kernel", "jnp") == "pallas"
 
-    losses, peak_bytes = [], 0
+    losses, peak_bytes, step_ms = [], 0, []
+    hist = get_registry().histogram("train/step_ms", arch=step.arch,
+                                    mode="sampled")
     t0 = time.perf_counter()
     with MinibatchStream(ds, tuple(fanouts), batch_size=batch_size,
                          seed=seed, build_layouts=build_layouts,
@@ -372,14 +405,23 @@ def run_sampled_training(step: ModelStep, *, fanouts: tuple[int, ...],
         item = stream.next()
         rows = store.gather(item.input_nodes, item.requests)
         for t in range(steps):
-            state, g_rows, metrics = train_step(
-                state, rows, item.view, jnp.asarray(t, jnp.int32))
-            nxt = stream.next()
-            pre = store.gather(nxt.input_nodes,       # overlaps the step
-                               nxt.requests)
-            updated = store.apply_grads(item.input_nodes, g_rows, lr)
-            pre = store.patch(pre, nxt.input_nodes, updated)
-            losses.append(float(metrics["loss"]))
+            ts = time.perf_counter()
+            with span("train/step", step=t):
+                with span("train/step/dispatch"):
+                    state, g_rows, metrics = train_step(
+                        state, rows, item.view, jnp.asarray(t, jnp.int32))
+                nxt = stream.next()
+                with span("train/step/gather"):  # overlaps the step
+                    pre = store.gather(nxt.input_nodes, nxt.requests)
+                with span("train/step/scatter"):
+                    updated = store.apply_grads(item.input_nodes, g_rows,
+                                                lr)
+                with span("train/step/patch"):
+                    pre = store.patch(pre, nxt.input_nodes, updated)
+                losses.append(float(metrics["loss"]))
+            dt = (time.perf_counter() - ts) * 1e3
+            step_ms.append(dt)
+            hist.observe(dt)
             if measure_bytes:
                 peak_bytes = max(peak_bytes, live_device_bytes())
             if log_fn is not None and (t % 10 == 0 or t == steps - 1):
@@ -394,5 +436,6 @@ def run_sampled_training(step: ModelStep, *, fanouts: tuple[int, ...],
         peak_device_bytes=peak_bytes,
         store_device_bytes=store.device_bytes,
         table_bytes=store.table_bytes, step_ms=dt_ms, n_steps=steps,
-        stats=dict(store.stats))
+        stats=dict(store.stats),
+        step_ms_p99=float(np.percentile(step_ms, 99)) if step_ms else 0.0)
     return report, state[0], store

@@ -23,6 +23,8 @@ from typing import Callable, Iterator
 
 import jax
 
+from repro.obs import get_registry, log as obs_log, step_span, span
+
 from .checkpoint import CheckpointManager
 
 __all__ = ["TrainerConfig", "Trainer", "PrefetchIterator"]
@@ -105,7 +107,10 @@ class Trainer:
 
     def __init__(self, train_step: Callable, state, data_iter: Iterator,
                  cfg: TrainerConfig, *, eval_fn: Callable | None = None,
-                 log_fn: Callable = print, ckpt_meta: dict | None = None):
+                 log_fn: Callable | None = None,
+                 ckpt_meta: dict | None = None, step_writer=None,
+                 items_per_step: int | None = None,
+                 item_unit: str = "edges"):
         self.train_step = train_step
         self.state = state
         self.cfg = cfg
@@ -116,13 +121,27 @@ class Trainer:
         self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep,
                                       meta=ckpt_meta)
         self.eval_fn = eval_fn
-        self.log = log_fn
+        # progress lines go to stderr through the leveled obs log (stdout
+        # stays machine-parseable); callers may still inject their own
+        self.log = log_fn if log_fn is not None else obs_log
         self.step = 0
         self.history: list[dict] = []
         self._failures = 0
         self._step_ema: float | None = None
         # failure-injection hook for tests: fn(step) -> bool (raise?)
         self.failure_injector: Callable | None = None
+        # telemetry: per-step wall time (dispatch-side, same quantity the
+        # straggler EMA watches), loss at log points, throughput when the
+        # caller supplies the per-step work size (edges/tokens)
+        self.step_writer = step_writer
+        self.items_per_step = items_per_step
+        self.item_unit = item_unit
+        reg = get_registry()
+        self._m_steps = reg.counter("train/steps")
+        self._m_step_ms = reg.histogram("train/step_ms")
+        self._m_loss = reg.gauge("train/loss")
+        self._m_tput = (reg.gauge(f"train/{item_unit}_per_sec")
+                        if items_per_step else None)
 
     def restore_if_available(self):
         step, state = self.ckpt.restore(self.state)
@@ -139,7 +158,8 @@ class Trainer:
                  f"backend={jax.default_backend()}, "
                  f"start step {self.step}/{self.cfg.total_steps}")
         try:
-            return self._run()
+            with span("train"):
+                return self._run()
         finally:
             self.data.close()  # don't leak the prefetch producer thread
 
@@ -147,27 +167,44 @@ class Trainer:
         cfg = self.cfg
         while self.step < cfg.total_steps:
             try:
-                batch = self.data.next()
-                if self.failure_injector is not None and \
-                        self.failure_injector(self.step):
-                    raise RuntimeError(
-                        f"injected failure at step {self.step}")
-                t0 = time.perf_counter()
-                self.state, metrics = self.train_step(
-                    self.state, batch, self.step)
-                dt = time.perf_counter() - t0
+                with step_span("train/step", self.step):
+                    with span("train/step/data"):
+                        batch = self.data.next()
+                    if self.failure_injector is not None and \
+                            self.failure_injector(self.step):
+                        raise RuntimeError(
+                            f"injected failure at step {self.step}")
+                    t0 = time.perf_counter()
+                    with span("train/step/update"):
+                        self.state, metrics = self.train_step(
+                            self.state, batch, self.step)
+                    dt = time.perf_counter() - t0
                 self._step_ema = dt if self._step_ema is None else \
                     0.9 * self._step_ema + 0.1 * dt
+                self._m_steps.inc()
+                self._m_step_ms.observe(dt * 1e3)
+                if self._m_tput is not None and dt > 0:
+                    self._m_tput.set(self.items_per_step / dt)
                 # straggler telemetry: flag steps 3x slower than EMA
                 if dt > 3.0 * self._step_ema and self.step > 10:
                     self.log(f"[trainer] straggler step {self.step}: "
                              f"{dt:.3f}s vs ema {self._step_ema:.3f}s")
                 self.step += 1
                 self._failures = 0
+                record = None
+                if self.step_writer is not None:
+                    record = {"step": self.step,
+                              "wall_ms": round(dt * 1e3, 4)}
                 if self.step % cfg.log_every == 0:
                     m = {k: float(v) for k, v in metrics.items()}
                     self.history.append({"step": self.step, **m})
                     self.log(f"[trainer] step {self.step}: {m}")
+                    if "loss" in m:
+                        self._m_loss.set(m["loss"])
+                    if record is not None:
+                        record.update(m)
+                if record is not None:
+                    self.step_writer.write(record)
                 if self.step % cfg.ckpt_every == 0:
                     self.ckpt.save(self.step, self.state)
             except StopIteration:

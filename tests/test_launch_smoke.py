@@ -28,6 +28,8 @@ def _launch(*argv: str, expect_ok: bool = True, timeout: int = 600):
         env=env, capture_output=True, text=True, timeout=timeout, cwd=_REPO)
     if expect_ok:
         assert out.returncode == 0, (argv, out.stderr[-3000:])
+        # the result line is the stdout contract; progress lines now go
+        # to stderr through the leveled obs log
         assert "[train] done" in out.stdout, out.stdout[-2000:]
     return out
 
@@ -42,7 +44,7 @@ def test_train_two_steps(arch):
 def test_train_two_steps_data_parallel(arch):
     """--mesh data=2 is legal for every KG arch through make_dp_step."""
     out = _launch("--arch", arch, "--steps", "2", "--mesh", "data=2")
-    assert f"data-parallel {arch}: mesh data=2" in out.stdout
+    assert f"data-parallel {arch}: mesh data=2" in out.stdout + out.stderr
 
 
 @pytest.mark.parametrize("arch,family", [("fm", "recsys"),
@@ -66,7 +68,7 @@ def test_train_sampled_minibatch():
     out = _launch("--arch", "kgat", "--steps", "3",
                   "--sample", "fanout=5,4,3", "--batch", "16",
                   "--hot-frac", "0.1")
-    assert "sampled kgat" in out.stdout
+    assert "sampled kgat" in out.stdout + out.stderr
     assert "hit-rate" in out.stdout
 
 
@@ -86,4 +88,4 @@ def test_schedule_flag_still_routes():
     """--schedule spec reaches the ActContext path in the generic driver."""
     out = _launch("--arch", "kgat", "--steps", "2",
                   "--schedule", "first_layer_int8_rest_int2")
-    assert "schedule=first_layer_int8_rest_int2" in out.stdout
+    assert "schedule=first_layer_int8_rest_int2" in out.stdout + out.stderr
