@@ -21,6 +21,15 @@ Gating policy:
     >= 3.5x — both deterministic, derived from shapes) is
     higher-is-better and HARD-fails when it drops more than ``--tol``
     (default 10%) below baseline;
+  * serving-SLO latency: a row's ``p99_ms`` is compared LOWER-is-better
+    and HARD-fails when it rises more than ``--tol`` above baseline —
+    but only for rows measured as ``mode == "jnp"`` on ``backend ==
+    "cpu"`` (plain XLA-compiled host timing, the one serving number
+    that is stable run-to-run); pallas-interp and accelerator rows are
+    report-only, for the same reason interpret-mode speedups don't
+    gate. The sustained serving rows' ``qps_ratio`` (tier2 QPS over the
+    single-stage baseline engine, measured in the same process on the
+    same traffic) gates through the standard ``*_ratio`` rule;
   * jnp-vs-pallas timing speedups are derived and REPORTED for every
     ``<x>_jnp_us`` / ``<x>_pallas_interp_us`` pair (and for the roofline
     rows' explicit ``speedup_vs_jnp``) but only gate under
@@ -42,10 +51,12 @@ import sys
 
 # "k" keys the serving top-K rows (serve_bench.py), "bench" separates the
 # roofline rows from the microbenchmark rows for the same op, "mode"
-# keeps compiled and interpret measurements of one op as distinct rows;
-# absent fields are simply skipped, so legacy rows are unaffected
+# keeps compiled and interpret measurements of one op as distinct rows,
+# "config" separates the sustained-serving baseline/tier2 rows and "C"
+# the two-stage candidate-budget rows; absent fields are simply
+# skipped, so legacy rows are unaffected
 _KEY_FIELDS = ("bench", "op", "mode", "bits", "dim", "rows", "n",
-               "n_edges", "n_nodes", "model", "k")
+               "n_edges", "n_nodes", "model", "k", "config", "C")
 
 # Every BENCH record must carry these (identity fields — a row without
 # them can silently collide with or shadow another row under _key).
@@ -138,7 +149,31 @@ def compare(baseline: list, current: list, *, tol: float,
             else:
                 print(("  " if drop <= tol else "  (timing, not gated) ")
                       + line)
+        _check_p99(tag, brow, crow, tol=tol, failures=failures)
     return failures
+
+
+def _check_p99(tag: str, brow: dict, crow: dict, *, tol: float,
+               failures: list[str]) -> None:
+    """Lower-is-better p99 latency gate for stable-timing rows.
+
+    Only ``mode == "jnp"`` + ``backend == "cpu"`` rows gate (compiled
+    XLA host timing); everything else — pallas interpret (interpreter
+    wall-clock, not the kernel) and accelerator rows (runner-dependent)
+    — is report-only.
+    """
+    bval, cval = brow.get("p99_ms"), crow.get("p99_ms")
+    if not (isinstance(bval, (int, float)) and isinstance(cval, (int, float))
+            and bval > 0):
+        return
+    rise = cval / bval - 1.0
+    line = (f"{tag}: p99_ms {bval:.3f} -> {cval:.3f} "
+            f"({'+' if rise > 0 else '-'}{abs(rise) * 100:.1f}%)")
+    gated = crow.get("mode") == "jnp" and crow.get("backend") == "cpu"
+    if rise > tol and gated:
+        failures.append("REGRESSION " + line)
+    else:
+        print(("  " if rise <= tol else "  (p99, not gated) ") + line)
 
 
 def _validate_schema(args) -> None:

@@ -37,7 +37,8 @@ def main() -> None:
         "fig2": lambda: fig2_curves.run(steps=steps),
         "fig3": lambda: fig3_ratio.run(steps=max(steps * 3 // 4, 40)),
         "kernels": lambda: kernel_bench.run(),
-        "serve": lambda: serve_bench.run(requests=60 if args.quick else 200),
+        "serve": lambda: serve_bench.run(requests=60 if args.quick else 200,
+                                         quick=args.quick),
         "roofline": lambda: roofline_bench.run(quick=args.quick),
         "minibatch": lambda: minibatch_bench.run(
             steps=15 if args.quick else 40),

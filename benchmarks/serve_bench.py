@@ -1,4 +1,5 @@
-"""Serving-subsystem benchmark: store bytes, QPS/latency, fused parity.
+"""Serving-subsystem benchmark: store bytes, QPS/latency, fused parity,
+two-stage recall-vs-candidates, and a sustained zipfian SLO run.
 
 One row per store precision (fp32 / INT8 / INT4) on the standard
 synthetic KG benchmark graph (KGAT rollout, dim 32 × 4-layer concat
@@ -12,16 +13,45 @@ readout = 128-dim representations):
     time per batch, fused kernel vs jnp fallback (check_regression
     derives the speedup; report-only, interpret-mode timings are noise);
   * ``qps`` / ``p50_ms`` / ``p99_ms`` — micro-batching engine under a
-    burst of single-user requests;
+    burst of single-user requests. Percentiles are read from the
+    engine's bounded obs reservoir (``serve/latency_ms``) — the SAME
+    snapshot ``obs_summary.json`` persists, unrounded, so the BENCH row
+    and the telemetry summary agree to the last bit (each row also
+    carries ``engine_label`` naming its series there, and the values
+    are mirrored onto ``serve/bench_*`` gauges);
   * ``fused_jnp_bitexact`` — the fused/fallback parity contract,
     asserted (not just reported) while measuring;
   * ``stream_dense_max_diff`` — streaming evaluator vs the dense
     reference on the same store (exactness check, asserted <= 1e-6).
+
+Tier-2 rows (DESIGN.md §14):
+
+  * ``op=serve_two_stage`` — recall@k of two-stage retrieval (coarse
+    packed-domain scan keeping C·k candidates -> fp32 re-rank) against
+    the single-stage exact ranking of the SAME packed store, measured
+    on a large item table so the headline C=4 point dequantizes < 10%
+    of items. ``two_stage_recall_ratio`` (gated, asserted >= 0.99),
+    ``candidate_ratio`` (asserted <= 0.10), the full ``recall_curve``
+    over C, and the C = n/k anchor where indices must match EXACTLY.
+  * ``op=serve_sustained`` — closed-loop zipfian traffic for a fixed
+    wall-clock window against (a) the baseline single-stage unsharded
+    uncached engine and (b) the tier-2 engine (2 item shards +
+    two-stage C=4 + hot-user cache). The tier-2 row's ``qps_ratio``
+    (tier2/baseline, higher-is-better) is nightly-gated, and its
+    ``p99_ms`` is gated lower-is-better for mode=="jnp" cpu rows (see
+    check_regression.py). Exact row values are mirrored onto
+    ``serve/sustained_*`` gauges so ``obs_summary.json`` agrees <= 1e-6.
+
+Standalone sustained run:
+
+    PYTHONPATH=src python -m benchmarks.serve_bench \
+        --sustained --duration-s 10 --zipf-a 1.1
 """
 
 from __future__ import annotations
 
 import time
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -29,9 +59,11 @@ import numpy as np
 
 from repro.kernels import backend as kbackend
 from repro.models import kgnn
-from repro.serving import (ServingEngine, build_kgnn_store,
-                           padded_pos_lists, streaming_eval_dataset,
-                           topk_scores)
+from repro.obs import get_registry
+from repro.serving import (BackpressureError, QuantizedEmbeddingStore,
+                           ServingEngine, build_kgnn_store, padded_pos_lists,
+                           streaming_eval_dataset, topk_scores,
+                           two_stage_topk)
 from repro.training.metrics import recall_ndcg_at_k
 
 from .common import dataset, make_cfg
@@ -50,7 +82,14 @@ def _time_scorer(q, items, excl, backend, *, reps=3) -> float:
     return (time.perf_counter() - t0) / reps * 1e6   # us / batch
 
 
-def run(*, requests: int = 200, seed: int = 0) -> list[dict]:
+def _mirror(gauge_name: str, value: float, **labels) -> None:
+    """Pin a row value onto a gauge so obs_summary.json carries the
+    exact same number (the <=1e-6 agreement the tests check)."""
+    get_registry().gauge(gauge_name, **labels).set(float(value))
+
+
+def run(*, requests: int = 200, seed: int = 0, quick: bool = False
+        ) -> list[dict]:
     ds = dataset(seed=seed)
     cfg = make_cfg("kgat", ds)
     params = kgnn.init_params(jax.random.PRNGKey(seed), cfg)
@@ -99,9 +138,15 @@ def run(*, requests: int = 200, seed: int = 0) -> list[dict]:
                     for u in rng.integers(0, ds.n_users, requests)]
             for f in futs:
                 f.result(timeout=300)
+        # UNROUNDED, straight off the obs reservoir (EngineStats reads
+        # serve/latency_ms) — rounding here would break the bench-row /
+        # obs_summary.json single-source-of-truth agreement
         st = eng.stats()
-        row.update(qps=round(st.qps, 1), p50_ms=round(st.p50_ms, 3),
-                   p99_ms=round(st.p99_ms, 3))
+        row.update(qps=st.qps, p50_ms=st.p50_ms, p99_ms=st.p99_ms,
+                   engine_label=eng.label)
+        for metric in ("qps", "p50_ms", "p99_ms"):
+            _mirror(f"serve/bench_{metric}", row[metric],
+                    op="serve_topk", bits=str(row["bits"]))
 
         # streaming evaluator vs dense reference ON THE SAME STORE
         r_s, n_s = streaming_eval_dataset(store, ds, k=K, backend=backend)
@@ -117,6 +162,257 @@ def run(*, requests: int = 200, seed: int = 0) -> list[dict]:
         rows.append(row)
         print(f"[serve_bench] bits={row['bits']}: "
               f"bytes_ratio={row['store_bytes_ratio']} "
-              f"qps={row['qps']} p99={row['p99_ms']}ms "
+              f"qps={row['qps']:.1f} p99={row['p99_ms']:.3f}ms "
               f"stream|dense diff={diff:.1e}", flush=True)
+
+    rows.append(two_stage_row(seed=seed, quick=quick))
+    rows.extend(run_sustained(duration_s=2.0 if quick else 6.0,
+                              seed=seed, quick=quick))
     return rows
+
+
+# -- two-stage recall vs candidate budget ------------------------------------
+
+
+def two_stage_row(*, seed: int = 0, quick: bool = False) -> dict:
+    """Recall@K of two-stage retrieval vs the exact single-stage ranking
+    of the same packed store, over the candidate budget C.
+
+    The item table is sized so the headline C=4 point re-ranks < 10% of
+    items (i.e. >= 90% of the catalog is scanned packed-only); the
+    C = ceil(n/k) anchor must reproduce single-stage indices EXACTLY
+    (candidates = all items — only query-rounding-free fp32 re-rank
+    remains, same merge contract).
+    """
+    rng = np.random.default_rng(seed + 17)
+    n_items = 2048 if quick else 4096
+    n_q = 64
+    dim = 128
+    users = rng.normal(size=(n_q, dim)).astype(np.float32)
+    items = rng.normal(size=(n_items, dim)).astype(np.float32)
+    store = QuantizedEmbeddingStore.from_arrays(users, items, bits=8,
+                                                quantize_users=False)
+    q = store.user_vectors(jnp.arange(n_q))
+    v1, x1 = topk_scores(q, store.items, K, backend="jnp")
+    x1 = np.asarray(x1)
+
+    def _recall(x2) -> float:
+        """Set overlap with the exact top-K, averaged over queries."""
+        hits = (np.asarray(x2)[:, :, None] == x1[:, None, :]).any(-1)
+        return float(hits.mean())
+
+    curve = []
+    for c in (1, 2, 4, 8, 16):
+        _, x2 = two_stage_topk(q, store.items, K, c=c, backend="jnp")
+        m = min(c * K, n_items)
+        curve.append({"C": c, "recall_at_k": _recall(x2),
+                      "candidate_frac": m / n_items})
+
+    # exactness anchor: candidates == all items
+    c_all = -(-n_items // K)
+    _, x_all = two_stage_topk(q, store.items, K, c=c_all, backend="jnp")
+    anchor_exact = bool(np.array_equal(np.asarray(x_all), x1))
+    assert anchor_exact, "C=n/k two-stage must reproduce single-stage indices"
+
+    head = next(p for p in curve if p["C"] == 4)
+    ratio = head["recall_at_k"]          # single-stage recall of itself = 1
+    assert ratio >= 0.99, \
+        f"two-stage C=4 recall ratio {ratio:.4f} < 0.99"
+    assert head["candidate_frac"] <= 0.10, \
+        f"C=4 re-ranks {head['candidate_frac']:.1%} of items (> 10%)"
+
+    # scan cost: coarse+rerank vs single-stage, same jnp mode
+    def _t(fn, *, reps=3):
+        jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn())
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    row = {
+        "op": "serve_two_stage", "mode": "jnp", "backend": "cpu",
+        "bits": 8, "dim": dim, "k": K, "C": 4, "n": n_items,
+        "two_stage_recall_ratio": ratio,
+        "candidate_ratio": head["candidate_frac"],
+        "anchor_exact": anchor_exact,
+        "recall_curve": curve,
+        "scan_jnp_us": _t(lambda: topk_scores(
+            q, store.items, K, backend="jnp")),
+        "two_stage_jnp_us": _t(lambda: two_stage_topk(
+            q, store.items, K, c=4, backend="jnp")),
+    }
+    _mirror("serve/two_stage_recall_ratio", ratio, C="4")
+    _mirror("serve/two_stage_candidate_ratio", head["candidate_frac"], C="4")
+    print(f"[serve_bench] two-stage: C=4 recall_ratio={ratio:.4f} "
+          f"candidate_ratio={head['candidate_frac']:.3f} "
+          f"anchor_exact={anchor_exact} "
+          f"curve={[round(p['recall_at_k'], 3) for p in curve]}", flush=True)
+    return row
+
+
+# -- sustained zipfian SLO run -----------------------------------------------
+
+
+def _zipf_stream(n_users: int, n: int, *, a: float, seed: int) -> np.ndarray:
+    """n user ids drawn from a zipf(a) popularity law over a fixed
+    permutation of the user set (same seed -> same stream, so baseline
+    and tier-2 serve IDENTICAL traffic)."""
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n_users)
+    pmf = 1.0 / np.arange(1, n_users + 1) ** a
+    pmf /= pmf.sum()
+    return order[rng.choice(n_users, size=n, p=pmf)].astype(np.int32)
+
+
+def _drive_one(eng: ServingEngine, stream: np.ndarray, *,
+               duration_s: float, window: int) -> int:
+    """Closed-loop driver: keep <= ``window`` requests outstanding for
+    ``duration_s`` of wall clock (cycling the stream), then drain.
+
+    When the window fills, HALF of it is collected at once — waiting
+    for one future per submit would make the driver ping-pong with the
+    worker on every request and measure thread wakeup latency instead
+    of engine throughput."""
+    outstanding: deque = deque()
+    n = 0
+    t_end = time.perf_counter() + duration_s
+    while time.perf_counter() < t_end:
+        if len(outstanding) >= window:
+            for _ in range(window // 2):
+                outstanding.popleft().result(timeout=300)
+        try:
+            outstanding.append(eng.submit(int(stream[n % len(stream)])))
+            n += 1
+        except BackpressureError:      # bounded queue: drain some, go on
+            for _ in range(len(outstanding) // 2):
+                outstanding.popleft().result(timeout=300)
+    while outstanding:
+        outstanding.popleft().result(timeout=300)
+    return n
+
+
+def _drive(eng: ServingEngine, stream: np.ndarray, *, duration_s: float,
+           window: int = 1024, clients: int = 2) -> int:
+    """``clients`` concurrent closed-loop drivers over disjoint slices
+    of the stream. One python client thread saturates before the engine
+    does once cache hits make service times ~free — submission cost
+    would then cap measured QPS and understate a fast engine, so the
+    load is generated from several threads, like real traffic."""
+    from concurrent.futures import ThreadPoolExecutor
+    with ThreadPoolExecutor(max_workers=clients,
+                            thread_name_prefix="client") as pool:
+        futs = [pool.submit(_drive_one, eng, stream[i::clients],
+                            duration_s=duration_s, window=window // clients)
+                for i in range(clients)]
+        return sum(f.result() for f in futs)
+
+
+def run_sustained(*, duration_s: float = 6.0, zipf_a: float = 1.1,
+                  seed: int = 0, quick: bool = False) -> list[dict]:
+    """Sustained-QPS comparison under zipfian traffic: baseline
+    single-stage/unsharded/uncached engine vs the tier-2 engine
+    (2 item shards, two-stage C=4, hot-user cache). Both run the SAME
+    request stream for the same wall-clock window in jnp mode (CPU
+    timing of interpret-mode pallas measures the interpreter, not the
+    kernel — repo convention). Equal-recall is pinned separately by the
+    serve_two_stage row's >= 0.99 recall-ratio assert.
+
+    The store is a serving-scale synthetic catalog (the standard bench
+    graph's 300 items make a full fp32 scan so cheap that any retrieval
+    structure is pure overhead — the regime tier 2 targets is the one
+    where the scan is the cost). At this size the tier-2 engine
+    dequantizes < 10% of the catalog per miss and the zipf head lands
+    in the cache."""
+    rng = np.random.default_rng(seed + 23)
+    n_users = 1024 if quick else 2048
+    n_items = 4096 if quick else 8192
+    dim = 128
+    store = QuantizedEmbeddingStore.from_arrays(
+        rng.normal(size=(n_users, dim)).astype(np.float32),
+        rng.normal(size=(n_items, dim)).astype(np.float32),
+        bits=8, quantize_users=False)
+    exclude = None
+    stream = _zipf_stream(n_users, 4096, a=zipf_a, seed=seed + 31)
+
+    configs = {
+        "baseline": dict(),
+        "tier2": dict(item_shards=2, two_stage_c=4,
+                      cache_size=n_users // 4),
+    }
+    rows = []
+    for name, extra in configs.items():
+        with ServingEngine(store, k=K, exclude=exclude, backend="jnp",
+                           buckets=(1, 4, 16, 64), **extra) as eng:
+            eng.warmup()
+            _drive(eng, stream, duration_s=duration_s)
+        st = eng.stats()
+        row = {
+            "op": "serve_sustained", "config": name,
+            "mode": "jnp", "backend": "cpu", "bits": 8, "k": K,
+            "n": n_items, "duration_s": duration_s, "zipf_a": zipf_a,
+            "qps": st.qps, "p50_ms": st.p50_ms, "p99_ms": st.p99_ms,
+            "cache_hit_rate": st.cache_hit_rate,
+            "candidate_ratio": (
+                float(eng._m_cand.value) if extra.get("two_stage_c")
+                else 1.0),
+            "n_requests": st.n_requests,
+            "engine_label": eng.label,
+        }
+        if name == "tier2":
+            row["qps_ratio"] = row["qps"] / rows[0]["qps"]
+            # the acceptance bar is >= 1.5x (see committed BENCH rows,
+            # regression-gated); assert a looser floor here so a broken
+            # cache/drain path fails the bench itself without making it
+            # flake on a noisy runner
+            assert row["qps_ratio"] >= 1.2, \
+                f"tier-2 engine no faster than baseline " \
+                f"({row['qps_ratio']:.2f}x < 1.2x)"
+        for metric in ("qps", "p50_ms", "p99_ms", "cache_hit_rate",
+                       "candidate_ratio"):
+            _mirror(f"serve/sustained_{metric}", row[metric], config=name)
+        if "qps_ratio" in row:
+            _mirror("serve/sustained_qps_ratio", row["qps_ratio"],
+                    config=name)
+        rows.append(row)
+        print(f"[serve_bench] sustained/{name}: qps={row['qps']:.0f} "
+              f"p50={row['p50_ms']:.2f}ms p99={row['p99_ms']:.2f}ms "
+              f"cache={row['cache_hit_rate']:.0%} "
+              f"cand={row['candidate_ratio']:.2f}"
+              + (f" qps_ratio={row['qps_ratio']:.2f}x"
+                 if "qps_ratio" in row else ""), flush=True)
+    return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--sustained", action="store_true",
+                    help="run only the sustained zipfian SLO comparison")
+    ap.add_argument("--duration-s", type=float, default=6.0,
+                    help="wall-clock window per engine config")
+    ap.add_argument("--zipf-a", type=float, default=1.1,
+                    help="zipf exponent of the user popularity law")
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None, metavar="ROWS.json",
+                    help="also write the rows as JSON")
+    args = ap.parse_args()
+
+    if args.sustained:
+        rows = run_sustained(duration_s=args.duration_s, zipf_a=args.zipf_a,
+                             seed=args.seed, quick=args.quick)
+    else:
+        rows = run(requests=args.requests, seed=args.seed, quick=args.quick)
+    from .check_regression import validate_bench_rows
+    validate_bench_rows(rows)            # op/mode/backend schema, always
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"[serve_bench] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

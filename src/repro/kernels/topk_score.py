@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: fused dequantize + score + running top-K retrieval.
+"""Pallas TPU kernels: fused dequantize·score·running-top-K retrieval,
+plus the two-stage COARSE candidate scan over the packed code domain.
 
 Serving-side generalization of ``dequant_matmul.py``'s in-kernel
 shift+mask unpack: score a block of query vectors against a PACKED
@@ -35,6 +36,25 @@ production) rides in as padded index lists — (B, P) int32, pad = -1 —
 and is applied to candidate scores IN-KERNEL before the merge, which is
 exactly equivalent to the dense reference's ``where(train_mask, -inf)``
 without ever building a (B, I) mask.
+
+Coarse candidate scan (``fused_coarse_topm``): the two-stage retrieval
+path (serving/scorer.py:two_stage_topk) scans ALL items while staying in
+the packed integer-code domain — the per-item dequantize multiply-add is
+hoisted OUT of the (B × I) score computation into a per-row affine
+correction applied to the integer dot product:
+
+    true score  t_i = q · (c_i·s_i + z_i·1) = s_i (q·c_i) + z_i Σ_j q_j
+    coarse        ≈ qs·s_i (q8·c_i) + z_i Σ_j q_j
+
+with ``q8 = clip(round(q/qs), ±127)`` a symmetric INT8 query (``qs =
+max|q|/127`` per row) — the ONLY approximation is the query rounding,
+bounded by |coarse - true| ≤ (qs/2)·‖x̂_i‖₁ (DESIGN.md §14). Both
+``q8`` and the codes ride as integer-VALUED fp32, so every product and
+the d-length dot are exactly representable (|q8·c| ≤ 127·255·d < 2²⁴
+for d ≤ 512): the kernel and the jnp mirror agree to ZERO ulps, and the
+scan's HBM traffic is the packed bytes — no fp32 item row ever
+materializes. The merge machinery (running top-m, lossless tie order,
+exclusion before merge) is shared with the exact kernel above.
 """
 
 from __future__ import annotations
@@ -47,39 +67,33 @@ from jax.experimental import pallas as pl
 
 from . import autotune
 
-__all__ = ["fused_topk_scores"]
+__all__ = ["fused_topk_scores", "fused_coarse_topm"]
 
 _NEG_INF = float("-inf")  # plain float: a jnp scalar would be captured
 #                           as a kernel constant, which pallas_call rejects
 
 
-def _topk_kernel(q_ref, packed_ref, scale_ref, zero_ref, excl_ref,
-                 vals_ref, idx_ref, *, bits: int, dim: int, dp: int,
-                 cpb: int, k: int, block_i: int, n_items: int):
-    c = pl.program_id(0)
-    q = q_ref[...].astype(jnp.float32)          # (B, dim)
-    packed = packed_ref[...]                    # (block_i, dp)
-    # chunk-interleaved unpack (same layout as quant_pack.py): byte j of a
-    # row holds codes [j, dp + j, 2*dp + j, ...] in bits-wide fields
+def _unpack_codes(packed, *, bits: int, dim: int, cpb: int):
+    """Chunk-interleaved unpack (same layout as quant_pack.py): byte j of
+    a row holds codes [j, dp + j, 2*dp + j, ...] in bits-wide fields."""
     if cpb == 1:
-        codes = packed[:, :dim].astype(jnp.float32)
-    else:
-        mask = jnp.uint8(2**bits - 1)
-        chunks = [(packed >> jnp.uint8(kk * bits)) & mask
-                  for kk in range(cpb)]
-        codes = jnp.concatenate(chunks, axis=-1)[:, :dim].astype(jnp.float32)
-    xhat = codes * scale_ref[...] + zero_ref[...]   # (block_i, dim)
-    scores = jax.lax.dot_general(
-        q, xhat, dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)         # (B, block_i)
+        return packed[:, :dim].astype(jnp.float32)
+    mask = jnp.uint8(2**bits - 1)
+    chunks = [(packed >> jnp.uint8(kk * bits)) & mask
+              for kk in range(cpb)]
+    return jnp.concatenate(chunks, axis=-1)[:, :dim].astype(jnp.float32)
 
-    b = q.shape[0]
+
+def _mask_merge(c, scores, excl, vals_ref, idx_ref, *, k: int,
+                block_i: int, n_items: int):
+    """Shared tail of both kernels: mask ghosts + exclusions, then the
+    lossless running top-``k`` merge (tie-order argument above)."""
+    b = scores.shape[0]
     ids = c * block_i + jax.lax.broadcasted_iota(jnp.int32, (1, block_i), 1)
     ids = jnp.broadcast_to(ids, (b, block_i))       # (B, block_i) global ids
     # tail-chunk padding rows score as garbage — mask them out
     scores = jnp.where(ids < n_items, scores, _NEG_INF)
     # per-user exclusion lists: (B, P) global item ids, -1 = pad (never hits)
-    excl = excl_ref[...]
     hit = jnp.any(excl[:, :, None] == ids[:, None, :], axis=1)
     scores = jnp.where(hit, _NEG_INF, scores)
 
@@ -96,6 +110,39 @@ def _topk_kernel(q_ref, packed_ref, scale_ref, zero_ref, excl_ref,
         v, p = jax.lax.top_k(all_v, k)
         vals_ref[...] = v
         idx_ref[...] = jnp.take_along_axis(all_i, p, axis=1)
+
+
+def _topk_kernel(q_ref, packed_ref, scale_ref, zero_ref, excl_ref,
+                 vals_ref, idx_ref, *, bits: int, dim: int, dp: int,
+                 cpb: int, k: int, block_i: int, n_items: int):
+    c = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32)          # (B, dim)
+    codes = _unpack_codes(packed_ref[...], bits=bits, dim=dim, cpb=cpb)
+    xhat = codes * scale_ref[...] + zero_ref[...]   # (block_i, dim)
+    scores = jax.lax.dot_general(
+        q, xhat, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (B, block_i)
+    _mask_merge(c, scores, excl_ref[...], vals_ref, idx_ref, k=k,
+                block_i=block_i, n_items=n_items)
+
+
+def _coarse_kernel(q8_ref, qmeta_ref, packed_ref, scale_ref, zero_ref,
+                   excl_ref, vals_ref, idx_ref, *, bits: int, dim: int,
+                   dp: int, cpb: int, m: int, block_i: int, n_items: int):
+    """Coarse scan: integer dot + per-row affine correction — the item
+    rows are NEVER dequantized (module docstring has the math)."""
+    c = pl.program_id(0)
+    q8 = q8_ref[...]                            # (B, dim) int-valued fp32
+    codes = _unpack_codes(packed_ref[...], bits=bits, dim=dim, cpb=cpb)
+    dot = jax.lax.dot_general(
+        q8, codes, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (B, block_i), exact
+    qmeta = qmeta_ref[...]                          # (B, 2): [qs, Σq]
+    scale_t = jnp.transpose(scale_ref[...])         # (1, block_i)
+    zero_t = jnp.transpose(zero_ref[...])
+    scores = dot * (qmeta[:, 0:1] * scale_t) + qmeta[:, 1:2] * zero_t
+    _mask_merge(c, scores, excl_ref[...], vals_ref, idx_ref, k=m,
+                block_i=block_i, n_items=n_items)
 
 
 @functools.partial(jax.jit,
@@ -182,3 +229,88 @@ def fused_topk_scores(q: jax.Array, packed: jax.Array, scale: jax.Array,
     return _topk_call(q, packed, scale, zero, excl, bits=bits, dim=dim,
                       k=k, n_items=n_items, block_i=block_i,
                       interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "dim", "m", "n_items",
+                                    "block_i", "interpret"))
+def _coarse_call(q8: jax.Array, qmeta: jax.Array, packed: jax.Array,
+                 scale: jax.Array, zero: jax.Array, excl: jax.Array, *,
+                 bits: int, dim: int, m: int, n_items: int, block_i: int,
+                 interpret: bool):
+    rows, dp = packed.shape
+    assert rows == n_items, (rows, n_items)
+    cpb = 8 // bits
+    assert dp * cpb >= dim, f"packed dim mismatch: {dp}*{cpb} < {dim}"
+    block_i = max(min(block_i, rows), m)   # first chunk must seed m entries
+    grid_i = -(-rows // block_i)
+    pad_i = grid_i * block_i - rows
+    if pad_i:
+        packed = jnp.pad(packed, ((0, pad_i), (0, 0)))
+        scale = jnp.pad(scale, ((0, pad_i), (0, 0)))
+        zero = jnp.pad(zero, ((0, pad_i), (0, 0)))
+    b, _ = q8.shape
+    p = excl.shape[1]
+    kernel = functools.partial(
+        _coarse_kernel, bits=bits, dim=dim, dp=dp, cpb=cpb, m=m,
+        block_i=block_i, n_items=n_items)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(grid_i,),
+        in_specs=[
+            pl.BlockSpec((b, dim), lambda c: (0, 0)),
+            pl.BlockSpec((b, 2), lambda c: (0, 0)),
+            pl.BlockSpec((block_i, dp), lambda c: (c, 0)),
+            pl.BlockSpec((block_i, 1), lambda c: (c, 0)),
+            pl.BlockSpec((block_i, 1), lambda c: (c, 0)),
+            pl.BlockSpec((b, p), lambda c: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, m), lambda c: (0, 0)),
+            pl.BlockSpec((b, m), lambda c: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m), jnp.float32),
+            jax.ShapeDtypeStruct((b, m), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q8.astype(jnp.float32), qmeta.astype(jnp.float32), packed, scale,
+      zero, excl.astype(jnp.int32))
+    return vals, idx
+
+
+def fused_coarse_topm(q8: jax.Array, qmeta: jax.Array, packed: jax.Array,
+                      scale: jax.Array, zero: jax.Array, excl: jax.Array, *,
+                      bits: int, dim: int, m: int, n_items: int,
+                      block_i: int | None = None, interpret: bool = True):
+    """Top-``m`` CANDIDATES by coarse packed-domain score, with exclusions.
+
+    q8     : (B, dim) symmetric-INT8 query codes as integer-valued fp32
+             (``serving/scorer.py:quantize_query``)
+    qmeta  : (B, 2) fp32 — column 0 the query scale ``qs``, column 1 the
+             fp32 query row-sum ``Σ_j q_j``
+    packed/scale/zero/excl: as :func:`fused_topk_scores`
+    returns (coarse values (B, m) fp32, indices (B, m) int32); the merge
+    is lossless over the COARSE scores (same tie contract), and the jnp
+    mirror in serving/scorer.py agrees to zero ulps — every arithmetic
+    value is integer-valued fp32 until the final affine correction,
+    which both paths apply with the identical op sequence.
+    """
+    rows, _ = packed.shape
+    if block_i is None:
+        tuner = autotune.get()
+        measure = None
+        if tuner.sweep and not isinstance(q8, jax.core.Tracer):
+            def measure(params):
+                jax.block_until_ready(_coarse_call(
+                    q8, qmeta, packed, scale, zero, excl, bits=bits,
+                    dim=dim, m=m, n_items=n_items, interpret=interpret,
+                    **params))
+        block_i = tuner.pick(
+            "topk_coarse", shapes=(rows, dim, q8.shape[0]), bits=bits,
+            extra=f"m{m}",
+            candidates=[{"block_i": c} for c in (256, 512, 1024, 2048)],
+            measure=measure, default={"block_i": 1024})["block_i"]
+    return _coarse_call(q8, qmeta, packed, scale, zero, excl, bits=bits,
+                        dim=dim, m=m, n_items=n_items, block_i=block_i,
+                        interpret=interpret)

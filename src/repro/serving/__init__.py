@@ -1,4 +1,4 @@
-"""Quantized recommendation serving (DESIGN.md §8).
+"""Quantized recommendation serving (DESIGN.md §8, tier 2 §14).
 
 The training side of this repo compresses *activations*; serving
 compresses the *final representations* the recommender actually ships:
@@ -6,21 +6,33 @@ compresses the *final representations* the recommender actually ships:
   store.py   offline rollout -> packed ``QuantizedEmbeddingStore``
              (INT8/INT4 via the quant_pack kernel, fp32 escape hatch)
   scorer.py  chunked dequant·score·top-K — never builds (U, I); fused
-             Pallas kernel (kernels/topk_score.py) + jnp fallback
-  engine.py  micro-batching request engine: bounded queue, bucketed
-             padding (no retraces), QPS + latency percentiles
+             Pallas kernel (kernels/topk_score.py) + jnp fallback;
+             two-stage retrieval (packed-domain coarse scan -> fp32
+             re-rank of C·k survivors) and the deterministic
+             ``merge_topk`` shard-merge contract
+  engine.py  micro-batching request engine: bounded queue with named
+             backpressure, bucketed padding (no retraces), item-sharded
+             parallel scoring, hot-user result cache, incremental
+             refresh, QPS + latency percentiles
+  cache.py   version-stamped LRU of per-user results
+  refresh.py delta rollout of changed rows between store versions
   eval.py    streaming full-ranking Recall@K/NDCG@K over the scorer,
              exact-equivalent to training.metrics.recall_ndcg_at_k
 """
 
-from .engine import EngineStats, ServingEngine
+from .cache import ResultCache
+from .engine import BackpressureError, EngineStats, ServingEngine
 from .eval import streaming_eval_dataset, streaming_recall_ndcg
-from .scorer import merge_topk, topk_scores
+from .refresh import StoreDelta, apply_delta, store_delta
+from .scorer import (coarse_topm, merge_topk, quantize_query, topk_scores,
+                     two_stage_topk)
 from .store import QuantizedEmbeddingStore, build_kgnn_store, padded_pos_lists
 
 __all__ = [
     "QuantizedEmbeddingStore", "build_kgnn_store", "padded_pos_lists",
-    "topk_scores", "merge_topk",
-    "ServingEngine", "EngineStats",
+    "topk_scores", "merge_topk", "two_stage_topk", "coarse_topm",
+    "quantize_query",
+    "ServingEngine", "EngineStats", "BackpressureError",
+    "ResultCache", "StoreDelta", "store_delta", "apply_delta",
     "streaming_recall_ndcg", "streaming_eval_dataset",
 ]

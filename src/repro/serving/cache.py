@@ -1,0 +1,95 @@
+"""Hot-user result cache: version-stamped LRU over engine responses.
+
+Zipfian retrieval traffic concentrates on a small head of hot users; a
+recommendation for a user is a pure function of (user row, item table),
+so until a refresh changes either, the engine can replay the previous
+answer instead of re-scanning the store. The cache is a bounded LRU of
+``user_id -> (store_version, values, indices)``:
+
+  * entries are stamped with the store version that produced them, and
+    the engine invalidates EAGERLY at refresh time (`drop` for changed
+    user rows, `clear` when any item row changed) — a stale entry is
+    structurally unreachable, and the stamp makes the protocol auditable
+    (tests assert a served hit's stamp matches the live version);
+  * all mutation happens on the engine's single worker thread (lookups
+    during batch drain, invalidation during refresh application), so the
+    cache itself needs no lock; the hit/miss counters it feeds are
+    registry metrics, safe to read from any thread.
+
+Invalidation rules (DESIGN.md §14): a refresh that touches item rows
+invalidates EVERY entry (all rankings depend on the whole item table); a
+refresh that touches only user rows invalidates exactly those users.
+Unchanged users therefore keep serving identical, still-correct results
+across a user-delta refresh — the property the tier-2 tests pin.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.obs import get_registry
+
+__all__ = ["ResultCache"]
+
+
+class ResultCache:
+    """Bounded LRU of per-user top-K results (see module docstring)."""
+
+    def __init__(self, capacity: int, *, registry=None, label: str = "cache"):
+        if capacity < 1:
+            raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._od: OrderedDict[int, tuple] = OrderedDict()
+        reg = registry if registry is not None else get_registry()
+        self._m_hits = reg.counter("serve/cache_hits", engine=label)
+        self._m_misses = reg.counter("serve/cache_misses", engine=label)
+        self._m_size = reg.gauge("serve/cache_size", engine=label)
+        self._m_evict = reg.counter("serve/cache_evictions", engine=label)
+        self._m_inval = reg.counter("serve/cache_invalidations", engine=label)
+
+    def __len__(self) -> int:
+        return len(self._od)
+
+    def get(self, user_id: int):
+        """Hit -> (version, values, indices); miss -> None. Meters both."""
+        ent = self._od.get(int(user_id))
+        if ent is None:
+            self._m_misses.inc()
+            return None
+        self._od.move_to_end(int(user_id))
+        self._m_hits.inc()
+        return ent
+
+    def put(self, user_id: int, version: int, vals, idx) -> None:
+        uid = int(user_id)
+        self._od[uid] = (int(version), np.asarray(vals), np.asarray(idx))
+        self._od.move_to_end(uid)
+        while len(self._od) > self.capacity:
+            self._od.popitem(last=False)
+            self._m_evict.inc()
+        self._m_size.set(float(len(self._od)))
+
+    def drop(self, user_ids) -> int:
+        """Invalidate specific users (user-row delta); returns # dropped."""
+        n = 0
+        for uid in user_ids:
+            if self._od.pop(int(uid), None) is not None:
+                n += 1
+        self._m_inval.inc(n)
+        self._m_size.set(float(len(self._od)))
+        return n
+
+    def clear(self) -> int:
+        """Invalidate everything (item rows changed); returns # dropped."""
+        n = len(self._od)
+        self._od.clear()
+        self._m_inval.inc(n)
+        self._m_size.set(0.0)
+        return n
+
+    @property
+    def hit_rate(self) -> float:
+        h, m = self._m_hits.value, self._m_misses.value
+        return h / (h + m) if (h + m) else 0.0

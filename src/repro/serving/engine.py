@@ -12,10 +12,30 @@ scorer, pad rows are simply dropped on the way out. Per-request latency
 is measured submit→result; QPS over the serving window. ``warmup()``
 traces every bucket up front so p99 reflects steady state, not compile.
 
-Item shards: a store too big for one scorer call can be split into
-row-shards scored per call and merged host-side with
-``scorer.merge_topk`` (exact — same tie rule); the engine keeps the
-single-shard fast path when ``item_shards == 1``.
+Tier-2 serving features (DESIGN.md §14), all composable:
+
+  * **Two-stage retrieval** (``two_stage_c=C``): per shard, a coarse
+    scan in the packed code domain keeps ``C·k`` candidates and only
+    those are dequantized for the fp32 re-rank (scorer.two_stage_topk);
+    per-stage latency lands on ``serve/stage_ms{stage=coarse|rerank}``
+    reservoirs and the dequantized fraction on ``serve/candidate_frac``.
+  * **Item shards** (``item_shards=S``): the item table is row-split
+    and the shards scored CONCURRENTLY (thread pool; with
+    ``shard_devices=True`` each shard is placed on its own jax device
+    of a simulated/real mesh), then host-merged via ``merge_topk`` —
+    bit-identical to single-shard ranking (ordering contract there).
+  * **Hot-user cache** (``cache_size=N``): version-stamped LRU of
+    per-user results, looked up at batch-drain time (cache.py has the
+    invalidation rules).
+  * **Incremental refresh** (``refresh(new_store_or_delta)``): a delta
+    is applied on the worker thread BETWEEN batches — requests enqueued
+    before the refresh see the old store, after it the new one; nothing
+    is dropped and nothing is served from a torn store. Bumps the store
+    version, invalidates cache entries per the delta.
+  * **Backpressure** (``max_pending=N``): ``submit`` never blocks; a
+    full queue raises the named ``BackpressureError`` (and counts
+    ``serve/backpressure``) so the caller sheds load explicitly instead
+    of growing an unbounded queue.
 """
 
 from __future__ import annotations
@@ -25,18 +45,25 @@ import itertools
 import queue
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, ThreadPoolExecutor
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quant import QTensor
 from repro.obs import get_registry, span
 
-from .scorer import merge_topk, topk_scores
+from .cache import ResultCache
+from .refresh import StoreDelta, apply_delta, store_delta
+from .scorer import merge_topk, topk_scores, two_stage_topk
 from .store import QuantizedEmbeddingStore
 
-__all__ = ["ServingEngine", "EngineStats"]
+__all__ = ["ServingEngine", "EngineStats", "BackpressureError"]
+
+
+class BackpressureError(RuntimeError):
+    """The engine's bounded submit queue is full; shed or retry later."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,11 +73,14 @@ class EngineStats:
     p50_ms: float
     p99_ms: float
     n_batches: int
+    cache_hit_rate: float = 0.0
+    store_version: int = 0
 
     def __str__(self) -> str:
         return (f"{self.n_requests} req | {self.qps:.0f} QPS | "
                 f"p50 {self.p50_ms:.2f}ms p99 {self.p99_ms:.2f}ms | "
-                f"{self.n_batches} batches")
+                f"{self.n_batches} batches | "
+                f"cache {self.cache_hit_rate:.0%} | v{self.store_version}")
 
 
 def _shard_items(items, n_shards: int):
@@ -70,6 +100,10 @@ def _shard_items(items, n_shards: int):
     return [items[a:b] for a, b in zip(bounds[:-1], bounds[1:])]
 
 
+# queue message kinds
+_REQ, _REFRESH = "req", "refresh"
+
+
 class ServingEngine:
     """Bounded-queue micro-batching server over a packed store.
 
@@ -78,6 +112,17 @@ class ServingEngine:
               — excluded from every response for that user.
     buckets : ascending padded batch sizes; ``max(buckets)`` is also the
               per-iteration drain limit.
+    two_stage_c : candidate multiplier C for two-stage retrieval (None =
+              single-stage exact scan; requires a packed store).
+    item_shards : row-split the item table into S shards scored
+              concurrently and host-merged (bit-exact, see merge_topk).
+    shard_devices : place each shard on its own jax device when the
+              runtime exposes enough (simulated mesh or real); shards
+              then score genuinely in parallel rather than merely on
+              concurrent host threads.
+    cache_size : capacity of the hot-user result cache (0 = off).
+    max_pending : submit-queue bound; a full queue raises the named
+              ``BackpressureError`` instead of growing without bound.
     """
 
     _SEQ = itertools.count()
@@ -85,33 +130,75 @@ class ServingEngine:
     def __init__(self, store: QuantizedEmbeddingStore, *, k: int = 20,
                  exclude=None, buckets=(1, 4, 16, 64),
                  backend: str = "pallas", block_i: int = 1024,
-                 item_shards: int = 1, max_queue: int = 1024,
-                 lat_capacity: int = 4096, registry=None):
+                 item_shards: int = 1, two_stage_c: int | None = None,
+                 shard_devices: bool = False, cache_size: int = 0,
+                 max_pending: int = 1024, lat_capacity: int = 4096,
+                 registry=None):
+        if two_stage_c is not None:
+            if two_stage_c < 1:
+                raise ValueError(f"two_stage_c must be >= 1, "
+                                 f"got {two_stage_c}")
+            if not isinstance(store.items, QTensor):
+                raise ValueError(
+                    "two-stage retrieval needs a packed (INT8/INT4) item "
+                    "table; an fp32 store has no packed domain to "
+                    "coarse-scan — drop two_stage_c or quantize the store")
         self.store = store
         self.k = k
         self.buckets = tuple(sorted(buckets))
         self.backend = backend
         self.block_i = block_i
+        self.two_stage_c = two_stage_c
+        self.n_shards = item_shards
+        self.max_pending = max_pending
         self.exclude = (jnp.asarray(exclude, jnp.int32) if exclude is not None
                         else jnp.full((store.n_users, 1), -1, jnp.int32))
-        self._shards = _shard_items(store.items, item_shards)
-        self._shard_offsets = np.cumsum(
-            [0] + [s.packed.shape[0] if isinstance(s, QTensor) else s.shape[0]
-                   for s in self._shards])[:-1]
-        self._queue: queue.Queue = queue.Queue(maxsize=max_queue)
+        self._devices = None
+        if shard_devices and item_shards > 1:
+            devs = jax.devices()
+            if len(devs) >= item_shards:
+                self._devices = devs[:item_shards]
+        self._build_shards()
+        self._pool = (ThreadPoolExecutor(max_workers=item_shards,
+                                         thread_name_prefix="shard")
+                      if item_shards > 1 else None)
+        self._queue: queue.Queue = queue.Queue(maxsize=max_pending)
         self._thread: threading.Thread | None = None
+        self.version = 0
         # latency lives on a bounded reservoir, not an unbounded list — a
         # long-lived engine's memory no longer grows with request count
         # (percentiles stay exact up to lat_capacity, sampled past it)
         reg = registry if registry is not None else get_registry()
         label = f"engine{next(self._SEQ)}"
+        self.label = label
+        self._cache = (ResultCache(cache_size, registry=reg, label=label)
+                       if cache_size else None)
         self._m_lat = reg.histogram("serve/latency_ms", engine=label,
                                     capacity=lat_capacity)
+        self._m_stage = {
+            s: reg.histogram("serve/stage_ms", engine=label, stage=s,
+                             capacity=lat_capacity)
+            for s in ("coarse", "rerank")} if two_stage_c else {}
         self._m_queue = reg.gauge("serve/queue_depth", engine=label)
         self._m_requests = reg.counter("serve/requests", engine=label)
         self._m_batches = reg.counter("serve/batches", engine=label)
+        self._m_shed = reg.counter("serve/backpressure", engine=label)
+        self._m_cand = reg.gauge("serve/candidate_frac", engine=label)
+        self._m_version = reg.gauge("serve/store_version", engine=label)
+        self._m_refresh_rows = reg.counter("serve/refresh_rows",
+                                           engine=label)
         self._n_batches = 0
         self._t_first = self._t_last = None
+
+    def _build_shards(self) -> None:
+        shards = _shard_items(self.store.items, self.n_shards)
+        if self._devices is not None:
+            shards = [jax.device_put(s, d)
+                      for s, d in zip(shards, self._devices)]
+        self._shards = shards
+        self._shard_offsets = np.cumsum(
+            [0] + [s.packed.shape[0] if isinstance(s, QTensor) else s.shape[0]
+                   for s in shards])[:-1]
 
     # -- scoring ------------------------------------------------------------
 
@@ -121,11 +208,38 @@ class ServingEngine:
                 return b
         return self.buckets[-1]
 
+    def _score_shard(self, q, excl, shard, off):
+        """One shard's local top-k (global exclusion ids shifted into
+        shard space; out-of-range never matches)."""
+        rows = (shard.packed if isinstance(shard, QTensor)
+                else shard).shape[0]
+        k = min(self.k, rows)
+        if self._devices is not None:
+            dev = shard.packed.devices() if isinstance(shard, QTensor) \
+                else shard.devices()
+            dev = next(iter(dev))
+            q = jax.device_put(q, dev)
+            excl = jax.device_put(excl, dev)
+        if self.two_stage_c is not None:
+            cb = None
+            if self._m_stage:
+                def cb(stage, dt):
+                    self._m_stage[stage].observe(dt * 1e3)
+            v, i = two_stage_topk(q, shard, k, c=self.two_stage_c,
+                                  exclude=excl - int(off),
+                                  backend=self.backend,
+                                  block_i=self.block_i, stage_cb=cb)
+        else:
+            v, i = topk_scores(q, shard, k, exclude=excl - int(off),
+                               backend=self.backend, block_i=self.block_i)
+        return np.asarray(v), np.asarray(i) + int(off)
+
     def score_batch(self, user_ids: np.ndarray):
         """Top-K for a batch of user ids, padded to the nearest bucket.
 
         Returns (values (n, k), indices (n, k)) numpy arrays for the n
-        REAL requests (pad rows stripped).
+        REAL requests (pad rows stripped). Always scores — the cache
+        sits in the drain loop, not here.
         """
         n = len(user_ids)
         b = self._bucket(n)
@@ -135,20 +249,19 @@ class ServingEngine:
                                                      np.int32)])
         q = self.store.user_vectors(jnp.asarray(padded))
         excl = self.exclude[jnp.asarray(padded)]
+        if self.two_stage_c is not None:
+            m = sum(min(self.two_stage_c * self.k,
+                        (s.packed if isinstance(s, QTensor) else s).shape[0])
+                    for s in self._shards)
+            self._m_cand.set(m / max(self.store.n_items, 1))
         if len(self._shards) == 1:
-            vals, idx = topk_scores(q, self._shards[0], self.k, exclude=excl,
-                                    backend=self.backend,
-                                    block_i=self.block_i)
-            return np.asarray(vals)[:n], np.asarray(idx)[:n]
-        parts_v, parts_i = [], []
-        for off, shard in zip(self._shard_offsets, self._shards):
-            # shard-local exclusion: shift ids into shard space; out-of-
-            # range entries never match (ids in [0, shard_rows))
-            v, i = topk_scores(q, shard, self.k, exclude=excl - int(off),
-                               backend=self.backend, block_i=self.block_i)
-            parts_v.append(np.asarray(v))
-            parts_i.append(np.asarray(i) + int(off))
-        vals, idx = merge_topk(parts_v, parts_i, self.k)
+            vals, idx = self._score_shard(q, excl, self._shards[0], 0)
+            return vals[:n], idx[:n]
+        futs = [self._pool.submit(self._score_shard, q, excl, shard, off)
+                for off, shard in zip(self._shard_offsets, self._shards)]
+        parts = [f.result() for f in futs]
+        vals, idx = merge_topk([p[0] for p in parts], [p[1] for p in parts],
+                               self.k)
         return vals[:n], idx[:n]
 
     def warmup(self) -> None:
@@ -159,64 +272,146 @@ class ServingEngine:
     # -- request loop -------------------------------------------------------
 
     def submit(self, user_id: int) -> Future:
-        """Enqueue one request; resolves to (values (k,), indices (k,))."""
+        """Enqueue one request; resolves to (values (k,), indices (k,)).
+
+        Raises ``BackpressureError`` (named, metered) when the bounded
+        queue is full — the engine sheds rather than buffering without
+        bound under overload.
+        """
         if self._thread is None:
             raise RuntimeError("engine not started (use `with engine:`)")
         fut: Future = Future()
         now = time.perf_counter()
         if self._t_first is None:
             self._t_first = now          # serving window opens at first submit
-        self._queue.put((int(user_id), now, fut))
-        self._m_queue.set(float(self._queue.qsize()))
+        try:
+            self._queue.put_nowait((_REQ, int(user_id), now, fut))
+        except queue.Full:
+            self._m_shed.inc()
+            raise BackpressureError(
+                f"serving queue full ({self.max_pending} pending); "
+                f"request shed — retry with backoff or raise max_pending"
+            ) from None
+        # queue depth is metered from the worker loop per drain, not per
+        # submit — qsize() takes the queue lock and submit is a hot path
+        return fut
+
+    def refresh(self, new_store_or_delta) -> Future:
+        """Schedule an incremental store refresh; resolves to delta stats.
+
+        Accepts a full re-rolled ``QuantizedEmbeddingStore`` (the delta
+        is computed against the live store) or a precomputed
+        ``StoreDelta``. Applied on the worker thread BETWEEN batches:
+        every request enqueued before this call is served from the old
+        store, every one after from the new — atomic swap, no drops.
+        Control messages use a blocking put: they are never shed.
+        """
+        if self._thread is None:
+            raise RuntimeError("engine not started (use `with engine:`)")
+        fut: Future = Future()
+        self._queue.put((_REFRESH, new_store_or_delta, fut))
         return fut
 
     def _serve_loop(self) -> None:
+        """Drain policy: cache hits resolve IMMEDIATELY and do not
+        consume scoring-batch slots — the batch fills with up to
+        ``max(buckets)`` MISSES. Under hot (zipfian) traffic one catalog
+        scan therefore amortizes over every hit drained alongside it,
+        which is where the tier-2 sustained-QPS win comes from; with the
+        cache off every request is a miss and this is the plain
+        batching loop."""
         max_b = self.buckets[-1]
         while True:
-            req = self._queue.get()
-            if req is None:
+            msg = self._queue.get()
+            if msg is None:
                 self._cancel_pending()
                 return
-            batch = [req]
-            stop = False
-            while len(batch) < max_b:
+            if msg[0] == _REFRESH:
+                self._apply_refresh(msg[1], msg[2])
+                continue
+            misses = []
+            control = None
+            self._hit_or_collect(msg, misses)
+            while len(misses) < max_b:
                 try:
                     nxt = self._queue.get_nowait()
                 except queue.Empty:
                     break
-                if nxt is None:
-                    stop = True
+                if nxt is None or nxt[0] == _REFRESH:
+                    control = nxt     # ordering: serve the batch first
                     break
-                batch.append(nxt)
-            self._drain_batch(batch)
-            if stop:
+                self._hit_or_collect(nxt, misses)
+            if misses:
+                self._drain_batch(misses)
+            self._m_queue.set(float(self._queue.qsize()))
+            if control is None:
+                continue
+            if control[0] == _REFRESH:
+                self._apply_refresh(control[1], control[2])
+            else:
                 self._cancel_pending()
                 return
+
+    def _hit_or_collect(self, msg, misses: list) -> None:
+        """Resolve a request from the cache now, or queue it for the
+        scoring batch."""
+        if self._cache is not None:
+            ent = self._cache.get(msg[1])
+            if ent is not None:
+                self._resolve(msg, (ent[1], ent[2]))
+                return
+        misses.append(msg)
+
+    def _resolve(self, msg, result) -> None:
+        _, _, t0, fut = msg
+        now = time.perf_counter()
+        self._t_last = now
+        self._m_lat.observe((now - t0) * 1e3)
+        self._m_requests.inc()
+        fut.set_result(result)
 
     def _cancel_pending(self) -> None:
         """Shutdown: anything still queued behind the sentinel must fail
         fast (cancelled), not leave its future blocking forever."""
         while True:
             try:
-                req = self._queue.get_nowait()
+                msg = self._queue.get_nowait()
             except queue.Empty:
                 return
-            if req is not None:
-                req[2].cancel()
+            if msg is not None:
+                msg[-1].cancel()
+
+    def _apply_refresh(self, payload, fut: Future) -> None:
+        """Worker-thread delta application + cache invalidation."""
+        try:
+            delta = (payload if isinstance(payload, StoreDelta)
+                     else store_delta(self.store, payload))
+            self.store = apply_delta(self.store, delta)
+            self._build_shards()
+            self.version += 1
+            if self._cache is not None:
+                if len(delta.item_ids):
+                    # item rows changed: every ranking is stale
+                    self._cache.clear()
+                elif len(delta.user_ids):
+                    self._cache.drop(delta.user_ids)
+            self._m_version.set(float(self.version))
+            self._m_refresh_rows.inc(delta.n_changed)
+            fut.set_result({**delta.stats(), "version": self.version})
+        except Exception as e:           # surface to the caller, keep serving
+            fut.set_exception(e)
 
     def _drain_batch(self, batch) -> None:
-        ids = np.array([r[0] for r in batch], np.int32)
+        """Score a batch of cache misses and resolve their futures."""
+        ids = np.array([m[1] for m in batch], np.int32)
         with span("serve/batch", n=len(batch)):
             vals, idx = self.score_batch(ids)
-        now = time.perf_counter()
         self._n_batches += 1
         self._m_batches.inc()
-        self._t_last = now
-        self._m_queue.set(float(self._queue.qsize()))
-        for j, (_, t0, fut) in enumerate(batch):
-            self._m_lat.observe((now - t0) * 1e3)
-            self._m_requests.inc()
-            fut.set_result((vals[j], idx[j]))
+        for pos, msg in enumerate(batch):
+            if self._cache is not None:
+                self._cache.put(msg[1], self.version, vals[pos], idx[pos])
+            self._resolve(msg, (vals[pos], idx[pos]))
 
     def __enter__(self) -> "ServingEngine":
         self._thread = threading.Thread(target=self._serve_loop, daemon=True)
@@ -227,6 +422,8 @@ class ServingEngine:
         self._queue.put(None)
         self._thread.join(timeout=60.0)
         self._thread = None
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
 
     def stats(self) -> EngineStats:
         h = self._m_lat.snapshot()
@@ -237,4 +434,6 @@ class ServingEngine:
             qps=n / window if n else 0.0,
             p50_ms=h["p50"] if n else 0.0,
             p99_ms=h["p99"] if n else 0.0,
-            n_batches=self._n_batches)
+            n_batches=self._n_batches,
+            cache_hit_rate=(self._cache.hit_rate if self._cache else 0.0),
+            store_version=self.version)

@@ -28,7 +28,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from .scorer import topk_scores
+from .scorer import topk_scores, two_stage_topk
 from .store import QuantizedEmbeddingStore, padded_pos_lists
 
 __all__ = ["streaming_recall_ndcg", "streaming_eval_dataset"]
@@ -37,12 +37,18 @@ __all__ = ["streaming_recall_ndcg", "streaming_eval_dataset"]
 def streaming_recall_ndcg(store: QuantizedEmbeddingStore,
                           train_pos: np.ndarray, test_pos: np.ndarray, *,
                           k: int = 20, user_chunk: int = 128,
-                          backend: str = "pallas", block_i: int = 1024):
+                          backend: str = "pallas", block_i: int = 1024,
+                          two_stage_c: int | None = None):
     """Recall@k / NDCG@k over the full item set, streamed.
 
     train_pos/test_pos : (n, 2) int [user, item] pairs. Training
     positives are excluded from ranking (paper protocol); users with no
     test positive are excluded from the mean. Returns (recall, ndcg).
+
+    two_stage_c routes retrieval through the two-stage path (coarse
+    packed-domain scan keeping C·k candidates, fp32 re-rank) so the
+    recall-vs-C tradeoff is measured with the exact eval protocol; at
+    C >= n_items/k it matches the single-stage result.
     """
     n_users = store.n_users
     excl = padded_pos_lists(train_pos, n_users)            # (U, P)
@@ -56,8 +62,13 @@ def streaming_recall_ndcg(store: QuantizedEmbeddingStore,
     for u0 in range(0, n_users, user_chunk):
         u1 = min(u0 + user_chunk, n_users)
         q = store.user_vectors(jnp.arange(u0, u1))
-        _, idx = topk_scores(q, store.items, k, exclude=excl_j[u0:u1],
-                             backend=backend, block_i=block_i)
+        if two_stage_c is not None:
+            _, idx = two_stage_topk(q, store.items, k, c=two_stage_c,
+                                    exclude=excl_j[u0:u1],
+                                    backend=backend, block_i=block_i)
+        else:
+            _, idx = topk_scores(q, store.items, k, exclude=excl_j[u0:u1],
+                                 backend=backend, block_i=block_i)
         idx = np.asarray(idx)                              # (B, k)
         # hit iff the retrieved id is one of the user's test positives
         hits = (idx[:, :, None] == test[u0:u1, None, :]).any(-1)  # (B, k)

@@ -1,0 +1,138 @@
+"""Incremental store refresh: delta rollout of changed rows.
+
+A training job periodically re-rolls the serving tables
+(``build_kgnn_store`` from the latest checkpoint); between consecutive
+rollouts most rows are identical — only the entities touched by recent
+gradient steps move. Shipping the full table per refresh would make
+refresh cost O(store); ``store_delta`` diffs two rollouts ROW-wise (on
+the packed bytes + scale/zero for quantized tables — byte equality is
+exactly "serves identically") and packages only the changed rows, and
+``apply_delta`` splices them into the live store functionally. The
+result is BIT-identical to the new rollout (pinned by tests), so delta
+refresh is purely a transfer/cost optimization, never an approximation.
+
+The engine applies a delta on its worker thread between batches
+(serving/engine.py:refresh): requests enqueued before the refresh are
+scored against the old store, requests after against the new — an
+atomic version swap with no dropped and no torn-store-served requests.
+The store version counter increments per applied delta and stamps both
+cache entries and responses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import QTensor
+
+from .store import QuantizedEmbeddingStore
+
+__all__ = ["StoreDelta", "store_delta", "apply_delta"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreDelta:
+    """Changed rows between two same-shape, same-bits store rollouts.
+
+    ``user_rows``/``item_rows`` hold, for each changed row id, the new
+    payload: ``(packed, scale, zero)`` numpy arrays for quantized
+    tables, ``(rows,)`` for fp32 tables.
+    """
+
+    user_ids: np.ndarray        # (nu,) int32 changed user row ids
+    item_ids: np.ndarray        # (ni,) int32 changed item row ids
+    user_rows: tuple
+    item_rows: tuple
+    n_users: int                # identity guard: target store shape
+    n_items: int
+    bits: int | None
+
+    @property
+    def n_changed(self) -> int:
+        return len(self.user_ids) + len(self.item_ids)
+
+    def nbytes(self) -> int:
+        """Wire cost of the delta (what a full push would multiply)."""
+        return sum(int(a.nbytes) for part in (self.user_rows, self.item_rows)
+                   for a in part)
+
+    def stats(self) -> dict:
+        return {
+            "users_changed": int(len(self.user_ids)),
+            "items_changed": int(len(self.item_ids)),
+            "rows_changed": self.n_changed,
+            "rows_total": self.n_users + self.n_items,
+            "delta_bytes": self.nbytes(),
+            "changed_frac": self.n_changed / max(self.n_users
+                                                 + self.n_items, 1),
+        }
+
+
+def _table_leaves(t):
+    """The per-row leaves whose byte equality defines "unchanged"."""
+    if isinstance(t, QTensor):
+        return (np.asarray(t.packed), np.asarray(t.scale),
+                np.asarray(t.zero))
+    return (np.asarray(t),)
+
+
+def _diff_rows(old_t, new_t):
+    leaves_o, leaves_n = _table_leaves(old_t), _table_leaves(new_t)
+    changed = np.zeros(leaves_o[0].shape[0], bool)
+    for lo, ln in zip(leaves_o, leaves_n):
+        changed |= (lo != ln).reshape(lo.shape[0], -1).any(axis=1)
+    ids = np.nonzero(changed)[0].astype(np.int32)
+    rows = tuple(ln[ids] for ln in leaves_n)
+    return ids, rows
+
+
+def store_delta(old: QuantizedEmbeddingStore,
+                new: QuantizedEmbeddingStore) -> StoreDelta:
+    """Row-wise diff of two rollouts; raises on incompatible stores."""
+    if old.bits != new.bits:
+        raise ValueError(f"delta refresh needs matching precision: "
+                         f"old bits={old.bits} new bits={new.bits} "
+                         f"(a precision change is a full re-deploy)")
+    if old.n_users != new.n_users or old.n_items != new.n_items or \
+            old.dim != new.dim:
+        raise ValueError(
+            f"delta refresh needs matching table shapes: old "
+            f"(U={old.n_users}, I={old.n_items}, d={old.dim}) vs new "
+            f"(U={new.n_users}, I={new.n_items}, d={new.dim})")
+    uids, urows = _diff_rows(old.users, new.users)
+    iids, irows = _diff_rows(old.items, new.items)
+    return StoreDelta(user_ids=uids, item_ids=iids, user_rows=urows,
+                      item_rows=irows, n_users=old.n_users,
+                      n_items=old.n_items, bits=old.bits)
+
+
+def _patch_table(t, ids, rows):
+    if len(ids) == 0:
+        return t
+    idx = jnp.asarray(ids)
+    if isinstance(t, QTensor):
+        packed, scale, zero = rows
+        return QTensor(packed=t.packed.at[idx].set(jnp.asarray(packed)),
+                       scale=t.scale.at[idx].set(jnp.asarray(scale)),
+                       zero=t.zero.at[idx].set(jnp.asarray(zero)),
+                       bits=t.bits, dim=t.dim, dtype=t.dtype)
+    return t.at[idx].set(jnp.asarray(rows[0]))
+
+
+def apply_delta(store: QuantizedEmbeddingStore,
+                delta: StoreDelta) -> QuantizedEmbeddingStore:
+    """Splice changed rows in; bit-identical to the rollout that made
+    the delta (``store_delta(old, new); apply_delta(old, d) == new``)."""
+    if store.n_users != delta.n_users or store.n_items != delta.n_items \
+            or store.bits != delta.bits:
+        raise ValueError(
+            f"delta targets (U={delta.n_users}, I={delta.n_items}, "
+            f"bits={delta.bits}), store is (U={store.n_users}, "
+            f"I={store.n_items}, bits={store.bits})")
+    return QuantizedEmbeddingStore(
+        users=_patch_table(store.users, delta.user_ids, delta.user_rows),
+        items=_patch_table(store.items, delta.item_ids, delta.item_rows),
+        bits=store.bits, dim=store.dim)

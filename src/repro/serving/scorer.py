@@ -19,8 +19,19 @@ argument, tests/test_serving.py for the boundary-tie property test.
 
 ``merge_topk`` is the HOST-side merge for results that were produced by
 *separate* scorer calls (item shards too big for one call, or the
-engine fanning a store across processes): same (value desc, index asc)
+engine fanning a store across devices): same (value desc, index asc)
 order, so composing call-level merges stays exact.
+
+Two-stage retrieval (``two_stage_topk``, DESIGN.md §14): a COARSE scan
+over all items in the packed integer-code domain (symmetric-INT8 query,
+per-row affine correction — kernels/topk_score.py:fused_coarse_topm or
+the bit-exact jnp mirror here) keeps the top ``c·k`` candidate ids, and
+only those rows are dequantized to fp32 for the exact re-rank. At
+``c·k >= n_items`` the candidate set is every item, so the result is
+exactly the single-stage ranking (the C→∞ anchor the tests pin); at
+small ``c`` the coarse error bound (qs/2 per query element) keeps
+recall within a fraction of single-stage measured by the bench's
+recall-vs-C curve.
 """
 
 from __future__ import annotations
@@ -35,26 +46,23 @@ from repro.core.quant import QTensor, unpack_bits
 from repro.kernels import topk_score as _tk
 from repro.kernels.ops import INTERPRET, TRACE_COUNTS
 
-__all__ = ["topk_scores", "merge_topk"]
+__all__ = ["topk_scores", "merge_topk", "two_stage_topk", "quantize_query",
+           "coarse_topm"]
 
 _NEG_INF = float("-inf")
 
 
-def _chunk_merge(q, excl, k, n_items, block_i, chunk_rows):
-    """Shared jnp chunk loop: ``chunk_rows(c0, c1) -> (rows, dim) fp32``.
+def _chunk_merge(b, excl, k, n_items, block_i, chunk_scores):
+    """Shared jnp chunk loop: ``chunk_scores(c0, c1) -> (B, c1-c0) fp32``.
 
     Mirrors the kernel exactly, including -inf/ghost-id padding of the
     tail chunk, so interpret-mode parity is bit-for-bit.
     """
-    b = q.shape[0]
     grid = -(-n_items // block_i)
     vals = idx = None
     for c in range(grid):
         c0, c1 = c * block_i, min((c + 1) * block_i, n_items)
-        xhat = chunk_rows(c0, c1)
-        s = jax.lax.dot_general(
-            q, xhat, dimension_numbers=(((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)        # (B, c1-c0)
+        s = chunk_scores(c0, c1)                       # (B, c1-c0)
         if c1 - c0 < block_i:                          # tail: ghost rows
             s = jnp.pad(s, ((0, 0), (0, block_i - (c1 - c0))),
                         constant_values=-jnp.inf)
@@ -73,6 +81,12 @@ def _chunk_merge(q, excl, k, n_items, block_i, chunk_rows):
     return vals, idx
 
 
+def _dot(q, xhat):
+    return jax.lax.dot_general(
+        q, xhat, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "dim", "k", "n_items",
                                              "block_i", "interpret"))
 def _fused(q, packed, scale, zero, excl, *, bits, dim, k, n_items, block_i,
@@ -89,18 +103,167 @@ def _jnp_packed(q, packed, scale, zero, excl, *, bits, dim, k, n_items,
                 block_i):
     TRACE_COUNTS["topk_jnp"] += 1
 
-    def chunk_rows(c0, c1):
+    def chunk_scores(c0, c1):
         codes = unpack_bits(packed[c0:c1], bits, dim).astype(jnp.float32)
-        return codes * scale[c0:c1] + zero[c0:c1]
+        return _dot(q, codes * scale[c0:c1] + zero[c0:c1])
 
-    return _chunk_merge(q, excl, k, n_items, block_i, chunk_rows)
+    return _chunk_merge(q.shape[0], excl, k, n_items, block_i, chunk_scores)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "n_items", "block_i"))
 def _jnp_dense(q, items, excl, *, k, n_items, block_i):
     TRACE_COUNTS["topk_jnp"] += 1
-    return _chunk_merge(q, excl, k, n_items, block_i,
-                        lambda c0, c1: items[c0:c1].astype(jnp.float32))
+    return _chunk_merge(q.shape[0], excl, k, n_items, block_i,
+                        lambda c0, c1: _dot(q, items[c0:c1]
+                                            .astype(jnp.float32)))
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "dim", "m", "n_items",
+                                             "block_i", "interpret"))
+def _coarse_fused(q8, qmeta, packed, scale, zero, excl, *, bits, dim, m,
+                  n_items, block_i, interpret):
+    TRACE_COUNTS["coarse_fused"] += 1
+    return _tk.fused_coarse_topm(
+        q8, qmeta, packed, scale, zero, excl, bits=bits, dim=dim, m=m,
+        n_items=n_items, block_i=block_i, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "dim", "m", "n_items",
+                                             "block_i"))
+def _coarse_jnp(q8, qmeta, packed, scale, zero, excl, *, bits, dim, m,
+                n_items, block_i):
+    TRACE_COUNTS["coarse_jnp"] += 1
+
+    def chunk_scores(c0, c1):
+        codes = unpack_bits(packed[c0:c1], bits, dim).astype(jnp.float32)
+        dot = _dot(q8, codes)        # integer-valued fp32: exact
+        scale_t = jnp.transpose(scale[c0:c1])          # (1, c1-c0)
+        zero_t = jnp.transpose(zero[c0:c1])
+        # identical op sequence to _coarse_kernel -> zero-ulp parity
+        return dot * (qmeta[:, 0:1] * scale_t) + qmeta[:, 1:2] * zero_t
+
+    return _chunk_merge(q8.shape[0], excl, m, n_items, block_i, chunk_scores)
+
+
+@jax.jit
+def quantize_query(q: jax.Array):
+    """Symmetric INT8 query codes for the coarse scan.
+
+    Returns ``(q8, qmeta)``: ``q8`` the rounded codes as integer-valued
+    fp32 in [-127, 127], ``qmeta`` (B, 2) holding per-row ``[qs, Σ_j
+    q_j]`` with ``qs = max|q|/127``. The coarse score's only deviation
+    from the true fp32 score is the rounding of ``q`` — |q_j - qs·q8_j|
+    <= qs/2 per element (DESIGN.md §14 turns that into the candidate-
+    miss bound).
+    """
+    q = jnp.asarray(q, jnp.float32)
+    qs = jnp.maximum(jnp.max(jnp.abs(q), axis=-1, keepdims=True),
+                     1e-12) / 127.0
+    q8 = jnp.clip(jnp.round(q / qs), -127.0, 127.0)
+    qmeta = jnp.concatenate([qs, jnp.sum(q, axis=-1, keepdims=True)],
+                            axis=-1)
+    return q8, qmeta
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "dim", "k"))
+def _rerank(q, packed, scale, zero, cand, excl, *, bits, dim, k):
+    """fp32 dequant·score·top-k over the per-user candidate rows only.
+
+    ``cand`` (B, m) MUST be ascending per row: ``lax.top_k`` breaks ties
+    by lowest position, so ascending candidates make the local tie order
+    the global lowest-index order — the single-stage contract.
+    """
+    codes = unpack_bits(packed[cand], bits, dim).astype(jnp.float32)
+    xhat = codes * scale[cand] + zero[cand]            # (B, m, dim)
+    s = jnp.einsum("bd,bmd->bm", q, xhat,
+                   preferred_element_type=jnp.float32)
+    # re-apply exclusions: the coarse stage already -inf'd them, but when
+    # m exceeds the non-excluded item count they still occupy slots
+    hit = jnp.any(excl[:, :, None] == cand[:, None, :], axis=1)
+    s = jnp.where(hit, _NEG_INF, s)
+    v, p = jax.lax.top_k(s, k)
+    return v, jnp.take_along_axis(cand, p, axis=1)
+
+
+def coarse_topm(q: jax.Array, items: QTensor, m: int, *, exclude=None,
+                backend: str = "pallas", block_i: int = 1024,
+                interpret: bool | None = None):
+    """Top-``m`` candidate ids by coarse packed-domain score.
+
+    The jnp and pallas backends agree BIT-exactly (integer-valued fp32
+    arithmetic end to end — see kernels/topk_score.py). Returns
+    (coarse values (B, m) fp32, indices (B, m) int32).
+    """
+    if not isinstance(items, QTensor):
+        raise ValueError("coarse_topm needs a packed (QTensor) item table; "
+                         "fp32 stores have no packed domain to scan")
+    q8, qmeta = quantize_query(q)
+    b = q8.shape[0]
+    if exclude is None:
+        exclude = jnp.full((b, 1), -1, jnp.int32)
+    exclude = jnp.asarray(exclude, jnp.int32)
+    n_items = items.packed.shape[0]
+    assert m <= n_items, (m, n_items)
+    block_i = max(min(block_i, n_items), m)
+    whole = items.packed.shape[-1] * (8 // items.bits) == items.dim
+    if backend == "pallas" and whole:
+        return _coarse_fused(q8, qmeta, items.packed, items.scale,
+                             items.zero, exclude, bits=items.bits,
+                             dim=items.dim, m=m, n_items=n_items,
+                             block_i=block_i,
+                             interpret=INTERPRET if interpret is None
+                             else interpret)
+    return _coarse_jnp(q8, qmeta, items.packed, items.scale, items.zero,
+                       exclude, bits=items.bits, dim=items.dim, m=m,
+                       n_items=n_items, block_i=block_i)
+
+
+def two_stage_topk(q: jax.Array, items: QTensor, k: int, *, c: int = 4,
+                   exclude=None, backend: str = "pallas",
+                   block_i: int = 1024, stage_cb=None):
+    """Two-stage retrieval: coarse packed scan -> fp32 re-rank of c·k.
+
+    q       : (B, d) fp32 query rows
+    items   : packed ``QTensor`` store table (fp32 stores must use
+              single-stage ``topk_scores`` — there is no packed domain)
+    c       : candidate multiplier; ``m = min(c*k, n_items)`` rows are
+              dequantized, every other row is touched ONLY as packed
+              codes. ``c*k >= n_items`` reproduces single-stage results
+              exactly (all items become candidates).
+    stage_cb: optional ``f(stage_name, seconds)`` — when set, each stage
+              is synchronized and timed (the engine's per-stage latency
+              reservoirs); leave None for async dispatch.
+    returns (values (B, k) fp32, indices (B, k) int32).
+    """
+    import time as _time
+
+    if not isinstance(items, QTensor):
+        raise ValueError("two_stage_topk needs a packed (QTensor) item "
+                         "table; use topk_scores for fp32 stores")
+    q = jnp.asarray(q, jnp.float32)
+    b = q.shape[0]
+    if exclude is None:
+        exclude = jnp.full((b, 1), -1, jnp.int32)
+    exclude = jnp.asarray(exclude, jnp.int32)
+    n_items = items.packed.shape[0]
+    assert k <= n_items, (k, n_items)
+    m = max(k, min(c * k, n_items))
+
+    t0 = _time.perf_counter() if stage_cb else None
+    _, cand = coarse_topm(q, items, m, exclude=exclude, backend=backend,
+                          block_i=block_i)
+    # ascending candidate ids per row: local top_k tie order == global
+    cand = jnp.sort(cand, axis=1)
+    if stage_cb:
+        cand.block_until_ready()
+        stage_cb("coarse", _time.perf_counter() - t0)
+        t0 = _time.perf_counter()
+    out = _rerank(q, items.packed, items.scale, items.zero, cand, exclude,
+                  bits=items.bits, dim=items.dim, k=k)
+    if stage_cb:
+        jax.block_until_ready(out)
+        stage_cb("rerank", _time.perf_counter() - t0)
+    return out
 
 
 def topk_scores(q: jax.Array, items, k: int, *, exclude=None,
@@ -160,9 +323,20 @@ def merge_topk(vals_parts, idx_parts, k: int):
     """Host-side merge of per-shard top-K results (numpy).
 
     Each part is (B, k_i) from a scorer call over a disjoint item shard
-    (indices already global). Order is (value desc, index asc) — the
-    same tie rule as ``jax.lax.top_k`` — so shard-merge composes exactly
-    with the in-call chunk merge.
+    (indices already global).
+
+    ORDERING CONTRACT (deterministic, shard-count invariant): the merged
+    result is sorted by ``(score descending, global index ascending)`` —
+    the same tie rule as ``jax.lax.top_k`` and the in-call chunk merge.
+    ``np.lexsort((idx, -vals))`` sorts primarily on ``-vals`` (score
+    desc) and breaks EXACT score ties on the global index (asc),
+    regardless of which shard part a candidate arrived in or the order
+    the parts were concatenated. Because per-item scores are computed
+    independently of shard geometry, merging S shard results is
+    bit-identical to the single-shard ranking — ties included — for any
+    S; composing merges (shards of shards) preserves the same order.
+    Pinned by ``tests/test_serving.py`` at 1/2/4 shards on exact
+    (integer-valued) inputs with massive tie mass.
     """
     vals = np.concatenate([np.asarray(v) for v in vals_parts], axis=1)
     idx = np.concatenate([np.asarray(i) for i in idx_parts], axis=1)
