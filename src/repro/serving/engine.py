@@ -189,6 +189,7 @@ class ServingEngine:
                                            engine=label)
         self._n_batches = 0
         self._t_first = self._t_last = None
+        self._t_lock = threading.Lock()
 
     def _build_shards(self) -> None:
         shards = _shard_items(self.store.items, self.n_shards)
@@ -210,7 +211,12 @@ class ServingEngine:
 
     def _score_shard(self, q, excl, shard, off):
         """One shard's local top-k (global exclusion ids shifted into
-        shard space; out-of-range never matches)."""
+        shard space; out-of-range never matches).
+
+        Stage timings are RETURNED, not observed here: this runs on
+        shard pool threads, and Histogram.observe is single-writer —
+        the caller folds them into the reservoirs on its own thread.
+        """
         rows = (shard.packed if isinstance(shard, QTensor)
                 else shard).shape[0]
         k = min(self.k, rows)
@@ -220,11 +226,10 @@ class ServingEngine:
             dev = next(iter(dev))
             q = jax.device_put(q, dev)
             excl = jax.device_put(excl, dev)
+        stage_t: list = []
         if self.two_stage_c is not None:
-            cb = None
-            if self._m_stage:
-                def cb(stage, dt):
-                    self._m_stage[stage].observe(dt * 1e3)
+            cb = ((lambda stage, dt: stage_t.append((stage, dt)))
+                  if self._m_stage else None)
             v, i = two_stage_topk(q, shard, k, c=self.two_stage_c,
                                   exclude=excl - int(off),
                                   backend=self.backend,
@@ -232,16 +237,29 @@ class ServingEngine:
         else:
             v, i = topk_scores(q, shard, k, exclude=excl - int(off),
                                backend=self.backend, block_i=self.block_i)
-        return np.asarray(v), np.asarray(i) + int(off)
+        return np.asarray(v), np.asarray(i) + int(off), stage_t
+
+    def _observe_stages(self, stage_t) -> None:
+        for stage, dt in stage_t:
+            self._m_stage[stage].observe(dt * 1e3)
 
     def score_batch(self, user_ids: np.ndarray):
         """Top-K for a batch of user ids, padded to the nearest bucket.
 
         Returns (values (n, k), indices (n, k)) numpy arrays for the n
         REAL requests (pad rows stripped). Always scores — the cache
-        sits in the drain loop, not here.
+        sits in the drain loop, not here. Batches larger than
+        ``max(buckets)`` are chunked at the largest bucket, so the
+        jitted scorer only ever sees bucketed shapes and direct callers
+        with varying oversized batches never retrace.
         """
         n = len(user_ids)
+        max_b = self.buckets[-1]
+        if n > max_b:
+            parts = [self.score_batch(user_ids[a:a + max_b])
+                     for a in range(0, n, max_b)]
+            return (np.concatenate([p[0] for p in parts]),
+                    np.concatenate([p[1] for p in parts]))
         b = self._bucket(n)
         padded = np.asarray(user_ids, np.int32)
         if b > n:
@@ -255,11 +273,14 @@ class ServingEngine:
                     for s in self._shards)
             self._m_cand.set(m / max(self.store.n_items, 1))
         if len(self._shards) == 1:
-            vals, idx = self._score_shard(q, excl, self._shards[0], 0)
+            vals, idx, stage_t = self._score_shard(q, excl, self._shards[0], 0)
+            self._observe_stages(stage_t)
             return vals[:n], idx[:n]
         futs = [self._pool.submit(self._score_shard, q, excl, shard, off)
                 for off, shard in zip(self._shard_offsets, self._shards)]
         parts = [f.result() for f in futs]
+        for p in parts:
+            self._observe_stages(p[2])
         vals, idx = merge_topk([p[0] for p in parts], [p[1] for p in parts],
                                self.k)
         return vals[:n], idx[:n]
@@ -282,8 +303,6 @@ class ServingEngine:
             raise RuntimeError("engine not started (use `with engine:`)")
         fut: Future = Future()
         now = time.perf_counter()
-        if self._t_first is None:
-            self._t_first = now          # serving window opens at first submit
         try:
             self._queue.put_nowait((_REQ, int(user_id), now, fut))
         except queue.Full:
@@ -292,6 +311,12 @@ class ServingEngine:
                 f"serving queue full ({self.max_pending} pending); "
                 f"request shed — retry with backoff or raise max_pending"
             ) from None
+        # window opens at the first ACCEPTED submit (a shed request must
+        # not start the clock); locked — submit runs on client threads
+        if self._t_first is None:
+            with self._t_lock:
+                if self._t_first is None:
+                    self._t_first = now
         # queue depth is metered from the worker loop per drain, not per
         # submit — qsize() takes the queue lock and submit is a hot path
         return fut
@@ -330,27 +355,30 @@ class ServingEngine:
                 self._apply_refresh(msg[1], msg[2])
                 continue
             misses = []
-            control = None
+            refresh = None
+            stop = False      # sentinel tracked apart from refresh control:
+            # a None captured here must not look like "no control message"
             self._hit_or_collect(msg, misses)
             while len(misses) < max_b:
                 try:
                     nxt = self._queue.get_nowait()
                 except queue.Empty:
                     break
-                if nxt is None or nxt[0] == _REFRESH:
-                    control = nxt     # ordering: serve the batch first
+                if nxt is None:
+                    stop = True       # ordering: serve the batch first
+                    break
+                if nxt[0] == _REFRESH:
+                    refresh = nxt
                     break
                 self._hit_or_collect(nxt, misses)
             if misses:
                 self._drain_batch(misses)
             self._m_queue.set(float(self._queue.qsize()))
-            if control is None:
-                continue
-            if control[0] == _REFRESH:
-                self._apply_refresh(control[1], control[2])
-            else:
+            if stop:
                 self._cancel_pending()
                 return
+            if refresh is not None:
+                self._apply_refresh(refresh[1], refresh[2])
 
     def _hit_or_collect(self, msg, misses: list) -> None:
         """Resolve a request from the cache now, or queue it for the

@@ -2,6 +2,8 @@
 (incl. chunk-boundary ties), fused-vs-fallback bit parity, exclusion
 semantics, streaming-vs-dense eval, and the micro-batching engine."""
 
+import time
+
 import numpy as np
 import pytest
 
@@ -293,6 +295,24 @@ def test_engine_bucketed_padding_never_retraces():
     assert st_stats.qps > 0
 
 
+def test_engine_score_batch_oversized_chunks_no_retrace():
+    """Direct score_batch callers with n > max(buckets) get chunked at
+    the largest bucket — correct results, no per-size retracing."""
+    st = QuantizedEmbeddingStore.from_arrays(USERS, ITEMS, bits=8)
+    eng = ServingEngine(st, k=K, backend="pallas", buckets=(1, 4, 8),
+                        block_i=64)
+    eng.warmup()
+    traced = TRACE_COUNTS["topk_fused"]
+    dv, di = _dense_topk(st, K)
+    dv, di = np.asarray(dv), np.asarray(di)
+    for n in (9, 13, 27):             # three distinct oversized sizes
+        uids = RNG.integers(0, U, n).astype(np.int32)
+        vals, idx = eng.score_batch(uids)
+        assert vals.shape == (n, K) and idx.shape == (n, K)
+        _assert_matches_dense(vals, idx, dv[uids], di[uids])
+    assert TRACE_COUNTS["topk_fused"] == traced
+
+
 def test_engine_responses_exact():
     st = QuantizedEmbeddingStore.from_arrays(USERS, ITEMS, bits=8)
     excl = padded_pos_lists(
@@ -316,10 +336,16 @@ def test_engine_exit_resolves_or_cancels_every_future():
     is either served or cancelled (regression: requests queued behind
     the stop sentinel used to hang their callers)."""
     st = QuantizedEmbeddingStore.from_arrays(USERS, ITEMS, bits=8)
+    t0 = time.perf_counter()
     with ServingEngine(st, k=K, backend="pallas", buckets=(4,),
                        block_i=64) as eng:
         futs = [eng.submit(int(u)) for u in RNG.integers(0, U, 25)]
         # exit immediately: the sentinel races the worker mid-drain
+    # the worker must see the sentinel and exit promptly — a pass that
+    # leans on __exit__'s 60s join timeout (leaked daemon thread) is a
+    # regression, not a pass (sentinel once swallowed when dequeued
+    # mid-batch-collection)
+    assert time.perf_counter() - t0 < 30
     assert all(f.done() for f in futs)
     served = sum(1 for f in futs if not f.cancelled())
     for f in futs:
